@@ -1,0 +1,68 @@
+"""Kernel-level benchmarks: the Pallas wcsd_query kernel vs the XLA
+fallback. On this CPU container wall-clock is not TPU-meaningful, so the
+headline metric is the compiled *bytes-accessed* ratio (the kernel's tiled
+VMEM reduction never materializes the [B, L, L] join that XLA's fallback
+writes to HBM), plus CPU wall time of the jnp path for scale."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.generators import random_queries, scale_free
+from repro.core.query import DeviceQueryEngine, query_batch_jnp
+from repro.core.wc_index import build_wc_index
+
+
+def bench_query_kernel(B=1024, L=256):
+    rows = []
+    rng = np.random.default_rng(0)
+    hub = np.sort(rng.integers(0, 500, size=(600, L)).astype(np.int32), 1)
+    dist = rng.integers(0, 64, size=(600, L)).astype(np.int32)
+    wlev = rng.integers(0, 6, size=(600, L)).astype(np.int32)
+    count = rng.integers(L // 2, L, size=600).astype(np.int32)
+    s = rng.integers(0, 600, B).astype(np.int32)
+    t = rng.integers(0, 600, B).astype(np.int32)
+    w = rng.integers(0, 6, B).astype(np.int32)
+    args = tuple(jnp.asarray(a) for a in (hub, dist, wlev, count, s, t, w))
+
+    compiled = jax.jit(query_batch_jnp).lower(*args).compile()
+    ca = compiled.cost_analysis() or {}
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    # the kernel's HBM traffic: gathered rows in + [B] out (everything else
+    # stays in VMEM tiles)
+    kernel_bytes = 4.0 * (4 * B * L + B)  # hs/ds/ht/dt + out, int32
+    rows.append(dict(table="kernel_wcsd_query", dataset=f"B{B}xL{L}",
+                     algo="xla_bytes_accessed", value=xla_bytes))
+    rows.append(dict(table="kernel_wcsd_query", dataset=f"B{B}xL{L}",
+                     algo="kernel_hbm_bytes", value=kernel_bytes))
+    rows.append(dict(table="kernel_wcsd_query", dataset=f"B{B}xL{L}",
+                     algo="traffic_ratio", value=xla_bytes / kernel_bytes))
+
+    # CPU wall time of the jnp path (scale reference only)
+    f = jax.jit(query_batch_jnp)
+    np.asarray(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(3):
+        np.asarray(f(*args))
+    rows.append(dict(table="kernel_wcsd_query", dataset=f"B{B}xL{L}",
+                     algo="jnp_us_per_query",
+                     value=(time.perf_counter() - t0) / 3 / B * 1e6))
+    return rows
+
+
+def bench_cin_traffic(B=4096, H=200, M=39, D=10, K=200):
+    """CIN fused kernel vs naive einsum: intermediate footprint."""
+    rows = []
+    naive_bytes = 4.0 * B * H * M * D          # the [B,H,M,D] outer product
+    fused_bytes = 4.0 * (B * H * D + B * M * D + K * H * M + B * K * D)
+    rows.append(dict(table="kernel_cin", dataset=f"B{B}", algo="naive_bytes",
+                     value=naive_bytes))
+    rows.append(dict(table="kernel_cin", dataset=f"B{B}", algo="fused_bytes",
+                     value=fused_bytes))
+    rows.append(dict(table="kernel_cin", dataset=f"B{B}", algo="ratio",
+                     value=naive_bytes / fused_bytes))
+    return rows

@@ -1,0 +1,196 @@
+"""Paper-table benchmarks for WCSD (Figs. 5-12, laptop-scale graphs).
+
+One function per figure family; each prints CSV rows
+``table,dataset,algo,metric,value`` and returns them as dicts. Graphs are
+synthetic analogues of the paper's datasets (road grids / scale-free BA),
+sized for CPU CI; the trends under test are the paper's claims, not the
+absolute numbers.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines import (LCRAdapt, NaiveIndex, WBFS, cbfs_query,
+                                  dijkstra_query)
+from repro.core.generators import random_queries, road_grid, scale_free
+from repro.core.query import DeviceQueryEngine
+from repro.core.serve import WCSDServer
+from repro.core.wc_index import build_wc_index
+from repro.core.wc_index_batched import build_wc_index_batched, clean_index
+
+ROAD = {
+    "NY(s)": dict(rows=28, cols=28, levels=5),
+    "FLA(s)": dict(rows=45, cols=45, levels=5),
+    "CAL(s)": dict(rows=60, cols=60, levels=5),
+}
+SOCIAL = {
+    "MV(s)": dict(n=1500, m=4, levels=5),
+    "EU(s)": dict(n=3000, m=5, levels=3),
+    "SO(s)": dict(n=5000, m=4, levels=9),
+}
+
+
+def _road(name):
+    c = ROAD[name]
+    return road_grid(c["rows"], c["cols"], num_levels=c["levels"], seed=42)
+
+
+def _social(name):
+    c = SOCIAL[name]
+    return scale_free(c["n"], c["m"], num_levels=c["levels"], seed=42)
+
+
+def _time(fn, *a, repeat=1, **k):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*a, **k)
+    return (time.perf_counter() - t0) / repeat, out
+
+
+def bench_indexing(datasets=None, order="auto"):
+    """Fig. 5/6 analogue: indexing time + size for Naive / WC-INDEX /
+    WC-INDEX+ (= query-efficient + hybrid order) / batched builder."""
+    rows = []
+    datasets = datasets or {**{k: ("road", k) for k in ROAD},
+                            **{k: ("social", k) for k in SOCIAL}}
+    for name, (fam, key) in datasets.items():
+        g = _road(key) if fam == "road" else _social(key)
+        o_basic = "treedec" if fam == "road" else "degree"
+        t_naive, naive = _time(NaiveIndex.build, g)
+        t_wc, wc = _time(build_wc_index, g, ordering=o_basic, prune=False)
+        t_wcp, wcp = _time(build_wc_index, g, ordering="hybrid")
+        t_bat, (bat, stats) = _time(build_wc_index_batched, g,
+                                    ordering="hybrid", batch_size=32)
+        rows += [
+            dict(table="fig5_idx_time", dataset=name, algo="naive",
+                 value=t_naive),
+            dict(table="fig5_idx_time", dataset=name, algo="wc-index",
+                 value=t_wc),
+            dict(table="fig5_idx_time", dataset=name, algo="wc-index+",
+                 value=t_wcp),
+            dict(table="fig5_idx_time", dataset=name, algo="wc-batched",
+                 value=t_bat),
+            dict(table="fig6_idx_size", dataset=name, algo="naive",
+                 value=naive.memory_bytes()),
+            dict(table="fig6_idx_size", dataset=name, algo="wc-index",
+                 value=wc.memory_bytes()),
+            dict(table="fig6_idx_size", dataset=name, algo="wc-index+",
+                 value=wcp.memory_bytes()),
+            dict(table="fig6_idx_size", dataset=name, algo="wc-batched",
+                 value=bat.memory_bytes()),
+            dict(table="fig6_idx_size", dataset=name, algo="graph",
+                 value=g.memory_bytes()),
+        ]
+    return rows
+
+
+def bench_query(datasets=None, n_queries=400):
+    """Fig. 7/12 analogue: per-query latency for online baselines vs index."""
+    rows = []
+    datasets = datasets or {"CAL(s)": ("road", "CAL(s)"),
+                            "EU(s)": ("social", "EU(s)")}
+    for name, (fam, key) in datasets.items():
+        g = _road(key) if fam == "road" else _social(key)
+        s, t, wl = random_queries(g, n_queries, seed=3)
+        idx = build_wc_index(g, ordering="hybrid")
+        naive = NaiveIndex.build(g)
+        wbfs = WBFS.build(g)
+        lcr = LCRAdapt.build(g)
+        nq = min(60, n_queries)
+
+        t_cbfs, _ = _time(lambda: [cbfs_query(g, int(a), int(b), int(w))
+                                   for a, b, w in zip(s[:nq], t[:nq],
+                                                      wl[:nq])])
+        t_wbfs, _ = _time(lambda: [wbfs.query(int(a), int(b), int(w))
+                                   for a, b, w in zip(s[:nq], t[:nq],
+                                                      wl[:nq])])
+        t_dij, _ = _time(lambda: [dijkstra_query(g, int(a), int(b), int(w))
+                                  for a, b, w in zip(s[:nq], t[:nq],
+                                                     wl[:nq])])
+        t_lcr, _ = _time(lambda: [lcr.query(int(a), int(b), int(w))
+                                  for a, b, w in zip(s[:nq], t[:nq],
+                                                     wl[:nq])])
+        t_nv, _ = _time(lambda: [naive.query(int(a), int(b), int(w))
+                                 for a, b, w in zip(s, t, wl)])
+        t_wc, _ = _time(lambda: [idx.query_one(int(a), int(b), int(w))
+                                 for a, b, w in zip(s, t, wl)])
+        # WC-INDEX+ device-batched path (jnp); measured per query
+        eng = DeviceQueryEngine(idx)
+        eng.query(s[:8], t[:8], wl[:8])  # warmup compile
+        t_dev, _ = _time(lambda: np.asarray(eng.query(s, t, wl)))
+        for algo, tt, n in [("c-bfs", t_cbfs, nq), ("w-bfs", t_wbfs, nq),
+                            ("dijkstra", t_dij, nq), ("lcr-adapt", t_lcr, nq),
+                            ("naive", t_nv, n_queries),
+                            ("wc-index", t_wc, n_queries),
+                            ("wc-index+dev", t_dev, n_queries)]:
+            rows.append(dict(table="fig7_query_time", dataset=name,
+                             algo=algo, value=tt / n))
+    return rows
+
+
+def bench_large_w(n_levels=20):
+    """Fig. 8/9 analogue: |w| = 20."""
+    rows = []
+    g = road_grid(40, 40, num_levels=n_levels, seed=7)
+    t_naive, naive = _time(NaiveIndex.build, g)
+    t_wcp, wcp = _time(build_wc_index, g, ordering="hybrid")
+    rows += [
+        dict(table="fig8_w20_time", dataset="ROAD40", algo="naive",
+             value=t_naive),
+        dict(table="fig8_w20_time", dataset="ROAD40", algo="wc-index+",
+             value=t_wcp),
+        dict(table="fig9_w20_size", dataset="ROAD40", algo="naive",
+             value=naive.memory_bytes()),
+        dict(table="fig9_w20_size", dataset="ROAD40", algo="wc-index+",
+             value=wcp.memory_bytes()),
+    ]
+    return rows
+
+
+def bench_batched_builder():
+    """Beyond-paper: PSL-style rank-batched construction — host-sync rounds
+    vs sequential roots, and the index-size/cleaning trade."""
+    rows = []
+    g = scale_free(2000, 4, num_levels=5, seed=11)
+    t_seq, seq = _time(build_wc_index, g, ordering="degree")
+    for B in [8, 32, 128]:
+        t_bat, (bat, stats) = _time(build_wc_index_batched, g,
+                                    ordering="degree", batch_size=B)
+        t_clean, (cleaned, removed) = _time(clean_index, bat)
+        rows += [
+            dict(table="batched_builder", dataset=f"BA2000/B{B}",
+                 algo="rounds", value=stats["rounds"]),
+            dict(table="batched_builder", dataset=f"BA2000/B{B}",
+                 algo="size_overhead",
+                 value=bat.size_entries() / seq.size_entries()),
+            dict(table="batched_builder", dataset=f"BA2000/B{B}",
+                 algo="size_after_clean",
+                 value=cleaned.size_entries() / seq.size_entries()),
+            dict(table="batched_builder", dataset=f"BA2000/B{B}",
+                 algo="build_time", value=t_bat),
+        ]
+    rows.append(dict(table="batched_builder", dataset="BA2000/seq",
+                     algo="build_time", value=t_seq))
+    rows.append(dict(table="batched_builder", dataset="BA2000/seq",
+                     algo="rounds", value=g.num_nodes))
+    return rows
+
+
+def bench_serving(batch=4096):
+    """Throughput of the serving engine (batched device queries)."""
+    rows = []
+    g = scale_free(3000, 4, num_levels=5, seed=13)
+    idx = build_wc_index(g, ordering="degree")
+    srv = WCSDServer(idx, max_batch=batch)
+    s, t, wl = random_queries(g, batch * 4, seed=5)
+    srv.query_many(s[:64], t[:64], wl[:64])  # warm
+    t0 = time.perf_counter()
+    srv.query_many(s, t, wl)
+    dt = time.perf_counter() - t0
+    rows.append(dict(table="serving", dataset="BA3000", algo="qps",
+                     value=len(s) / dt))
+    rows.append(dict(table="serving", dataset="BA3000", algo="us_per_query",
+                     value=dt / len(s) * 1e6))
+    return rows

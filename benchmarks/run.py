@@ -1,0 +1,44 @@
+"""Benchmark harness: one function per paper table (Figs. 5-12) plus the
+beyond-paper builder/kernel/serving benches. Prints ``table,dataset,algo,
+value`` CSV. ``--quick`` trims dataset sizes for CI."""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import bench_kernels, bench_wcsd  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only")
+    args = ap.parse_args()
+
+    suites = {
+        "indexing": lambda: bench_wcsd.bench_indexing(
+            datasets={"NY(s)": ("road", "NY(s)"),
+                      "MV(s)": ("social", "MV(s)")} if args.quick else None),
+        "query": lambda: bench_wcsd.bench_query(
+            n_queries=100 if args.quick else 400),
+        "large_w": lambda: bench_wcsd.bench_large_w(
+            n_levels=8 if args.quick else 20),
+        "batched": bench_wcsd.bench_batched_builder,
+        "serving": bench_wcsd.bench_serving,
+        "kernel_query": bench_kernels.bench_query_kernel,
+        "kernel_cin": bench_kernels.bench_cin_traffic,
+    }
+    if args.only:
+        suites = {k: v for k, v in suites.items() if k == args.only}
+    print("table,dataset,algo,value")
+    for name, fn in suites.items():
+        for row in fn():
+            print(f"{row['table']},{row['dataset']},{row['algo']},"
+                  f"{row['value']:.6g}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Serving driver: batched WCSD query serving with request batching, memo
+cache and the device query engine (the paper's 10k-query experiment as a
+service)."""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import WCSDServer, build_wc_index
+from repro.core.generators import random_queries, scale_free
+from repro.core.ref import wcsd_bfs
+
+
+def main():
+    g = scale_free(2000, 4, num_levels=5, seed=0)
+    idx = build_wc_index(g)
+    srv = WCSDServer(idx, max_batch=512)
+
+    s, t, wl = random_queries(g, 10_000, seed=1)
+    t0 = time.perf_counter()
+    out = srv.query_many(s, t, wl)
+    dt = time.perf_counter() - t0
+    print(f"10,000 queries in {dt:.2f}s -> {len(s)/dt:,.0f} qps "
+          f"({dt/len(s)*1e6:.0f} us/query)")
+    print(f"batches: {srv.stats.batches}, memo hits: {srv.stats.memo_hits}")
+
+    # spot check vs oracle
+    for i in range(0, 200, 37):
+        assert out[i] == wcsd_bfs(g, int(s[i]), int(t[i]), int(wl[i]))
+    print("spot checks vs BFS oracle pass")
+
+
+if __name__ == "__main__":
+    main()

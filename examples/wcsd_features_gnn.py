@@ -1,0 +1,69 @@
+"""The paper's technique as a first-class feature pipeline: WC-INDEX
+quality-constrained distance encodings feed a GIN node classifier.
+
+Labels are constructed to depend on quality-constrained proximity to two
+"hub" vertices, so the WC-INDEX features carry real signal: the model with
+distance encodings should beat the bare-feature model."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_wc_index
+from repro.core.generators import scale_free
+from repro.data.graphs import distance_encoding
+from repro.models import gnn
+from repro.train import optim as O
+from repro.train.loop import make_train_step
+
+
+def main():
+    g = scale_free(600, 3, num_levels=4, seed=0)
+    idx = build_wc_index(g)
+    rng = np.random.default_rng(0)
+
+    # labels: is the vertex within quality-2 distance 3 of either hub?
+    hubs = np.array([0, 1])
+    d = distance_encoding(idx, np.arange(g.num_nodes), hubs, w_levels=[2])
+    labels = (d.min(axis=1) <= 3).astype(np.int32)
+    print(f"label balance: {labels.mean():.2f}")
+
+    base_feat = rng.standard_normal((g.num_nodes, 8)).astype(np.float32)
+    enc = distance_encoding(idx, np.arange(g.num_nodes), hubs,
+                            w_levels=[0, 2])
+    enc = (enc - enc.mean(0)) / (enc.std(0) + 1e-6)  # standardize
+
+    def run(feat, name):
+        cfg = gnn.GNNConfig(name, "gin", n_layers=3, d_hidden=32,
+                            d_feat=feat.shape[1], n_classes=2)
+        params = gnn.init_params(cfg, jax.random.key(1))
+        ocfg = O.OptimizerConfig(lr=2e-3, warmup_steps=10, total_steps=150,
+                                 weight_decay=0.0)
+        opt = O.init_opt_state(ocfg, params)
+        batch = {"feat": jnp.asarray(feat),
+                 "edges_src": jnp.asarray(g.edges_src),
+                 "edges_dst": jnp.asarray(g.edges_dst),
+                 "labels": jnp.asarray(labels)}
+        step = jax.jit(make_train_step(
+            lambda p, b: gnn.loss_fn(p, cfg, b), ocfg))
+        for _ in range(150):
+            params, opt, m = step(params, opt, batch)
+        logits = gnn.forward(params, cfg, batch)
+        acc = float((jnp.argmax(logits, -1) == batch["labels"]).mean())
+        print(f"{name:28s} final loss {float(m['loss']):.3f} acc {acc:.3f}")
+        return acc
+
+    acc_base = run(base_feat, "bare features")
+    acc_wcsd = run(np.concatenate([base_feat, enc], 1),
+                   "+ WC-INDEX distance encodings")
+    assert acc_wcsd > acc_base
+    print("WC-INDEX features improve the GNN — the paper's index as a "
+          "data-pipeline stage.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Fault tolerance: checkpoint/restart runner, heartbeat-based failure
+detection, straggler mitigation, and elastic re-mesh.
+
+This container is single-host, so node failure is *simulated* (exceptions
+injected by tests / a failure_schedule); the control flow is exactly what a
+multi-host launcher runs per host:
+
+  loop:
+    wait for all heartbeats (timeout -> declare peer dead)
+    if dead peers: re-mesh to the surviving device set, restore latest ckpt
+    run step; on local exception: restore latest ckpt and continue
+    observe step time; persistent straggler -> request re-shard
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable, Optional
+
+from .ckpt import CheckpointManager
+from ..train.loop import StepTimeMonitor
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    """Simulated heartbeat table for N workers."""
+    n_workers: int
+    timeout_s: float = 10.0
+    last: dict = dataclasses.field(default_factory=dict)
+
+    def beat(self, worker: int, t: Optional[float] = None):
+        self.last[worker] = time.monotonic() if t is None else t
+
+    def dead_workers(self, now: Optional[float] = None) -> list[int]:
+        now = time.monotonic() if now is None else now
+        return [w for w in range(self.n_workers)
+                if now - self.last.get(w, -1e18) > self.timeout_s]
+
+
+class FaultTolerantRunner:
+    """Wraps a train step with restart-on-failure + straggler accounting.
+
+    failure_schedule: {step: Exception} injected before the step runs
+    (tests); in production the exception comes from the collective layer.
+    remesh_fn: called with the surviving worker count when a peer dies;
+    returns a (train_step, params, opt_state) rebuilt for the smaller mesh
+    (elastic scaling)."""
+
+    def __init__(self, train_step: Callable, params, opt_state,
+                 ckpt: CheckpointManager, *, ckpt_every: int = 5,
+                 max_restarts: int = 10,
+                 failure_schedule: Optional[dict] = None,
+                 heartbeat: Optional[Heartbeat] = None,
+                 remesh_fn: Optional[Callable] = None):
+        self.train_step = train_step
+        self.params = params
+        self.opt_state = opt_state
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.failures = dict(failure_schedule or {})
+        self.heartbeat = heartbeat
+        self.remesh_fn = remesh_fn
+        self.monitor = StepTimeMonitor()
+        self.restarts = 0
+        self.step = 0
+        self.log: list[dict] = []
+
+    def _restore(self):
+        state, step = self.ckpt.restore(
+            {"params": self.params, "opt_state": self.opt_state})
+        self.params = state["params"]
+        self.opt_state = state["opt_state"]
+        self.step = step
+        self.restarts += 1
+        if self.restarts > self.max_restarts:
+            raise RuntimeError("restart budget exhausted")
+
+    def run(self, batches: Iterable, max_steps: int,
+            batch_for_step: Optional[Callable] = None):
+        """batch_for_step(step) lets restarts replay the right batch
+        (deterministic data cursor)."""
+        it = iter(batches) if batches is not None else None
+        self.ckpt.save(self.step, {"params": self.params,
+                                   "opt_state": self.opt_state})
+        while self.step < max_steps:
+            if self.heartbeat:
+                dead = self.heartbeat.dead_workers()
+                if dead and self.remesh_fn:
+                    self.train_step, self.params, self.opt_state = \
+                        self.remesh_fn(self.heartbeat.n_workers - len(dead))
+                    self.heartbeat = Heartbeat(
+                        self.heartbeat.n_workers - len(dead),
+                        self.heartbeat.timeout_s)
+                    self._restore()
+            batch = (batch_for_step(self.step) if batch_for_step
+                     else next(it))
+            t0 = time.perf_counter()
+            try:
+                if self.step in self.failures:
+                    raise self.failures.pop(self.step)
+                self.params, self.opt_state, m = self.train_step(
+                    self.params, self.opt_state, batch)
+            except Exception as e:  # noqa: BLE001 — restart on any step fault
+                self.log.append({"step": self.step, "event": "failure",
+                                 "error": repr(e)})
+                self._restore()
+                continue
+            dt = time.perf_counter() - t0
+            straggler = self.monitor.observe(dt)
+            self.log.append({"step": self.step, "event": "step",
+                             "loss": float(m["loss"]), "time_s": dt,
+                             "straggler": straggler})
+            self.step += 1
+            if self.step % self.ckpt_every == 0:
+                self.ckpt.save(self.step, {"params": self.params,
+                                           "opt_state": self.opt_state})
+        return self.log

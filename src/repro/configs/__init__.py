@@ -1,0 +1,44 @@
+"""Architecture registry: --arch <id> resolves here. Each module exposes
+get_config(), smoke_config(), SHAPES, make_cell(shape, multi_pod)."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    # LM family
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "codeqwen1.5-7b": "repro.configs.codeqwen15_7b",
+    "qwen2.5-14b": "repro.configs.qwen25_14b",
+    # GNN family
+    "nequip": "repro.configs.nequip",
+    "gatedgcn": "repro.configs.gatedgcn",
+    "pna": "repro.configs.pna",
+    "gin-tu": "repro.configs.gin_tu",
+    # RecSys
+    "xdeepfm": "repro.configs.xdeepfm_arch",
+}
+
+
+# bonus cells outside the assigned 40 (not yielded by all_cells)
+EXTRA_ARCHS = {
+    "wcsd-serve": "repro.configs.wcsd_serve",
+}
+
+
+def get_arch(name: str):
+    if name in EXTRA_ARCHS:
+        return importlib.import_module(EXTRA_ARCHS[name])
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: "
+                       f"{list(ARCHS) + list(EXTRA_ARCHS)}")
+    return importlib.import_module(ARCHS[name])
+
+
+def all_cells(multi_pod: bool = False):
+    """Yield every (arch x shape) Cell — the 40-cell dry-run matrix."""
+    for name in ARCHS:
+        mod = get_arch(name)
+        for shape in mod.SHAPES:
+            yield name, shape, mod.make_cell(shape, multi_pod=multi_pod)

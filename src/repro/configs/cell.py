@@ -1,0 +1,26 @@
+"""A Cell = one (architecture x input-shape) point of the dry-run matrix:
+everything needed to lower + compile the step on a production mesh without
+allocating real data."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                     # train | prefill | decode | serve
+    fn: Callable                  # jit target
+    args: tuple                   # abstract args (ShapeDtypeStruct pytrees)
+    in_shardings: tuple
+    out_shardings: Any = None
+    donate_argnums: tuple = ()
+    # meta for the roofline: analytic MODEL_FLOPS, scan trip count for
+    # collective extrapolation, param counts, notes
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}__{self.shape}"

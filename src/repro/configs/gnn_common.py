@@ -1,0 +1,194 @@
+"""Shared cell builders for the GNN-family architectures.
+
+Shapes (assigned):
+  full_graph_sm  Cora-like full batch: 2,708 nodes / 10,556 edges / d=1433
+  minibatch_lg   Reddit-like sampled training: 1,024 seeds, fanout 15-10
+                 (the real numpy sampler lives in data/graphs.py; the cell
+                 lowers the padded block shapes it produces)
+  ogb_products   2,449,029 nodes / 61,859,140 edges / d=100, full batch
+  molecule       128 graphs x 30 nodes x 64 edges (graph classification)
+
+Distribution: edge arrays shard over ("pod","data"); node features/states
+shard over the same axes for the large graphs (per-layer gather -> the
+collective cost measured in §Roofline) and replicate for the small ones.
+Edge counts are padded to mesh-divisible sizes with sink-node self-edges.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import gnn as G
+from ..models import nequip as NQ
+from ..train import optim as O
+from ..train.loop import make_train_step
+from .cell import Cell
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# symmetrized + padded static shapes per assigned cell
+GNN_SHAPES = {
+    "full_graph_sm": dict(kind="train", n_nodes=2708, n_edges_raw=10556,
+                          d_feat=1433, n_classes=7, graph_level=False,
+                          shard_nodes=False),
+    "minibatch_lg": dict(kind="train", n_nodes=184320, n_edges_raw=168960,
+                         d_feat=602, n_classes=41, graph_level=False,
+                         shard_nodes=True,
+                         note="sampled block: 1024 seeds x fanout 15-10 on a"
+                              " 232,965-node/115M-edge graph"),
+    "ogb_products": dict(kind="train", n_nodes=2449029,
+                         n_edges_raw=61859140, d_feat=100, n_classes=47,
+                         graph_level=False, shard_nodes=True),
+    "molecule": dict(kind="train", n_nodes=30 * 128, n_edges_raw=64 * 2 * 128,
+                     d_feat=16, n_classes=2, graph_level=True, n_graphs=128,
+                     shard_nodes=False),
+}
+
+
+def _bd(multi_pod: bool):
+    return ("pod", "data") if multi_pod else "data"
+
+
+def padded_edges(spec: dict, multi_pod: bool) -> int:
+    raw = spec["n_edges_raw"] * (2 if spec["shape_sym"] else 1) \
+        if "shape_sym" in spec else spec["n_edges_raw"] * 2
+    return _ceil_to(raw, 1024)
+
+
+def gnn_model_flops(cfg, E: int, N: int, tokensless=True) -> float:
+    """Analytic per-step fwd+bwd FLOPs (documented upper-level estimate)."""
+    d = cfg.d_hidden
+    if cfg.kind == "gin":
+        per_layer = 2 * E * d + 2 * 2 * N * d * d
+    elif cfg.kind == "pna":
+        per_layer = 2 * E * d * d + 8 * E * d + 2 * N * 13 * d * d
+    else:  # gatedgcn
+        per_layer = 5 * 2 * E * d * d + 10 * E * d
+    return 3.0 * cfg.n_layers * per_layer  # x3 for bwd
+
+
+def make_gnn_cell(cfg: G.GNNConfig, shape: str, multi_pod: bool = False,
+                  arch_name: str | None = None) -> Cell:
+    spec = GNN_SHAPES[shape]
+    bd = _bd(multi_pod)
+    E = _ceil_to(spec["n_edges_raw"] * 2, 1024)
+    # +1 sink node absorbing edge padding; pad to 512 for shard divisibility
+    N = _ceil_to(spec["n_nodes"] + 1, 512) if spec["shard_nodes"] \
+        else spec["n_nodes"] + 1
+    cfg = G.GNNConfig(cfg.name, cfg.kind, cfg.n_layers, cfg.d_hidden,
+                      d_feat=spec["d_feat"], n_classes=spec["n_classes"],
+                      graph_level=spec["graph_level"], d_edge=cfg.d_edge,
+                      # bf16 activations on the huge full-batch cells
+                      compute_dtype=("bfloat16" if spec["shard_nodes"]
+                                     else "float32"))
+    ap = G.abstract_params(cfg)
+    ps = G.param_shardings(cfg)
+    nspec = P(bd, None) if spec["shard_nodes"] else P(None, None)
+    lspec = P(bd) if spec["shard_nodes"] else P(None)
+    batch = {
+        "feat": jax.ShapeDtypeStruct((N, spec["d_feat"]), jnp.float32),
+        "edges_src": jax.ShapeDtypeStruct((E,), jnp.int32),
+        "edges_dst": jax.ShapeDtypeStruct((E,), jnp.int32),
+    }
+    bspec = {"feat": nspec, "edges_src": P(bd), "edges_dst": P(bd)}
+    ng = None
+    if spec["graph_level"]:
+        ng = spec["n_graphs"]
+        batch["graph_id"] = jax.ShapeDtypeStruct((N,), jnp.int32)
+        batch["labels"] = jax.ShapeDtypeStruct((ng,), jnp.int32)
+        bspec["graph_id"] = P(None)
+        bspec["labels"] = P(None)
+    else:
+        batch["labels"] = jax.ShapeDtypeStruct((N,), jnp.int32)
+        bspec["labels"] = lspec
+
+    ocfg = O.OptimizerConfig(lr=1e-3, weight_decay=0.0)
+    ao = O.abstract_opt_state(ocfg, ap)
+    osd = O.opt_state_shardings(ocfg, ps)
+    step = make_train_step(
+        lambda p, b: G.loss_fn(p, cfg, b, n_graphs=ng), ocfg)
+    meta = {
+        "family": "gnn", "scan_trips": 1,   # python-loop layers: no scan
+        "model_flops": gnn_model_flops(cfg, E, N),
+        "n_nodes": N, "n_edges": E,
+        "params": sum(int(np.prod(s)) for s, _ in G.param_defs(cfg).values()),
+    }
+    if "note" in spec:
+        meta["note"] = spec["note"]
+    return Cell(arch_name or cfg.name, shape, "train", step,
+                (ap, ao, batch), (ps, osd, bspec), (ps, osd, None), (0, 1),
+                meta)
+
+
+def make_nequip_cell(cfg: NQ.NequIPConfig, shape: str,
+                     multi_pod: bool = False) -> Cell:
+    spec = GNN_SHAPES[shape]
+    bd = _bd(multi_pod)
+    E = _ceil_to(spec["n_edges_raw"] * 2, 1024)
+    N = _ceil_to(spec["n_nodes"] + 1, 512) if spec["shard_nodes"] \
+        else spec["n_nodes"] + 1
+    cfg = NQ.NequIPConfig(cfg.name, cfg.n_layers, cfg.channels, cfg.l_max,
+                          cfg.n_rbf, cfg.cutoff, d_feat=spec["d_feat"],
+                          radial_hidden=cfg.radial_hidden)
+    ap = NQ.abstract_params(cfg)
+    ps = NQ.param_shardings(cfg)
+    # node irreps stay REPLICATED for nequip: every edge chunk gathers
+    # h[src] by arbitrary index, so sharded nodes would all-gather the full
+    # state once per chunk (measured 4 TiB/device on ogb_products);
+    # replicated states + edge-sharded partial aggregates -> one all-reduce
+    # per layer instead.
+    nspec = P(None, None)
+    ng = spec.get("n_graphs", 1)
+    batch = {
+        "feat": jax.ShapeDtypeStruct((N, spec["d_feat"]), jnp.float32),
+        "pos": jax.ShapeDtypeStruct((N, 3), jnp.float32),
+        "edges_src": jax.ShapeDtypeStruct((E,), jnp.int32),
+        "edges_dst": jax.ShapeDtypeStruct((E,), jnp.int32),
+        "graph_id": jax.ShapeDtypeStruct((N,), jnp.int32),
+        "energy": jax.ShapeDtypeStruct((ng,), jnp.float32),
+        "forces": jax.ShapeDtypeStruct((N, 3), jnp.float32),
+    }
+    bspec = {"feat": nspec, "pos": nspec, "edges_src": P(bd),
+             "edges_dst": P(bd), "graph_id": P(None),
+             "energy": P(None), "forces": nspec}
+    # edge chunking for the huge cells (see models/nequip.py)
+    edge_chunk = None
+    if E > 4_000_000:
+        edge_chunk = E // 64 if E % 64 == 0 else None
+    elif E > 100_000:
+        edge_chunk = E // 8 if E % 8 == 0 else None
+    # forces only where the task is molecular (positions are physical)
+    fw = 0.1 if shape == "molecule" else 0.0
+    ocfg = O.OptimizerConfig(lr=1e-3, weight_decay=0.0)
+    ao = O.abstract_opt_state(ocfg, ap)
+    osd = O.opt_state_shardings(ocfg, ps)
+
+    def loss(p, b):
+        if fw:
+            return NQ.loss_fn(p, cfg, b, n_graphs=ng, force_weight=fw)
+        e = NQ.energy_fn(p, cfg, b, n_graphs=ng, edge_chunk=edge_chunk)
+        return jnp.mean((e - b["energy"]) ** 2)
+
+    step = make_train_step(loss, ocfg)
+    n_paths = len(NQ._paths())
+    C = cfg.channels
+    meta = {
+        "family": "gnn", "scan_trips": (E // edge_chunk if edge_chunk else 1),
+        # per edge: radial MLP + n_paths tensor products over C channels
+        "model_flops": 3.0 * cfg.n_layers * E * (
+            2 * cfg.n_rbf * cfg.radial_hidden
+            + 2 * cfg.radial_hidden * n_paths * C + n_paths * C * 45)
+        + 3.0 * cfg.n_layers * N * 2 * C * C * 9,
+        "n_nodes": N, "n_edges": E, "edge_chunk": edge_chunk,
+        "params": sum(int(np.prod(s))
+                      for s, _ in NQ.param_defs(cfg).values()),
+        "note": "synthetic 3D coords for non-molecular graphs (DESIGN.md)",
+    }
+    return Cell(cfg.name, shape, "train", step, (ap, ao, batch),
+                (ps, osd, bspec), (ps, osd, None), (0, 1), meta)

@@ -1,0 +1,133 @@
+"""Shared cell builders for the LM-family architectures.
+
+Shapes (assigned): train_4k (train), prefill_32k (inference prefill),
+decode_32k (one token vs 32k KV cache), long_500k (one token vs 512k KV
+cache, batch 1). decode/long lower `serve_step`, not `train_step`.
+All five LM archs are full-attention; long_500k is a *decode* shape, i.e.
+O(L) per token, so it runs (the sub-quadratic concern applies to prefill —
+see DESIGN.md; a sliding-window config exists for optional 500k prefill).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import transformer as T
+from ..train import optim as O
+from ..train.loop import make_train_step
+from .cell import Cell
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def _bd(multi_pod: bool):
+    return ("pod", "data") if multi_pod else "data"
+
+
+def lm_flops_train(cfg: T.LMConfig, tokens: int) -> float:
+    return 6.0 * cfg.active_param_count() * tokens
+
+
+def lm_flops_prefill(cfg: T.LMConfig, batch: int, seq: int) -> float:
+    dense = 2.0 * cfg.active_param_count() * batch * seq
+    attn = 2.0 * cfg.n_layers * batch * seq * seq * cfg.n_heads * cfg.d_head
+    return dense + attn  # causal halves the attn term; keep upper bound /2
+    # (reported MODEL_FLOPS uses the dense 2ND convention + attention term)
+
+
+def lm_flops_decode(cfg: T.LMConfig, batch: int, kv_len: int) -> float:
+    dense = 2.0 * cfg.active_param_count() * batch
+    attn = 4.0 * cfg.n_layers * batch * kv_len * cfg.n_heads * cfg.d_head
+    return dense + attn
+
+
+def make_lm_cell(cfg: T.LMConfig, shape: str, multi_pod: bool = False) -> Cell:
+    spec = LM_SHAPES[shape]
+    bd = _bd(multi_pod)
+    ps = T.param_shardings(cfg)
+    ap = T.abstract_params(cfg)
+    meta = {
+        "family": "lm", "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "scan_trips": cfg.n_layers,
+    }
+    # residual-stream sharding: d_model over "model" when attention is
+    # head-sharded; SEQUENCE over "model" (context parallelism) otherwise
+    act_spec = (P(bd, None, "model") if cfg.heads_shardable
+                else P(bd, "model", None))
+    head_spec = None if cfg.heads_shardable else P(bd, None, "model")
+
+    if spec["kind"] == "train":
+        ocfg = O.OptimizerConfig()
+        ao = O.abstract_opt_state(ocfg, ap)
+        osd = O.opt_state_shardings(ocfg, ps)
+        B, S = spec["batch"], spec["seq"]
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        bspec = {"tokens": P(bd, None), "labels": P(bd, None)}
+        step = make_train_step(
+            lambda p, b: T.loss_fn(p, cfg, b, act_spec=act_spec,
+                                   head_act_spec=head_spec), ocfg)
+        meta["model_flops"] = lm_flops_train(cfg, B * S)
+        meta["tokens"] = B * S
+        return Cell(cfg.name, shape, "train", step, (ap, ao, batch),
+                    (ps, osd, bspec), (ps, osd, None), (0, 1), meta)
+
+    if spec["kind"] == "prefill":
+        B, S = spec["batch"], spec["seq"]
+        toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        fn2 = lambda params, tokens: T.prefill_step(params, cfg, tokens,
+                                                    act_spec=act_spec)
+        # KV cache sharding (§Perf): kv-heads over "model" when divisible
+        # (MHA archs), else sequence over "model" — the [L, B, S, Hkv, Dh]
+        # scan output otherwise replicates over the model axis (96 GiB on
+        # codeqwen prefill_32k)
+        if cfg.n_kv_heads % cfg.tp_size == 0:
+            cspec_p = P(None, bd, None, "model", None)
+        else:
+            cspec_p = P(None, bd, "model", None, None)
+        cache_spec = {"k": cspec_p, "v": cspec_p}
+        meta["model_flops"] = lm_flops_prefill(cfg, B, S)
+        meta["tokens"] = B * S
+        return Cell(cfg.name, shape, "prefill", fn2, (ap, toks),
+                    (ps, P(bd, None)), (P(bd), cache_spec), (), meta)
+
+    # decode shapes
+    B, S = spec["batch"], spec["seq"]
+    cache = T.init_cache_abstract(cfg, B, S)
+    if B == 1:
+        # batch of one: shard the KV length over every mesh axis
+        all_axes = (("pod", "data", "model") if multi_pod
+                    else ("data", "model"))
+        cspec = P(None, None, all_axes, None, None)
+        tspec = P(None)
+    elif cfg.n_kv_heads % cfg.tp_size == 0:
+        # shard kv heads over "model": decode attention stays head-local
+        cspec = P(None, bd, None, "model", None)
+        tspec = P(bd)
+    else:
+        cspec = P(None, bd, "model", None, None)
+        tspec = P(bd)
+    cache_spec = {"k": cspec, "v": cspec}
+    toks = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(params, cache, tokens, pos):
+        return T.decode_step(params, cfg, cache, tokens, pos)
+
+    meta["model_flops"] = lm_flops_decode(cfg, B, S)
+    meta["tokens"] = B
+    meta["kv_bytes"] = (2 * cfg.n_layers * B * S * cfg.n_kv_heads
+                        * cfg.d_head * 2)
+    return Cell(cfg.name, shape, "decode", fn, (ap, cache, toks, pos),
+                (ps, cache_spec, tspec, P()),
+                (tspec, P(bd if B > 1 else None, "model"), cache_spec),
+                (1,), meta)

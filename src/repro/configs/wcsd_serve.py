@@ -1,0 +1,49 @@
+"""Bonus cell (outside the assigned 40): the paper's own workload on the
+production mesh — batched WCSD queries against a device-resident WC-INDEX.
+
+Labels for a ~1M-vertex graph (padded width 256) shard their vertex axis
+over "model"; the query batch shards over ("pod","data"). This is the
+serving configuration the WCSDServer would run pod-wide."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.query import query_batch_jnp
+from .cell import Cell
+
+SHAPES = ["serve_1m"]
+
+_V = 1 << 20          # vertices
+_L = 256              # padded label width
+_B = 1 << 20          # queries per step
+
+
+def get_config():
+    return {"V": _V, "L": _L, "B": _B}
+
+
+def smoke_config():
+    return {"V": 256, "L": 16, "B": 64}
+
+
+def make_cell(shape: str = "serve_1m", multi_pod: bool = False) -> Cell:
+    bd = ("pod", "data") if multi_pod else "data"
+    args = (
+        jax.ShapeDtypeStruct((_V, _L), jnp.int32),   # hub
+        jax.ShapeDtypeStruct((_V, _L), jnp.int32),   # dist
+        jax.ShapeDtypeStruct((_V, _L), jnp.int32),   # wlev
+        jax.ShapeDtypeStruct((_V,), jnp.int32),      # count
+        jax.ShapeDtypeStruct((_B,), jnp.int32),      # s
+        jax.ShapeDtypeStruct((_B,), jnp.int32),      # t
+        jax.ShapeDtypeStruct((_B,), jnp.int32),      # w
+    )
+    lspec = P(None, None)   # labels replicated (3 GiB total, fits HBM)
+    in_sh = (lspec, lspec, lspec, P(None), P(bd), P(bd), P(bd))
+    meta = {"family": "wcsd", "scan_trips": 1,
+            # per query: L*L compares + L*L adds (VPU op count proxy)
+            "model_flops": 2.0 * _B * _L * _L,
+            "note": "paper-technique serving cell (bonus, not in the 40)"}
+    return Cell("wcsd-serve", shape, "serve", query_batch_jnp, args,
+                in_sh, P(bd), (), meta)

@@ -1,0 +1,99 @@
+"""xdeepfm [arXiv:1803.05170]: 39 sparse fields, embed_dim 10, CIN
+200-200-200, MLP 400-400. Shapes: train_batch (65,536), serve_p99 (512),
+serve_bulk (262,144), retrieval_cand (1 query x 1,000,000 candidates)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import xdeepfm as X
+from ..train import optim as O
+from ..train.loop import make_train_step
+from .cell import Cell
+
+SHAPES = ["train_batch", "serve_p99", "serve_bulk", "retrieval_cand"]
+
+_SHAPE_SPECS = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_cand=1_000_000),
+}
+
+
+def get_config() -> X.XDeepFMConfig:
+    return X.XDeepFMConfig("xdeepfm")
+
+
+def smoke_config() -> X.XDeepFMConfig:
+    return X.XDeepFMConfig("xdeepfm-smoke", n_sparse=6, embed_dim=4,
+                           cin_layers=(8, 8), mlp_layers=(16,),
+                           big_fields=2, big_vocab=64, small_vocab=16)
+
+
+def _flops_fwd(cfg: X.XDeepFMConfig, B: int) -> float:
+    D = cfg.embed_dim
+    f = 0.0
+    h_prev = cfg.n_sparse
+    for k in cfg.cin_layers:
+        f += 2.0 * B * k * h_prev * cfg.n_sparse * D
+        h_prev = k
+    d_in = cfg.n_sparse * D
+    for w in cfg.mlp_layers:
+        f += 2.0 * B * d_in * w
+        d_in = w
+    f += 2.0 * B * d_in
+    return f
+
+
+def make_cell(shape: str, multi_pod: bool = False) -> Cell:
+    cfg = get_config()
+    spec = _SHAPE_SPECS[shape]
+    bd = ("pod", "data") if multi_pod else "data"
+    ap = X.abstract_params(cfg)
+    ps = X.param_shardings(cfg)
+    meta = {"family": "recsys", "scan_trips": cfg.embed_dim,  # CIN d-scan
+            "params": cfg.total_rows * (cfg.embed_dim + 1),
+            "embed_rows": cfg.total_rows}
+
+    if spec["kind"] == "train":
+        B = spec["batch"]
+        batch = {"ids": jax.ShapeDtypeStruct((B, cfg.n_sparse), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        bspec = {"ids": P(bd, None), "labels": P(bd)}
+        ocfg = O.OptimizerConfig(lr=1e-3, weight_decay=0.0)
+        ao = O.abstract_opt_state(ocfg, ap)
+        osd = O.opt_state_shardings(ocfg, ps)
+        step = make_train_step(lambda p, b: X.loss_fn(p, cfg, b), ocfg)
+        meta["model_flops"] = 3.0 * _flops_fwd(cfg, B)
+        return Cell("xdeepfm", shape, "train", step, (ap, ao, batch),
+                    (ps, osd, bspec), (ps, osd, None), (0, 1), meta)
+
+    if spec["kind"] == "serve":
+        B = spec["batch"]
+        batch = {"ids": jax.ShapeDtypeStruct((B, cfg.n_sparse), jnp.int32)}
+        bspec = {"ids": P(bd, None)}
+
+        def fn(params, batch):
+            return X.forward(params, cfg, batch)
+
+        meta["model_flops"] = _flops_fwd(cfg, B)
+        return Cell("xdeepfm", shape, "serve", fn, (ap, batch),
+                    (ps, bspec), P(bd), (), meta)
+
+    # retrieval: one query against 1M candidate embeddings
+    C = spec["n_cand"]
+    qids = jax.ShapeDtypeStruct((1, cfg.n_sparse), jnp.int32)
+    cand = jax.ShapeDtypeStruct((C, cfg.embed_dim), jnp.float32)
+
+    def fn(params, query_ids, cand_emb):
+        scores, (top_v, top_i) = X.retrieval_scores(params, cfg, query_ids,
+                                                    cand_emb)
+        return top_v, top_i
+
+    meta["model_flops"] = 2.0 * C * cfg.embed_dim
+    return Cell("xdeepfm", shape, "retrieval", fn, (ap, qids, cand),
+                (ps, P(None, None), P(bd, None)), None, (), meta)

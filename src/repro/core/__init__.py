@@ -1,0 +1,14 @@
+"""Core of the paper reproduction: WC-INDEX and friends."""
+from .graph import Graph, INF_DIST
+from .wc_index import WCIndex, build_wc_index
+from .wc_index_batched import build_wc_index_batched, clean_index
+from .ordering import make_order, degree_order, tree_decomposition_order, hybrid_order
+from .query import DeviceQueryEngine, query_batch_jnp
+from .serve import WCSDServer
+
+__all__ = [
+    "Graph", "INF_DIST", "WCIndex", "build_wc_index",
+    "build_wc_index_batched", "clean_index", "make_order", "degree_order",
+    "tree_decomposition_order", "hybrid_order", "DeviceQueryEngine",
+    "query_batch_jnp", "WCSDServer",
+]

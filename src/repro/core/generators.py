@@ -1,0 +1,74 @@
+"""Synthetic graph generators mirroring the paper's two dataset families:
+road-like (grid, large diameter, near-constant degree) and scale-free social
+(Barabási–Albert / configuration-model-ish). Qualities are drawn from |w|
+distinct levels, matching Tables III/IV (|w| in {3, 5, 9, 20})."""
+from __future__ import annotations
+
+import numpy as np
+
+from .graph import Graph
+
+
+def _assign_qualities(num_edges: int, num_levels: int, rng: np.random.Generator,
+                      skew: float = 0.0) -> np.ndarray:
+    """Draw per-edge qualities from ``num_levels`` distinct values.
+
+    skew=0 -> uniform over levels; skew>0 -> zipf-ish bias to low levels
+    (most edges low quality, matching e.g. bandwidth distributions)."""
+    vals = np.arange(1.0, num_levels + 1.0)  # quality values 1..W
+    if skew <= 0:
+        probs = np.full(num_levels, 1.0 / num_levels)
+    else:
+        probs = 1.0 / (np.arange(1, num_levels + 1) ** skew)
+        probs /= probs.sum()
+    return rng.choice(vals, size=num_edges, p=probs)
+
+
+def road_grid(rows: int, cols: int, num_levels: int = 5, diag_prob: float = 0.05,
+              seed: int = 0) -> Graph:
+    """Road-network-like graph: rows×cols grid + sparse diagonal shortcuts."""
+    rng = np.random.default_rng(seed)
+    idx = np.arange(rows * cols).reshape(rows, cols)
+    us, vs = [], []
+    us.append(idx[:, :-1].ravel()); vs.append(idx[:, 1:].ravel())   # horizontal
+    us.append(idx[:-1, :].ravel()); vs.append(idx[1:, :].ravel())   # vertical
+    if diag_prob > 0:
+        du, dv = idx[:-1, :-1].ravel(), idx[1:, 1:].ravel()
+        m = rng.random(len(du)) < diag_prob
+        us.append(du[m]); vs.append(dv[m])
+    u = np.concatenate(us); v = np.concatenate(vs)
+    qual = _assign_qualities(len(u), num_levels, rng)
+    return Graph.from_edges(rows * cols, u, v, qual)
+
+
+def scale_free(num_nodes: int, m: int = 4, num_levels: int = 3,
+               seed: int = 0, skew: float = 0.8) -> Graph:
+    """Barabási–Albert scale-free graph (social-network-like)."""
+    import networkx as nx
+    g = nx.barabasi_albert_graph(num_nodes, m, seed=seed)
+    e = np.array(g.edges(), dtype=np.int32)
+    rng = np.random.default_rng(seed + 1)
+    qual = _assign_qualities(len(e), num_levels, rng, skew=skew)
+    return Graph.from_edges(num_nodes, e[:, 0], e[:, 1], qual)
+
+
+def erdos_renyi(num_nodes: int, avg_degree: float = 6.0, num_levels: int = 5,
+                seed: int = 0) -> Graph:
+    rng = np.random.default_rng(seed)
+    num_edges = int(num_nodes * avg_degree / 2)
+    u = rng.integers(0, num_nodes, size=num_edges)
+    v = rng.integers(0, num_nodes, size=num_edges)
+    keep = u != v
+    u, v = u[keep], v[keep]
+    qual = _assign_qualities(len(u), num_levels, rng)
+    return Graph.from_edges(num_nodes, u, v, qual)
+
+
+def random_queries(g: Graph, n: int, seed: int = 0
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(s, t, w_level) triples with w_level in [0, num_levels)."""
+    rng = np.random.default_rng(seed)
+    s = rng.integers(0, g.num_nodes, size=n).astype(np.int32)
+    t = rng.integers(0, g.num_nodes, size=n).astype(np.int32)
+    wl = rng.integers(0, max(g.num_levels, 1), size=n).astype(np.int32)
+    return s, t, wl

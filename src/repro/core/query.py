@@ -1,0 +1,126 @@
+"""Device-side batched WCSD query engine.
+
+The serving hot path: given padded label arrays resident on device, answer
+batches of (s, t, w_level) queries. Three implementations:
+
+  - `query_batch_jnp`: pure-jnp masked outer join (oracle; also what the XLA
+    fallback runs when Pallas is unavailable).
+  - `kernels.ops.wcsd_query`: the Pallas TPU kernel (VMEM-tiled).
+  - `WCIndex.query_one`: host sort-merge (paper Alg. 5), for tiny workloads.
+
+Distribution: queries are embarrassingly parallel -> shard the batch axis
+over ("pod", "data") and replicate labels; for graphs whose labels exceed a
+chip, shard the *vertex* axis of the label arrays over "model" and gather
+the (at most) two label rows per query with collective-permute-free
+`jnp.take` (XLA turns this into an all-gather of only the touched rows).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import INF_DIST
+from .wc_index import WCIndex
+
+DEV_INF = jnp.int32(1 << 29)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def query_batch_jnp(hub, dist, wlev, count, s, t, w_level):
+    """[B] w-constrained distances via masked outer join over padded labels.
+
+    hub/dist/wlev: [V, L] int32 padded label arrays, count: [V].
+    s/t/w_level: [B] int32 queries. Returns int32 [B] (INF_DIST = no path).
+    """
+    L = hub.shape[1]
+    col = jnp.arange(L)
+    hs, ht = hub[s], hub[t]                       # [B, L]
+    ms = (col[None, :] < count[s, None]) & (wlev[s] >= w_level[:, None])
+    mt = (col[None, :] < count[t, None]) & (wlev[t] >= w_level[:, None])
+    ds = jnp.where(ms, jnp.minimum(dist[s], DEV_INF), DEV_INF)
+    dt = jnp.where(mt, jnp.minimum(dist[t], DEV_INF), DEV_INF)
+    eq = hs[:, :, None] == ht[:, None, :]         # [B, L, L]
+    dsum = ds[:, :, None] + dt[:, None, :]
+    best = jnp.where(eq, dsum, DEV_INF).min(axis=(1, 2))
+    return jnp.where(best >= DEV_INF, INF_DIST, best).astype(jnp.int32)
+
+
+def query_batch_sorted_jnp(hub, dist, wlev, count, s, t, w_level):
+    """Theorem-3-aware variant: per hub only the FIRST quality-feasible entry
+    matters, so we first reduce each side to its per-hub minimum distance
+    (segmented min over the sorted-by-hub label row), then do the outer join
+    on the reduced rows. Same result, ~W× fewer outer-compare FLOPs when
+    labels hold multiple quality tiers per hub."""
+    L = hub.shape[1]
+    col = jnp.arange(L)
+
+    def reduce_side(v):
+        h = hub[v]
+        m = (col[None, :] < count[v, None]) & (wlev[v] >= w_level[:, None])
+        d = jnp.where(m, jnp.minimum(dist[v], DEV_INF), DEV_INF)
+        # entries are hub-sorted; keep min dist at first occurrence of hub
+        first = jnp.concatenate([jnp.ones_like(h[:, :1], dtype=bool),
+                                 h[:, 1:] != h[:, :-1]], axis=1)
+        # backward running-min within equal-hub runs via reverse scan trick:
+        # since within a hub run dist ascends (Thm. 3), the first feasible
+        # entry already has the run's min -> segment min == min over run
+        run_min = jax.lax.associative_scan(
+            lambda a, b: (jnp.where(b[1], b[0], jnp.minimum(a[0], b[0])),
+                          a[1] | b[1]),
+            (d, first), axis=1)[0]
+        # value at last element of each run = run min; scatter back: for the
+        # outer join it is enough to keep per-entry run_min at run heads and
+        # DEV_INF elsewhere (dedup), so equal hubs do not double-count.
+        last = jnp.concatenate([h[:, :-1] != h[:, 1:],
+                                jnp.ones_like(h[:, :1], dtype=bool)], axis=1)
+        red = jnp.where(last, run_min, DEV_INF)
+        return h, red
+
+    hs, ds = reduce_side(s)
+    ht, dt = reduce_side(t)
+    eq = hs[:, :, None] == ht[:, None, :]
+    best = jnp.where(eq, ds[:, :, None] + dt[:, None, :], DEV_INF)
+    best = best.min(axis=(1, 2))
+    return jnp.where(best >= DEV_INF, INF_DIST, best).astype(jnp.int32)
+
+
+class DeviceQueryEngine:
+    """Holds device-resident padded labels and answers query batches."""
+
+    def __init__(self, idx: WCIndex, cap: int | None = None,
+                 use_pallas: bool = False, interpret: bool = True):
+        h, d, w, c = idx.padded_device_arrays(cap)
+        # pad label width to a lane-friendly multiple of 128 for the kernel
+        L = h.shape[1]
+        Lp = max(128, int(np.ceil(L / 128)) * 128) if use_pallas else L
+        if Lp != L:
+            pad = ((0, 0), (0, Lp - L))
+            h = np.pad(h, pad, constant_values=-1)
+            d = np.pad(d, pad, constant_values=INF_DIST)
+            w = np.pad(w, pad, constant_values=-1)
+        self.hub = jnp.asarray(h)
+        self.dist = jnp.asarray(d)
+        self.wlev = jnp.asarray(w)
+        self.count = jnp.asarray(c)
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.num_levels = idx.num_levels
+
+    def query(self, s, t, w_level) -> jax.Array:
+        s = jnp.asarray(s, jnp.int32)
+        t = jnp.asarray(t, jnp.int32)
+        w_level = jnp.asarray(w_level, jnp.int32)
+        if self.use_pallas:
+            from ..kernels import ops as kops
+            return kops.wcsd_query(self.hub, self.dist, self.wlev, self.count,
+                                   s, t, w_level, interpret=self.interpret)
+        return query_batch_jnp(self.hub, self.dist, self.wlev, self.count,
+                               s, t, w_level)
+
+    def query_from_quality(self, s, t, w: np.ndarray, levels: np.ndarray):
+        """Real-valued thresholds -> levels (exact canonicalization)."""
+        wl = np.searchsorted(levels, np.asarray(w), side="left")
+        return self.query(s, t, wl.astype(np.int32))

@@ -1,0 +1,97 @@
+"""WCSD serving engine: request batching over the device query engine.
+
+Mirrors the paper's query-serving scenario (10k random queries, µs/query):
+requests accumulate into fixed-size (power-of-two) batches to avoid
+recompilation, are answered by one fused device call, and per-request
+results are handed back. A tiny LRU memo short-circuits repeated hot
+queries (social-network workloads are heavy-tailed)."""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from .query import DeviceQueryEngine
+from .wc_index import WCIndex
+
+
+@dataclasses.dataclass
+class ServeStats:
+    requests: int = 0
+    batches: int = 0
+    memo_hits: int = 0
+    flush_time_s: float = 0.0
+    max_batch: int = 0
+
+
+class WCSDServer:
+    def __init__(self, idx: WCIndex, max_batch: int = 1024,
+                 use_pallas: bool = False, memo_capacity: int = 65536):
+        self.engine = DeviceQueryEngine(idx, use_pallas=use_pallas)
+        self.max_batch = int(max_batch)
+        self.memo: collections.OrderedDict[tuple, int] = collections.OrderedDict()
+        self.memo_capacity = memo_capacity
+        self.pending: list[tuple[int, int, int, int]] = []  # (rid, s, t, wl)
+        self.results: dict[int, int] = {}
+        self._next_rid = 0
+        self.stats = ServeStats()
+
+    # ------------------------------------------------------------- requests
+    def submit(self, s: int, t: int, w_level: int) -> int:
+        """Queue one request; returns a request id."""
+        rid = self._next_rid
+        self._next_rid += 1
+        key = (s, t, w_level) if s <= t else (t, s, w_level)
+        self.stats.requests += 1
+        if key in self.memo:
+            self.memo.move_to_end(key)
+            self.results[rid] = self.memo[key]
+            self.stats.memo_hits += 1
+        else:
+            self.pending.append((rid, s, t, w_level))
+            if len(self.pending) >= self.max_batch:
+                self.flush()
+        return rid
+
+    def flush(self) -> None:
+        if not self.pending:
+            return
+        t0 = time.perf_counter()
+        batch = self.pending
+        self.pending = []
+        n = len(batch)
+        # pad to the next power of two (bounded recompiles)
+        padded = 1 << max(0, (n - 1).bit_length())
+        rid = np.array([b[0] for b in batch], dtype=np.int64)
+        s = np.zeros(padded, dtype=np.int32)
+        t = np.zeros(padded, dtype=np.int32)
+        wl = np.zeros(padded, dtype=np.int32)
+        s[:n] = [b[1] for b in batch]
+        t[:n] = [b[2] for b in batch]
+        wl[:n] = [b[3] for b in batch]
+        out = np.asarray(self.engine.query(s, t, wl))[:n]
+        for r, (ss, tt, ww), d in zip(rid, [(b[1], b[2], b[3]) for b in batch],
+                                      out):
+            self.results[int(r)] = int(d)
+            key = (ss, tt, ww) if ss <= tt else (tt, ss, ww)
+            self.memo[key] = int(d)
+            if len(self.memo) > self.memo_capacity:
+                self.memo.popitem(last=False)
+        self.stats.batches += 1
+        self.stats.max_batch = max(self.stats.max_batch, n)
+        self.stats.flush_time_s += time.perf_counter() - t0
+
+    def result(self, rid: int) -> Optional[int]:
+        if rid not in self.results and any(p[0] == rid for p in self.pending):
+            self.flush()
+        return self.results.get(rid)
+
+    # convenience: synchronous bulk API
+    def query_many(self, s, t, w_level) -> np.ndarray:
+        rids = [self.submit(int(a), int(b), int(c))
+                for a, b, c in zip(s, t, w_level)]
+        self.flush()
+        return np.array([self.results[r] for r in rids], dtype=np.int32)

@@ -1,0 +1,283 @@
+"""WC-INDEX: the paper's single 2-hop labeling answering arbitrary-w WCSD
+queries (paper §IV, Algorithm 3).
+
+Faithful construction = per-root pruned constrained BFS in *distance order*
+(rounds) then *quality order* (the R array keeps only the best bottleneck
+quality per vertex per round), pruned by querying the partially built index
+(query-efficient form, §IV-C: per-root hub table T + Thm. 3 monotonicity).
+
+All per-round work is vectorized numpy (no per-edge python loops); the same
+relaxation is exposed as a jittable step for the JAX rank-batched builder
+(`wc_index_batched.py`) and the Pallas `frontier` kernel.
+
+Label entry layout (padded arrays, per vertex):
+  hub_rank[v, i]  rank of the hub. Roots are processed in rank order and only
+                  reach higher-ranked vertices, so entries arrive grouped and
+                  ascending by hub; the self entry (rank[v], 0, "inf") is
+                  appended last and keeps the order.
+  dist[v, i]      w-constrained distance to the hub
+  wlev[v, i]      quality *level* of the minimal path; ``num_levels`` encodes
+                  the infinite quality of self entries.
+Within one (vertex, hub) group both dist and wlev are strictly increasing
+(Thm. 3) — this is what makes O(|L(s)|+|L(t)|) querying possible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .graph import Graph, INF_DIST, expand_frontier_csr
+from .ordering import make_order
+
+
+def _concat_ranges(lengths: np.ndarray) -> np.ndarray:
+    """[0..l0), [0..l1), ... concatenated, vectorized."""
+    lengths = np.asarray(lengths, dtype=np.int64)
+    total = int(lengths.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    cum = np.concatenate([[0], np.cumsum(lengths)[:-1]])
+    return np.arange(total, dtype=np.int64) - np.repeat(cum, lengths)
+
+
+@dataclasses.dataclass
+class WCIndex:
+    order: np.ndarray      # [V] rank -> vertex
+    rank: np.ndarray       # [V] vertex -> rank
+    levels: np.ndarray     # [W] quality values
+    hub_rank: np.ndarray   # [V, cap]
+    dist: np.ndarray       # [V, cap]
+    wlev: np.ndarray       # [V, cap]
+    count: np.ndarray      # [V]
+
+    @property
+    def num_levels(self) -> int:
+        return int(len(self.levels))
+
+    @property
+    def num_nodes(self) -> int:
+        return int(len(self.order))
+
+    @property
+    def label_capacity(self) -> int:
+        return int(self.hub_rank.shape[1])
+
+    def size_entries(self) -> int:
+        return int(self.count.sum())
+
+    def memory_bytes(self) -> int:
+        # 3 int32 per entry + count array (logical size, not padded capacity)
+        return int(self.size_entries() * 12 + self.count.nbytes)
+
+    def labels_of(self, v: int) -> np.ndarray:
+        """[(hub_vertex, dist, wlev)] rows, for inspection/tests."""
+        c = int(self.count[v])
+        return np.stack([self.order[self.hub_rank[v, :c]],
+                         self.dist[v, :c], self.wlev[v, :c]], axis=1)
+
+    def level_of(self, w: float) -> int:
+        return int(np.searchsorted(self.levels, w, side="left"))
+
+    # ------------------------------------------------------------- queries
+    def query_one(self, s: int, t: int, w_level: int) -> int:
+        """Single query: sort-merge over the two hub-sorted label lists
+        (query-efficient implementation, paper Algorithm 5)."""
+        cs, ct = int(self.count[s]), int(self.count[t])
+        hs, ht = self.hub_rank[s, :cs], self.hub_rank[t, :ct]
+        ds, dt = self.dist[s, :cs], self.dist[t, :ct]
+        ws, wt = self.wlev[s, :cs], self.wlev[t, :ct]
+        best = int(INF_DIST)
+        i = j = 0
+        while i < cs and j < ct:
+            if hs[i] < ht[j]:
+                i += 1
+            elif hs[i] > ht[j]:
+                j += 1
+            else:
+                hub = hs[i]
+                # Thm. 3: within the (vertex, hub) group, dist & wlev are both
+                # ascending -> the FIRST entry with wlev >= w has minimal dist.
+                di = dj = -1
+                while i < cs and hs[i] == hub:
+                    if di < 0 and ws[i] >= w_level:
+                        di = int(ds[i])
+                    i += 1
+                while j < ct and ht[j] == hub:
+                    if dj < 0 and wt[j] >= w_level:
+                        dj = int(dt[j])
+                    j += 1
+                if di >= 0 and dj >= 0 and di + dj < best:
+                    best = di + dj
+        return best
+
+    def query_batch(self, s: np.ndarray, t: np.ndarray, w_level: np.ndarray
+                    ) -> np.ndarray:
+        """Vectorized batched queries via masked outer join over padded labels
+        (numpy mirror of the `wcsd_query` Pallas kernel)."""
+        s = np.asarray(s); t = np.asarray(t); w_level = np.asarray(w_level)
+        cap = self.hub_rank.shape[1]
+        col = np.arange(cap)
+        ms = (col[None, :] < self.count[s, None]) & \
+             (self.wlev[s] >= w_level[:, None])
+        mt = (col[None, :] < self.count[t, None]) & \
+             (self.wlev[t] >= w_level[:, None])
+        hub_eq = self.hub_rank[s][:, :, None] == self.hub_rank[t][:, None, :]
+        ok = hub_eq & ms[:, :, None] & mt[:, None, :]
+        dsum = self.dist[s][:, :, None].astype(np.int64) + \
+            self.dist[t][:, None, :]
+        dsum = np.where(ok, dsum, INF_DIST)
+        return np.minimum(dsum.min(axis=(1, 2)), INF_DIST).astype(np.int32)
+
+    # ------------------------------------------------------- device mirrors
+    def padded_device_arrays(self, cap: int | None = None):
+        """(hub_rank, dist, wlev, count) trimmed/padded to ``cap`` columns,
+        ready to ship to device for the Pallas query kernel."""
+        c = int(cap if cap is not None else max(int(self.count.max()), 1))
+        V = self.num_nodes
+        def fit(a, fill):
+            out = np.full((V, c), fill, dtype=np.int32)
+            k = min(c, a.shape[1])
+            out[:, :k] = a[:, :k]
+            return out
+        return (fit(self.hub_rank, -1), fit(self.dist, INF_DIST),
+                fit(self.wlev, -1), self.count.copy())
+
+
+def _ensure_capacity(idx_arrays, count, need):
+    """Grow padded label arrays so every vertex in `need` fits one more."""
+    hub, dist, wlev = idx_arrays
+    cap = hub.shape[1]
+    max_need = int((count[need] + 1).max()) if len(need) else 0
+    if max_need <= cap:
+        return idx_arrays
+    new_cap = max(max_need, cap * 2, 4)
+    V = hub.shape[0]
+    def grow(a, fill):
+        out = np.full((V, new_cap), fill, dtype=a.dtype)
+        out[:, :cap] = a
+        return out
+    return grow(hub, -1), grow(dist, INF_DIST), grow(wlev, -1)
+
+
+def append_self_entries(hub, dist, wlev, count, rank, W):
+    """Append (rank[v], 0, inf) to every vertex, preserving hub-sorted order
+    (rank[v] exceeds every stored hub rank of v by construction)."""
+    V = len(count)
+    allv = np.arange(V, dtype=np.int32)
+    hub, dist, wlev = _ensure_capacity((hub, dist, wlev), count, allv)
+    pos = count[allv]
+    hub[allv, pos] = rank[allv]
+    dist[allv, pos] = 0
+    wlev[allv, pos] = W
+    count = count + 1
+    return hub, dist, wlev, count
+
+
+def build_wc_index(g: Graph, order: np.ndarray | None = None,
+                   ordering: str = "degree", prune: bool = True,
+                   max_roots: int | None = None) -> WCIndex:
+    """Faithful sequential construction (paper Algorithm 3 + §IV-C).
+
+    prune=False disables index-based pruning (isolates what the paper's
+    pruning buys; R-pruning still bounds the BFS so it terminates).
+    max_roots limits the hub set (partial index; tests/benches only) —
+    queries are then only sound for pairs covered by processed hubs.
+    """
+    V, W = g.num_nodes, g.num_levels
+    if order is None:
+        order = make_order(g, ordering)
+    order = np.asarray(order, dtype=np.int32)
+    rank = np.empty(V, dtype=np.int32)
+    rank[order] = np.arange(V, dtype=np.int32)
+
+    cap0 = 8
+    hub = np.full((V, cap0), -1, dtype=np.int32)
+    dist = np.full((V, cap0), INF_DIST, dtype=np.int32)
+    wlev = np.full((V, cap0), -1, dtype=np.int32)
+    count = np.zeros(V, dtype=np.int32)
+
+    # Per-root hub table T[hub_rank, level] = min dist from root to that hub
+    # over paths with quality level >= column. Width W+1: column W == the
+    # infinite quality of self entries. Reset lazily via `touched` lists
+    # (paper's Efficient Initialization — no O(V) clears per root).
+    T = np.full((V, W + 1), INF_DIST, dtype=np.int32)
+    touched_T: list[np.ndarray] = []
+    R = np.full(V, -1, dtype=np.int32)  # best bottleneck level this root
+    touched_R: list[np.ndarray] = []
+
+    n_roots = V if max_roots is None else min(V, max_roots)
+    for k in range(n_roots):
+        root = int(order[k])
+        # ---- build T from L(root) (+ virtual self) -------------------------
+        c = int(count[root])
+        if c:
+            hr, dr, wr = hub[root, :c], dist[root, :c], wlev[root, :c]
+            # entry (hr, d, wl) answers every query level <= wl
+            reps = (wr + 1).astype(np.int64)
+            rows = np.repeat(hr.astype(np.int64), reps)
+            cols = _concat_ranges(reps)
+            np.minimum.at(T.reshape(-1), rows * (W + 1) + cols,
+                          np.repeat(dr, reps))
+            touched_T.append(hr.copy())
+        T[k, :] = 0  # root reaches itself at distance 0, any quality
+        touched_T.append(np.array([k], dtype=np.int32))
+
+        R[root] = W
+        touched_R.append(np.array([root], dtype=np.int32))
+
+        frontier_v = np.array([root], dtype=np.int32)
+        frontier_w = np.array([W], dtype=np.int32)
+        d = 0
+        while len(frontier_v):
+            if d > 0:
+                # ---- prune via query on the partial index (Alg. 3 l.11) ----
+                if prune:
+                    capn = hub.shape[1]
+                    col = np.arange(capn)
+                    m = (col[None, :] < count[frontier_v, None]) & \
+                        (wlev[frontier_v] >= frontier_w[:, None])
+                    hubs = hub[frontier_v]
+                    tv = T[np.clip(hubs, 0, V - 1), frontier_w[:, None]]
+                    cand = np.where(
+                        m, dist[frontier_v].astype(np.int64) + tv, INF_DIST)
+                    survive = cand.min(axis=1) > d
+                    frontier_v = frontier_v[survive]
+                    frontier_w = frontier_w[survive]
+                    if len(frontier_v) == 0:
+                        break
+                # ---- emit labels (Alg. 3 l.12; d=0 self handled later) -----
+                hub, dist, wlev = _ensure_capacity((hub, dist, wlev), count,
+                                                   frontier_v)
+                pos = count[frontier_v]
+                hub[frontier_v, pos] = k
+                dist[frontier_v, pos] = d
+                wlev[frontier_v, pos] = frontier_w
+                count[frontier_v] += 1
+            # ---- expand (Alg. 3 l.13-17) -----------------------------------
+            src_pos, nbrs, lvls = expand_frontier_csr(g, frontier_v)
+            w_new = np.minimum(frontier_w[src_pos], lvls)
+            valid = (rank[nbrs] > k) & (w_new > R[nbrs])
+            nbrs, w_new = nbrs[valid], w_new[valid]
+            if len(nbrs):
+                np.maximum.at(R, nbrs, w_new)
+                cands = np.unique(nbrs)
+                touched_R.append(cands)
+                frontier_v = cands
+                frontier_w = R[cands].copy()
+            else:
+                frontier_v = np.zeros(0, dtype=np.int32)
+                frontier_w = np.zeros(0, dtype=np.int32)
+            d += 1
+        # ---- lazy reset of T and R ------------------------------------------
+        for arr in touched_T:
+            T[arr] = INF_DIST
+        touched_T.clear()
+        for arr in touched_R:
+            R[arr] = -1
+        touched_R.clear()
+
+    hub, dist, wlev, count = append_self_entries(hub, dist, wlev, count,
+                                                 rank, W)
+    return WCIndex(order=order, rank=rank, levels=g.levels.copy(),
+                   hub_rank=hub, dist=dist, wlev=wlev, count=count)

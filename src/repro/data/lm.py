@@ -1,0 +1,38 @@
+"""Synthetic LM data pipeline: a deterministic zipf-ish token stream with
+document structure, packed into fixed-length sequences (causal labels =
+inputs shifted left, -1 at document pads). Deterministic per (seed, step) so
+fault-tolerant restarts can resume the cursor exactly."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class TokenStream:
+    def __init__(self, vocab: int, seq_len: int, batch: int, seed: int = 0,
+                 doc_len_mean: int = 512):
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.batch = batch
+        self.seed = seed
+        self.doc_len_mean = doc_len_mean
+        self.step = 0
+
+    def set_cursor(self, step: int):
+        self.step = step
+
+    def next_batch(self) -> dict:
+        rng = np.random.default_rng((self.seed, self.step))
+        # zipf-ish marginal over the vocab (heavy head like natural text)
+        n = self.batch * (self.seq_len + 1)
+        u = rng.random(n)
+        toks = np.minimum((self.vocab - 1) * u ** 3, self.vocab - 1)
+        toks = toks.astype(np.int32).reshape(self.batch, self.seq_len + 1)
+        # inject EOD boundaries
+        eod = rng.random((self.batch, self.seq_len + 1)) < 1.0 / self.doc_len_mean
+        toks = np.where(eod, 0, toks)
+        self.step += 1
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:].copy()}
+
+    def __iter__(self):
+        while True:
+            yield self.next_batch()

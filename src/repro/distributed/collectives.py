@@ -1,0 +1,42 @@
+"""Collective-schedule helpers for the multi-pod mesh.
+
+hierarchical_psum: two-phase reduction (pod-local psum, then cross-pod) —
+on a real fabric the second phase crosses DCN, so phasing keeps the slow
+hop payload at 1/pod_size of a flat all-reduce over the combined axis.
+
+distributed_lse_decode: decode attention against a KV cache sharded along
+the *sequence* axis without gathering it: each shard computes local
+(max, sum, weighted-V) statistics and merges them with two tiny psums —
+the log-sum-exp trick. Used by the §Perf decode hillclimb.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hierarchical_psum(x, pod_axis: str, inner_axis: str):
+    """psum over (pod_axis x inner_axis) phased: inner first, then pods."""
+    x = jax.lax.psum(x, inner_axis)
+    return jax.lax.psum(x, pod_axis)
+
+
+def distributed_lse_decode(q, k_shard, v_shard, axis: str,
+                           kv_valid_mask=None):
+    """q: [B, Hkv, G, Dh]; k_shard/v_shard: [B, Skv_local, Hkv, Dh] (the
+    local sequence shard). Returns [B, Hkv, G, Dh] attention output,
+    mathematically identical to softmax over the full (gathered) KV.
+    Traffic: 2 scalars-per-(B,H,G) psums + one [B,H,G,Dh] psum instead of an
+    all-gather of the KV shard."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhgd,bshd->bhgs", (q * scale).astype(jnp.float32),
+                        k_shard.astype(jnp.float32))
+    if kv_valid_mask is not None:                  # [B, S_local]
+        logits = jnp.where(kv_valid_mask[:, None, None, :], logits, -1e30)
+    m_loc = logits.max(axis=-1)                                # [B, H, G]
+    m = jax.lax.pmax(m_loc, axis)
+    p = jnp.exp(logits - m[..., None])
+    denom = jax.lax.psum(p.sum(-1), axis)                      # [B, H, G]
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_shard.astype(jnp.float32))
+    out = jax.lax.psum(out, axis)
+    return (out / denom[..., None]).astype(q.dtype)

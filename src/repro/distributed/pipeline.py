@@ -1,0 +1,68 @@
+"""GPipe-style pipeline parallelism over the "pod" mesh axis via shard_map +
+collective-permute.
+
+Each pod holds one contiguous block of layers (one *stage*); microbatches
+stream through the stages with the classic (M + S - 1)-tick schedule. The
+collective_permute boundary transfer is the only cross-pod traffic — the
+point of running PP across pods, where ICI is replaced by slower DCN links.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def gpipe_forward(mesh, stage_weights, microbatches, n_microbatches=None,
+                  stage_fn=None, axis="pod"):
+    """Run microbatches through a pipeline of stages.
+
+    stage_weights: [S, ...] — stage s's weights at index s (sharded over
+      `axis`). Default stage_fn: x -> tanh(x @ w).
+    microbatches: [M, b, d] — M microbatches.
+    Returns [M, b, d] outputs (replicated)."""
+    S = mesh.shape[axis]
+    M = microbatches.shape[0]
+    if stage_fn is None:
+        stage_fn = lambda w, x: jnp.tanh(x @ w)
+
+    def per_stage(w, xs):
+        w = w[0]                                   # local stage weights
+        stage = jax.lax.axis_index(axis)
+        T = M + S - 1
+        recv = jnp.zeros_like(xs[0])
+        outputs = jnp.zeros_like(xs)
+
+        def tick(t, carry):
+            outputs, recv = carry
+            inp = jnp.where(stage == 0, xs[jnp.clip(t, 0, M - 1)], recv)
+            out = stage_fn(w, inp)
+            nxt = jax.lax.ppermute(out, axis,
+                                   [(i, (i + 1) % S) for i in range(S)])
+            idx = t - (S - 1)
+            write = (stage == S - 1) & (idx >= 0)
+            updated = jax.lax.dynamic_update_index_in_dim(
+                outputs, out, jnp.clip(idx, 0, M - 1), 0)
+            outputs = jnp.where(write, updated, outputs)
+            return outputs, nxt
+
+        outputs, _ = jax.lax.fori_loop(0, T, tick, (outputs, recv))
+        # only the last stage holds real outputs; replicate them
+        outputs = jax.lax.psum(
+            outputs * (stage == S - 1).astype(outputs.dtype), axis)
+        return outputs
+
+    w_spec = P(axis) if stage_weights.ndim == 1 else \
+        P(*((axis,) + (None,) * (stage_weights.ndim - 1)))
+    x_spec = P(*((None,) * microbatches.ndim))
+    fn = jax.shard_map(per_stage, mesh=mesh,
+                       in_specs=(w_spec, x_spec),
+                   out_specs=x_spec, check_vma=False)
+    return fn(stage_weights, microbatches)
+
+
+def pipeline_bubble_fraction(n_microbatches: int, n_stages: int) -> float:
+    """GPipe bubble overhead: (S-1) / (M + S - 1)."""
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel for one constrained-BFS relaxation round over a padded
+adjacency (the inner loop of WC-INDEX construction, Algorithm 3 lines 13-17).
+
+Per destination vertex v:
+    cand[v] = max_{u in N(v)} min(Fw[u], level(u, v))     (-1 == inactive)
+    newF[v] = cand[v] if cand[v] > R[v] else -1
+    newR[v] = max(R[v], cand[v])
+
+ops.py pre-gathers Fw over the padded neighbor table ([V, D] = `Fw[nbr]`,
+XLA row gather; on a real TPU deployment this becomes a scalar-prefetch DMA
+— noted in DESIGN.md). The kernel fuses the min/max/compare chain so the
+[V, D] intermediate never round-trips to HBM, and tiles V so the working set
+(3 × [bV, D] int32) sits in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _frontier_kernel(fw_nbr_ref, lvl_ref, r_ref, newf_ref, newr_ref):
+    fw = fw_nbr_ref[...]          # [bV, D] frontier level at each neighbor
+    lvl = lvl_ref[...]            # [bV, D] edge level (-1 = padding)
+    r = r_ref[...]                # [bV, 1]
+    wprime = jnp.minimum(fw, lvl)             # -1 edges / inactive stay -1
+    cand = wprime.max(axis=1, keepdims=True)  # [bV, 1]
+    improved = cand > r
+    newf_ref[...] = jnp.where(improved, cand, -1)
+    newr_ref[...] = jnp.maximum(r, cand)
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
+def frontier_relax_gathered(fw_nbr, lvl_pad, R, *, block_v: int = 256,
+                            interpret: bool = True):
+    """fw_nbr/lvl_pad: [V, D] int32, R: [V] int32 -> (newF [V], newR [V])."""
+    V, D = fw_nbr.shape
+    grid = (V // block_v,)
+    newf, newr = pl.pallas_call(
+        _frontier_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_v, D), lambda i: (i, 0)),
+            pl.BlockSpec((block_v, D), lambda i: (i, 0)),
+            pl.BlockSpec((block_v, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_v, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_v, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((V, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((V, 1), jnp.int32)],
+        interpret=interpret,
+    )(fw_nbr, lvl_pad, R[:, None])
+    return newf[:, 0], newr[:, 0]

@@ -1,0 +1,95 @@
+"""Public jit'd wrappers for the Pallas kernels: shape padding, feasibility
+masking, and dispatch (kernel vs jnp fallback). Everything here is safe to
+call from traced code."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import cin_fuse as _cin
+from . import frontier as _frontier
+from . import ref as _ref
+from . import wcsd_query as _wq
+
+DEV_INF = 1 << 29  # python int: safe to close over in pallas kernels
+INF_DIST = 1 << 30
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return int(-(-x // m) * m)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def wcsd_query(hub, dist, wlev, count, s, t, w_level, *,
+               interpret: bool = True, use_kernel: bool = True):
+    """Batched WCSD queries against padded device labels.
+
+    hub/dist/wlev: [V, L] int32, count: [V], queries s/t/w_level: [B].
+    Returns [B] int32 distances (INF_DIST when no feasible path)."""
+    B = s.shape[0]
+    L = hub.shape[1]
+    col = jnp.arange(L)
+
+    def side(v):
+        m = (col[None, :] < count[v, None]) & (wlev[v] >= w_level[:, None])
+        d = jnp.where(m, jnp.minimum(dist[v], DEV_INF), DEV_INF)
+        return hub[v], d
+
+    hs, ds = side(s)
+    ht, dt = side(t)
+    if use_kernel:
+        Bp = _ceil_to(max(B, 1), 8)
+        Lp = _ceil_to(L, 128)
+        pad_b, pad_l = Bp - B, Lp - L
+        # hub pad: -1 on s side, -2 on t side -> never equal
+        hs = jnp.pad(hs, ((0, pad_b), (0, pad_l)), constant_values=-1)
+        ht = jnp.pad(ht, ((0, pad_b), (0, pad_l)), constant_values=-2)
+        ds = jnp.pad(ds, ((0, pad_b), (0, pad_l)), constant_values=DEV_INF)
+        dt = jnp.pad(dt, ((0, pad_b), (0, pad_l)), constant_values=DEV_INF)
+        best = _wq.wcsd_query_gathered(hs, ds, ht, dt,
+                                       interpret=interpret)[:B]
+    else:
+        best = _ref.wcsd_query_gathered_ref(hs, ds, ht, dt)
+    return jnp.where(best >= DEV_INF, INF_DIST, best).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def frontier_relax(nbr_pad, lvl_pad, Fw, R, *, interpret: bool = True,
+                   use_kernel: bool = True):
+    """One constrained-relaxation round over a padded adjacency.
+
+    nbr_pad/lvl_pad: [V, D] (pad: nbr=-1, lvl=-1); Fw/R: [V] int32.
+    Returns (newF, newR), both [V]."""
+    fw_nbr = Fw[jnp.clip(nbr_pad, 0, Fw.shape[0] - 1)]
+    fw_nbr = jnp.where(nbr_pad >= 0, fw_nbr, -1)
+    if not use_kernel:
+        return _ref.frontier_relax_gathered_ref(fw_nbr, lvl_pad, R)
+    V, D = fw_nbr.shape
+    bV = 256 if V % 256 == 0 else (64 if V % 64 == 0 else 8)
+    Vp = _ceil_to(V, bV)
+    if Vp != V:
+        fw_nbr = jnp.pad(fw_nbr, ((0, Vp - V), (0, 0)), constant_values=-1)
+        lvl_pad = jnp.pad(lvl_pad, ((0, Vp - V), (0, 0)), constant_values=-1)
+        R = jnp.pad(R, (0, Vp - V), constant_values=jnp.int32(1 << 20))
+    newf, newr = _frontier.frontier_relax_gathered(
+        fw_nbr, lvl_pad, R, block_v=bV, interpret=interpret)
+    return newf[:V], newr[:V]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel",
+                                             "block_b"))
+def cin_layer(x1, x0, w, *, interpret: bool = True, use_kernel: bool = True,
+              block_b: int = 8):
+    """Fused CIN layer; pads batch to the block size."""
+    if not use_kernel:
+        return _ref.cin_layer_ref(x1, x0, w)
+    B = x1.shape[0]
+    Bp = _ceil_to(max(B, 1), block_b)
+    if Bp != B:
+        x1 = jnp.pad(x1, ((0, Bp - B), (0, 0), (0, 0)))
+        x0 = jnp.pad(x0, ((0, Bp - B), (0, 0), (0, 0)))
+    out = _cin.cin_layer(x1, x0, w, block_b=block_b, interpret=interpret)
+    return out[:B]

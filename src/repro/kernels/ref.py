@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel in this package. Tests sweep
+shapes/dtypes and assert_allclose kernel-vs-oracle (exact for the int32
+kernels)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DEV_INF = 1 << 29  # python int: safe to close over in pallas kernels
+
+
+def wcsd_query_gathered_ref(hs, ds, ht, dt):
+    """[B, L] masked label rows -> [B] min-plus over equal hubs."""
+    eq = hs[:, :, None] == ht[:, None, :]
+    dsum = ds[:, :, None] + dt[:, None, :]
+    return jnp.where(eq, dsum, DEV_INF).min(axis=(1, 2))
+
+
+def frontier_relax_gathered_ref(fw_nbr, lvl_pad, R):
+    wprime = jnp.minimum(fw_nbr, lvl_pad)
+    cand = wprime.max(axis=1)
+    newf = jnp.where(cand > R, cand, -1)
+    newr = jnp.maximum(R, cand)
+    return newf, newr
+
+
+def cin_layer_ref(x1, x0, w):
+    """out[b,k,d] = sum_{h,m} w[k,h,m] x1[b,h,d] x0[b,m,d] (fp32 accum)."""
+    return jnp.einsum("bhd,bmd,khm->bkd", x1.astype(jnp.float32),
+                      x0.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """Plain softmax attention oracle, GQA-aware.
+
+    q: [B, Hq, Tq, Dh], k/v: [B, Hkv, Tk, Dh]; Hq % Hkv == 0."""
+    B, Hq, Tq, Dh = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = (Dh ** -0.5) if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Tq, Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    if causal:
+        Tk = k.shape[2]
+        mask = jnp.arange(Tq)[:, None] + (Tk - Tq) >= jnp.arange(Tk)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return out.reshape(B, Hq, Tq, Dh).astype(q.dtype)

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel for batched WCSD 2-hop label intersection (the paper's
+Algorithm 5 hot path, restructured for the MXU/VPU).
+
+CPU Alg. 5 is a pointer sort-merge — hostile to SIMD. On TPU we compute, per
+query, a masked outer join over the two padded label rows:
+
+    best = min_{i,j} [ hub_s[i] == hub_t[j] ] * (d_s[i] + d_t[j])
+           subject to w_s[i] >= w, w_t[j] >= w
+
+The [B, L, L] compare volume never touches HBM: the kernel tiles the t-side
+label axis, keeps the s-side row resident in VMEM, and accumulates the
+min-plus reduction in a [bB, 1] output block. XLA on the same computation
+materializes the [B, L, L] intermediate (see benchmarks/bench_kernels.py).
+
+Feasibility masking (w >= threshold, entry in-bounds) is pre-applied by
+ops.py by overwriting infeasible distances with DEV_INF, so the kernel body
+is a pure equality-gated min-plus — one VPU compare + add + min per cell.
+
+Layout contract (from core.query.DeviceQueryEngine / WCIndex):
+  label rows are hub-sorted, L padded to a multiple of 128 with hub = -1,
+  dist = DEV_INF; pad cells can never win the min because DEV_INF + DEV_INF
+  < int32 max yet > any real distance sum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEV_INF = 1 << 29  # python int: safe to close over in pallas kernels
+
+
+def _query_kernel(hs_ref, ds_ref, ht_ref, dt_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, DEV_INF)
+
+    hs = hs_ref[...]            # [bB, L]   (s-side: full label row)
+    ds = ds_ref[...]
+    ht = ht_ref[...]            # [bB, bLt] (t-side tile)
+    dt = dt_ref[...]
+    eq = hs[:, :, None] == ht[:, None, :]            # [bB, L, bLt]
+    dsum = ds[:, :, None] + dt[:, None, :]
+    best = jnp.where(eq, dsum, DEV_INF).min(axis=(1, 2))
+    out_ref[...] = jnp.minimum(out_ref[...], best[:, None])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "block_lt", "interpret"))
+def wcsd_query_gathered(hs, ds, ht, dt, *, block_b: int = 8,
+                        block_lt: int = 128, interpret: bool = True):
+    """Masked-distance form: [B, L] gathered label rows -> [B] best sum.
+
+    ds/dt must already hold DEV_INF at infeasible entries.
+    B % block_b == 0, L % block_lt == 0 (ops.py pads).
+    """
+    B, L = hs.shape
+    grid = (B // block_b, L // block_lt)
+    out = pl.pallas_call(
+        _query_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, L), lambda i, j: (i, 0)),    # hs
+            pl.BlockSpec((block_b, L), lambda i, j: (i, 0)),    # ds
+            pl.BlockSpec((block_b, block_lt), lambda i, j: (i, j)),  # ht
+            pl.BlockSpec((block_b, block_lt), lambda i, j: (i, j)),  # dt
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        interpret=interpret,
+    )(hs, ds, ht, dt)
+    return out[:, 0]

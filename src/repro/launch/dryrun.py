@@ -1,0 +1,135 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (including repro.*):
+# jax locks the device count at first initialization.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes — (16,16)=256 chips single-pod and
+(2,16,16)=512 chips multi-pod — and record memory/cost/collective analysis
+for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all          # full 40-cell matrix x 2
+                                               # meshes, one subprocess per
+                                               # cell (bounds compile RAM)
+"""
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str) -> dict:
+    import jax
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import hlo_analysis
+
+    mod = get_arch(arch)
+    cell = mod.make_cell(shape, multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    rec = {"arch": arch, "shape": shape, "kind": cell.kind,
+           "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips,
+           "meta": {k: v for k, v in cell.meta.items()}}
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+    rec.update(
+        lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+        memory=dict(
+            argument_bytes=int(ma.argument_size_in_bytes),
+            output_bytes=int(ma.output_size_in_bytes),
+            temp_bytes=int(ma.temp_size_in_bytes),
+            alias_bytes=int(ma.alias_size_in_bytes),
+            peak_bytes=int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                           + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+        ),
+        xla_cost=dict(flops=float(ca.get("flops", 0.0)),
+                      bytes_accessed=float(ca.get("bytes accessed", 0.0))),
+        hlo=hlo_analysis.analyze(txt, default_group=16),
+        hlo_chars=len(txt),
+    )
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape}__{rec['mesh'].replace('x', '-')}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        from repro.configs import ARCHS, get_arch
+        jobs = []
+        for arch in ARCHS:
+            for shape in get_arch(arch).SHAPES:
+                for mesh in (["single", "multi"] if args.mesh == "both"
+                             else [args.mesh]):
+                    jobs.append((arch, shape, mesh))
+        failures = []
+        for i, (arch, shape, mesh) in enumerate(jobs):
+            mtag = "2-16-16" if mesh == "multi" else "16-16"
+            fname = os.path.join(args.out, f"{arch}__{shape}__{mtag}.json")
+            if args.skip_existing and os.path.exists(fname):
+                print(f"[{i+1}/{len(jobs)}] skip {arch} {shape} {mesh}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh,
+                   "--out", args.out]
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               env={**os.environ})
+            ok = r.returncode == 0
+            print(f"[{i+1}/{len(jobs)}] {arch:18s} {shape:14s} {mesh:6s} "
+                  f"{'OK' if ok else 'FAIL'} {time.time()-t0:6.1f}s",
+                  flush=True)
+            if not ok:
+                failures.append((arch, shape, mesh))
+                print(r.stdout[-2000:])
+                print(r.stderr[-4000:])
+        print(f"done: {len(jobs) - len(failures)}/{len(jobs)} OK")
+        if failures:
+            print("FAILURES:", failures)
+            sys.exit(1)
+        return
+
+    for mesh in (["single", "multi"] if args.mesh == "both"
+                 else [args.mesh]):
+        try:
+            rec = run_cell(args.arch, args.shape, mesh == "multi", args.out)
+            m = rec["memory"]
+            print(f"{rec['arch']} {rec['shape']} {rec['mesh']}: compile "
+                  f"{rec['compile_s']}s peak/device "
+                  f"{m['peak_bytes']/2**30:.2f} GiB, hlo_flops "
+                  f"{rec['hlo']['flops']:.3e}, coll "
+                  f"{rec['hlo']['collective_bytes_total']/2**20:.1f} MiB")
+        except Exception:
+            traceback.print_exc()
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,281 @@
+"""Post-optimization HLO text analysis for the roofline.
+
+XLA's compiled.cost_analysis() counts a while-loop body ONCE, regardless of
+trip count (verified empirically) — useless for scan-over-layers programs.
+This module re-derives per-device totals from compiled.as_text():
+
+  * computation graph (ENTRY -> while bodies/conds -> fused calls), with a
+    per-computation execution multiplier = product of enclosing loop trip
+    counts (trips parsed from each loop condition's largest literal);
+  * FLOPs: dot/convolution ops only (MXU convention — elementwise VPU work
+    excluded, as in standard MFU accounting), 2 * result_elems * K;
+  * HBM bytes: sum of (result + operand) bytes over top-level ops (fusion
+    internals excluded — they live in registers/VMEM);
+  * collective bytes per op kind (all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute); reduce-scatter payload is scaled by
+    its replica-group size (the result shape is the post-scatter shard).
+
+All shapes in a post-SPMD module are per-device shards, so every total here
+is per-chip. Known approximations are documented in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "iota"}
+
+
+def shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += _DTYPE_BYTES[dt] * n
+    return total
+
+
+def shape_elems_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 1, []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    n = 1
+    for d in dims:
+        n *= d
+    return n, dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    type_str: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    defs: dict  # op name -> type string
+
+
+def _parse_type(rest: str):
+    """rest starts right after '= '. Returns (type_str, remainder)."""
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rest[: i + 1], rest[i + 1:].lstrip()
+        return rest, ""
+    sp = rest.find(" ")
+    if sp < 0:
+        return rest, ""
+    return rest[:sp], rest[sp + 1:]
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->")
+
+
+def parse_module(text: str) -> tuple[dict, str]:
+    """Returns ({name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if (not line.startswith(" ") and line.rstrip().endswith("{")
+                and "->" in line and not line.startswith("HloModule")):
+            s = line.strip()
+            is_entry = s.startswith("ENTRY")
+            if is_entry:
+                s = s[len("ENTRY"):].strip()
+            m = re.match(r"%?([\w\.\-]+)\s*\(", s)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                if is_entry:
+                    entry = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        type_str, remainder = _parse_type(rest)
+        opm = re.match(r"([\w\-]+)", remainder)
+        opcode = opm.group(1) if opm else "unknown"
+        cur.ops.append(Op(name, opcode, type_str, remainder))
+        cur.defs[name] = type_str
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+def _operands(op: Op) -> list[str]:
+    """Operand names from the first (...) after the opcode."""
+    start = op.rest.find("(")
+    if start < 0:
+        return []
+    depth = 0
+    for i in range(start, len(op.rest)):
+        if op.rest[i] == "(":
+            depth += 1
+        elif op.rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                inner = op.rest[start + 1:i]
+                return re.findall(r"%([\w\.\-]+)", inner)
+    return []
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for op in cond.ops:
+        for c in re.findall(r"constant\((\d+)\)", op.rest):
+            v = int(c)
+            if 1 < v <= 10_000_000:
+                best = max(best, v)
+    return best
+
+
+def _called(op: Op) -> dict[str, str]:
+    """Edges from attributes: kind -> computation name."""
+    out = {}
+    for attr, kind in (("body", "body"), ("condition", "cond"),
+                       ("calls", "call"), ("to_apply", "apply"),
+                       ("true_computation", "call"),
+                       ("false_computation", "call")):
+        m = re.search(attr + r"=%?([\w\.\-]+)", op.rest)
+        if m:
+            out[m.group(1)] = kind
+    m = re.search(r"branch_computations=\{([^}]*)\}", op.rest)
+    if m:
+        for name in re.findall(r"%([\w\.\-]+)", m.group(1)):
+            out[name] = "call"
+    return out
+
+
+def _group_size(op: Op, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", op.rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def analyze(text: str, default_group: int = 16) -> dict:
+    comps, entry = parse_module(text)
+    # multipliers: (computation, counts_bytes) BFS from entry
+    mult: dict[str, float] = defaultdict(float)
+    bytes_on: dict[str, bool] = defaultdict(bool)
+    mult[entry] = 1.0
+    bytes_on[entry] = True
+    stack = [entry]
+    seen_edges = set()
+    while stack:
+        cname = stack.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for op in comp.ops:
+            if op.opcode in ("while", "fusion", "call", "conditional",
+                            "reduce", "scatter", "reduce-window", "sort",
+                            "map", "select-and-scatter", "all-reduce",
+                            "reduce-scatter", "custom-call"):
+                for child, kind in _called(op).items():
+                    if kind == "apply":
+                        continue
+                    trips = 1
+                    cb = False
+                    if kind == "body":
+                        condname = _called(op).get
+                        # find the matching condition computation
+                        cm = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+                        trips = _trip_count(comps[cm.group(1)]) \
+                            if cm and cm.group(1) in comps else 1
+                        cb = bytes_on[cname]
+                    elif kind == "cond":
+                        cb = False
+                    else:
+                        cb = False  # fusion internals: no HBM bytes
+                    edge = (cname, child)
+                    mult[child] += m * trips
+                    bytes_on[child] = bytes_on[child] or cb
+                    if edge not in seen_edges:
+                        seen_edges.add(edge)
+                        stack.append(child)
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll = defaultdict(float)
+    coll_count = defaultdict(int)
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            if op.opcode in ("dot", "convolution"):
+                n_out, _ = shape_elems_dims(op.type_str)
+                # contracted size: lhs shape at lhs_contracting_dims
+                ops_ = _operands(op)
+                k = 1
+                mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+                if mm and ops_:
+                    lhs_type = comp.defs.get(ops_[0], "")
+                    _, ldims = shape_elems_dims(lhs_type)
+                    for d in (mm.group(1).split(",") if mm.group(1) else []):
+                        di = int(d)
+                        if di < len(ldims):
+                            k *= ldims[di]
+                flops += m * 2.0 * n_out * k
+            base = op.opcode.replace("-start", "")
+            if base in _COLLECTIVES and not op.opcode.endswith("-done"):
+                b = shape_bytes(op.type_str)
+                if base == "reduce-scatter":
+                    b *= _group_size(op, default_group)
+                coll[base] += m * b
+                coll_count[base] += 1
+            if bytes_on.get(cname) and op.opcode not in _FREE_OPS:
+                b = shape_bytes(op.type_str)
+                for o in _operands(op):
+                    b += shape_bytes(comp.defs.get(o, ""))
+                hbm_bytes += m * b
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": dict(coll),
+        "collective_bytes_total": float(sum(coll.values())),
+        "collective_counts": dict(coll_count),
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,31 @@
+"""Production mesh definition.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model") — a TPU v5e pod.
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis carries cross-pod data parallelism (and the pipeline axis for
+the GPipe driver). A FUNCTION, not a module constant: importing this module
+must never touch jax device state (smoke tests see 1 device; only
+launch/dryrun.py sets xla_force_host_platform_device_count)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def batch_axes(multi_pod: bool):
+    """Mesh axes that shard the global batch / edge / query dimension."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_BW_PER_LINK = 50e9         # bytes/s per link (~ per assignment)
+ICI_LINKS = 4                  # 2D torus in-pod links per chip

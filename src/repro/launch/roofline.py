@@ -1,0 +1,112 @@
+"""Roofline aggregation: read the dry-run JSONs and derive, per (arch x
+shape x mesh):
+
+  compute    = HLO_FLOPs / peak_FLOPs_per_chip          (197 TF/s bf16 v5e)
+  memory     = HLO_bytes / HBM_bw_per_chip              (819 GB/s)
+  collective = collective_bytes / ICI_link_bw           (50 GB/s, 1 link
+               conservative; shapes in a post-SPMD module are per-chip, so
+               no further division by chip count)
+
+All terms are seconds-per-step per chip; the max identifies the bottleneck.
+MODEL_FLOPS (6*N*D / 2*N*D analytic) over HLO_FLOPs*chips measures how much
+compiled compute is useful (remat/dispatch overhead shows up here).
+
+Usage: python -m repro.launch.roofline --dir experiments/dryrun [--csv out]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def load_records(d: str) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def roofline_row(rec: dict) -> dict:
+    hlo = rec["hlo"]
+    chips = rec["chips"]
+    t_c = hlo["flops"] / PEAK_FLOPS
+    t_m = hlo["hbm_bytes"] / HBM_BW
+    t_x = hlo["collective_bytes_total"] / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    mf = rec["meta"].get("model_flops", 0.0)
+    useful = mf / (hlo["flops"] * chips) if hlo["flops"] else 0.0
+    peak_gib = rec["memory"]["peak_bytes"] / 2**30
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"], "chips": chips,
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "bottleneck": bottleneck,
+        "step_s": max(terms.values()),
+        "model_flops": mf,
+        "hlo_flops_chip": hlo["flops"],
+        "useful_flops_frac": useful,
+        # roofline fraction: achievable-compute share of the bound step time
+        "roofline_frac": (t_c / max(terms.values())) if max(
+            terms.values()) else 0.0,
+        "peak_gib": peak_gib,
+        "fits_16g": peak_gib <= 16.0,
+        "coll_breakdown": hlo["collective_bytes"],
+        "compile_s": rec["compile_s"],
+    }
+
+
+def fmt_table(rows: list[dict], mesh: str = "16x16") -> str:
+    rows = [r for r in rows if r["mesh"] == mesh]
+    hdr = (f"| arch | shape | kind | compute s | memory s | collective s | "
+           f"bound | roofline frac | useful FLOPs | peak GiB | fits |")
+    sep = "|" + "---|" * 11
+    out = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | {r['bottleneck']} | "
+            f"{r['roofline_frac']:.2f} | {r['useful_flops_frac']:.2f} | "
+            f"{r['peak_gib']:.2f} | {'y' if r['fits_16g'] else 'NO'} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--csv")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = [roofline_row(r) for r in load_records(args.dir)]
+    print(fmt_table(rows, args.mesh))
+    if args.csv:
+        import csv
+        keys = [k for k in rows[0] if k != "coll_breakdown"]
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys, extrasaction="ignore")
+            w.writeheader()
+            w.writerows(rows)
+    # summary: interesting hillclimb candidates
+    single = [r for r in rows if r["mesh"] == args.mesh]
+    worst = min(single, key=lambda r: r["roofline_frac"])
+    collb = max(single, key=lambda r: r["collective_s"])
+    print(f"\nworst roofline fraction: {worst['arch']}x{worst['shape']} "
+          f"({worst['roofline_frac']:.3f})")
+    print(f"most collective-bound:  {collb['arch']}x{collb['shape']} "
+          f"({collb['collective_s']:.3e}s)")
+    over = [r for r in single if not r["fits_16g"]]
+    if over:
+        print("over 16 GiB:", [(r["arch"], r["shape"],
+                                round(r["peak_gib"], 1)) for r in over])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Attention: GQA/MHA with RoPE, causal or decode masking, optional sliding
+window. Pure-jnp reference path used by training, prefill and decode; the
+Pallas flash kernel (kernels/flash_attn.py) is an optional drop-in for real
+TPU runs (kernels never lower in the CPU dry-run)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gqa_attention(q, k, v, *, causal: bool = True, q_offset=0,
+                  kv_valid_len=None, window: int | None = None,
+                  q_chunk: int | None = 512):
+    """q: [B, T, Hq, Dh]; k/v: [B, S, Hkv, Dh]; Hq % Hkv == 0.
+
+    q_offset: absolute position of q[0] (decode: the cache write position).
+    kv_valid_len: mask kv positions >= this (decode with preallocated cache).
+    window: sliding-window size (attend to the last `window` positions).
+    q_chunk: scan over query blocks so the [T, S] score matrix never
+      materializes beyond one block (exact math — per-block full softmax;
+      the XLA analogue of the flash-attention memory profile).
+    """
+    T = q.shape[1]
+    if q_chunk is not None and T > q_chunk and T % q_chunk == 0:
+        nb = T // q_chunk
+
+        def blk(carry, qb_off):
+            qb = jax.lax.dynamic_slice_in_dim(q, qb_off, q_chunk, axis=1)
+            ob = _gqa_attention_dense(qb, k, v, causal=causal,
+                                      q_offset=q_offset + qb_off,
+                                      kv_valid_len=kv_valid_len,
+                                      window=window)
+            return carry, ob
+
+        _, outs = jax.lax.scan(blk, None, q_chunk * jnp.arange(nb))
+        # outs: [nb, B, q_chunk, Hq, Dh] -> [B, T, Hq, Dh]
+        return jnp.moveaxis(outs, 0, 1).reshape(q.shape)
+    return _gqa_attention_dense(q, k, v, causal=causal, q_offset=q_offset,
+                                kv_valid_len=kv_valid_len, window=window)
+
+
+def _gqa_attention_dense(q, k, v, *, causal: bool = True, q_offset=0,
+                         kv_valid_len=None, window: int | None = None):
+    B, T, Hq, Dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = Dh ** -0.5
+    qf = (q * scale).astype(jnp.bfloat16).reshape(B, T, Hkv, G, Dh)
+    logits = jnp.einsum("bthgd,bshd->bhgts", qf, k.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+    qpos = q_offset + jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    if kv_valid_len is not None:
+        mask &= kpos < kv_valid_len
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", p.astype(jnp.bfloat16),
+                     v.astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, T, Hq, Dh).astype(q.dtype)

@@ -1,0 +1,92 @@
+"""Shared model building blocks: init, norms, RoPE, MLPs.
+
+Convention: models are pure-function + pytree-of-arrays (no flax). Each
+model module exposes
+    init_params(cfg, key)        -> params pytree (fp32 master copies)
+    param_shardings(cfg, axes)   -> matching pytree of PartitionSpec
+    abstract_params(cfg)         -> matching pytree of ShapeDtypeStruct
+so the multi-pod dry-run can lower without allocating anything.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def trunc_normal(key, shape, scale=1.0, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    std = scale / np.sqrt(max(fan_in, 1))
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def split_keys(key, names):
+    ks = jax.random.split(key, len(names))
+    return dict(zip(names, ks))
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def rope_angles(positions, d_head, theta=10000.0, dtype=jnp.float32):
+    """positions: [...,] int -> (sin, cos) of shape [..., d_head//2]."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang).astype(dtype), jnp.cos(ang).astype(dtype)
+
+
+def apply_rope(x, sin, cos):
+    """x: [..., T, H, Dh]; sin/cos: [..., T, Dh//2] broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """LLaMA-style gated MLP. x: [..., D]."""
+    g = jax.nn.silu(x @ w_gate)
+    return (g * (x @ w_up)) @ w_down
+
+
+def mlp(params_prefix, x, ws, act=jax.nn.relu):
+    """Plain MLP given list of (w, b)."""
+    del params_prefix
+    for i, (w, b) in enumerate(ws):
+        x = x @ w + b
+        if i + 1 < len(ws):
+            act_x = act(x)
+            x = act_x
+    return x
+
+
+def cross_entropy_loss(logits, labels, z_loss=0.0):
+    """Token-mean CE; labels < 0 are masked.
+
+    Sharding-friendly: the label log-prob is an iota-mask reduction (not
+    take_along_axis), so a vocab-sharded logits tensor reduces locally per
+    shard + one tiny cross-shard sum instead of an all-gather of [B, S, V].
+    Reductions run in fp32 off bf16 logits (no fp32 [B, S, V] temp)."""
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_c = jnp.maximum(labels, 0)
+    V = logits.shape[-1]
+    m = jax.lax.stop_gradient(logits.max(axis=-1)).astype(jnp.float32)
+    ex = jnp.exp(logits.astype(jnp.float32) - m[..., None])
+    lse = m + jnp.log(ex.sum(axis=-1))
+    onehot = (jnp.arange(V)[None, None, :] == labels_c[..., None])
+    ll = jnp.where(onehot, logits.astype(jnp.float32), 0.0).sum(-1)
+    loss = (lse - ll) * mask
+    if z_loss:
+        loss = loss + z_loss * (lse * mask) ** 2
+    return loss.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def count_params(tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))

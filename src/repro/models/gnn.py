@@ -1,0 +1,239 @@
+"""GNN architectures over flat edge lists: GIN, PNA, GatedGCN.
+
+Message passing is built on jax.ops.segment_sum / segment_max over an
+edge-index (JAX has no CSR SpMM — the scatter/gather IS the system, per the
+assignment). This is deliberately the same primitive as the WC-INDEX
+constrained-BFS relaxation (core/wc_index_batched.py) — the paper's
+technique and the GNN substrate share one sparse backend.
+
+Input format (GraphBatch, a dict of arrays):
+  feat        [N, F]  node features
+  edges_src   [E]     source node ids (symmetrized)
+  edges_dst   [E]     destination node ids
+  edge_feat   [E, Fe] optional edge features (GatedGCN)
+  labels      [N] (node tasks, -1 = unlabeled) or [G] (graph tasks)
+  graph_id    [N]     for batched small graphs (molecule shape)
+  n_graphs    static  number of graphs in the batch
+
+Distribution: the edge axis shards over ("pod","data"); node states are
+replicated, so per-shard partial aggregates meet in one all-reduce per
+layer (see EXPERIMENTS.md §Roofline — these cells are collective-bound,
+and §Perf shows the reduce-scatter variant).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import cross_entropy_loss, trunc_normal
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str                 # gin | pna | gatedgcn
+    n_layers: int
+    d_hidden: int
+    d_feat: int
+    n_classes: int
+    graph_level: bool = False     # graph classification (molecule shape)
+    d_edge: int = 0
+    learnable_eps: bool = True    # GIN-eps
+    compute_dtype: str = "float32"
+
+
+# --------------------------------------------------------------- primitives
+def segment_softmax(scores, seg, num_segments):
+    m = jax.ops.segment_max(scores, seg, num_segments=num_segments)
+    e = jnp.exp(scores - m[seg])
+    z = jax.ops.segment_sum(e, seg, num_segments=num_segments)
+    return e / (z[seg] + 1e-9)
+
+
+def degree(edges_dst, num_nodes):
+    return jax.ops.segment_sum(jnp.ones_like(edges_dst, jnp.float32),
+                               edges_dst, num_segments=num_nodes)
+
+
+# ------------------------------------------------------------------- layers
+def gin_layer(h, lp, src, dst, N):
+    agg = jax.ops.segment_sum(h[src], dst, num_segments=N)
+    z = (1.0 + lp["eps"]) * h + agg
+    z = jax.nn.relu(z @ lp["w1"] + lp["b1"])
+    return z @ lp["w2"] + lp["b2"]
+
+
+def pna_layer(h, lp, src, dst, N, deg_log_mean):
+    msg = h[src] @ lp["w_msg"]
+    d = degree(dst, N)
+    s = jax.ops.segment_sum(msg, dst, num_segments=N)
+    mean = s / jnp.maximum(d, 1.0)[:, None]
+    mx = jax.ops.segment_max(msg, dst, num_segments=N)
+    mx = jnp.where(d[:, None] > 0, mx, 0.0)
+    mn = -jax.ops.segment_max(-msg, dst, num_segments=N)
+    mn = jnp.where(d[:, None] > 0, mn, 0.0)
+    sq = jax.ops.segment_sum(msg * msg, dst, num_segments=N)
+    var = jnp.maximum(sq / jnp.maximum(d, 1.0)[:, None] - mean * mean, 0.0)
+    std = jnp.sqrt(var + 1e-5)
+    aggs = jnp.concatenate([mean, mx, mn, std], axis=-1)        # [N, 4d]
+    logd = jnp.log1p(d)[:, None]
+    amp = logd / deg_log_mean
+    att = deg_log_mean / jnp.maximum(logd, 1e-5)
+    scaled = jnp.concatenate([aggs, aggs * amp, aggs * att], -1)  # [N, 12d]
+    return jax.nn.relu(jnp.concatenate([h, scaled], -1) @ lp["w_out"]
+                       + lp["b_out"])
+
+
+def gatedgcn_layer(h, e, lp, src, dst, N):
+    hi, hj = h[dst], h[src]
+    e_new = hi @ lp["A"] + hj @ lp["B"] + e @ lp["C"]
+    eta = jax.nn.sigmoid(e_new)
+    denom = jax.ops.segment_sum(eta, dst, num_segments=N) + 1e-6
+    msg = eta * (hj @ lp["V"])
+    agg = jax.ops.segment_sum(msg, dst, num_segments=N) / denom
+    h_new = h @ lp["U"] + agg
+    # residual + layernorm
+    def ln(x, g, b):
+        mu = x.mean(-1, keepdims=True)
+        v = ((x - mu) ** 2).mean(-1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(v + 1e-5) * g + b
+    h_out = h + jax.nn.relu(ln(h_new, lp["ln_h_g"], lp["ln_h_b"]))
+    e_out = e + jax.nn.relu(ln(e_new, lp["ln_e_g"], lp["ln_e_b"]))
+    return h_out, e_out
+
+
+# --------------------------------------------------------------- param defs
+def param_defs(cfg: GNNConfig) -> dict:
+    L, d = cfg.n_layers, cfg.d_hidden
+    defs = {
+        "enc_w": ((cfg.d_feat, d), P(None, None)),
+        "enc_b": ((d,), P(None)),
+        "head_w": ((d, cfg.n_classes), P(None, None)),
+        "head_b": ((cfg.n_classes,), P(None)),
+    }
+    if cfg.kind == "gin":
+        defs.update({
+            "layers.eps": ((L,), P(None)),
+            "layers.w1": ((L, d, d), P(None, None, None)),
+            "layers.b1": ((L, d), P(None, None)),
+            "layers.w2": ((L, d, d), P(None, None, None)),
+            "layers.b2": ((L, d), P(None, None)),
+        })
+    elif cfg.kind == "pna":
+        defs.update({
+            "layers.w_msg": ((L, d, d), P(None, None, None)),
+            "layers.w_out": ((L, 13 * d, d), P(None, None, None)),
+            "layers.b_out": ((L, d), P(None, None)),
+        })
+    elif cfg.kind == "gatedgcn":
+        for m in ("A", "B", "C", "U", "V"):
+            defs[f"layers.{m}"] = ((L, d, d), P(None, None, None))
+        for m in ("ln_h_g", "ln_h_b", "ln_e_g", "ln_e_b"):
+            defs[f"layers.{m}"] = ((L, d), P(None, None))
+        defs["edge_enc_w"] = ((max(cfg.d_edge, 1), d), P(None, None))
+        defs["edge_enc_b"] = ((d,), P(None))
+    else:
+        raise ValueError(cfg.kind)
+    return defs
+
+
+def _nest(flat: dict) -> dict:
+    out: dict = {}
+    for path, v in flat.items():
+        parts = path.split(".")
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return out
+
+
+def init_params(cfg: GNNConfig, key) -> dict:
+    defs = param_defs(cfg)
+    keys = jax.random.split(key, len(defs))
+    flat = {}
+    for (path, (shape, _)), k in zip(sorted(defs.items()), keys):
+        if path.endswith(("_b", ".eps", "b1", "b2", "b_out")) or "ln_" in path:
+            base = jnp.ones(shape) if path.endswith("_g") else jnp.zeros(shape)
+            flat[path] = base
+        else:
+            flat[path] = trunc_normal(k, shape)
+    return _nest(flat)
+
+
+def abstract_params(cfg: GNNConfig) -> dict:
+    return _nest({p: jax.ShapeDtypeStruct(s, jnp.float32)
+                  for p, (s, _) in param_defs(cfg).items()})
+
+
+def param_shardings(cfg: GNNConfig) -> dict:
+    return _nest({p: spec for p, (s, spec) in param_defs(cfg).items()})
+
+
+# ------------------------------------------------------------------ forward
+def forward(params, cfg: GNNConfig, batch, n_graphs: int | None = None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    src, dst = batch["edges_src"], batch["edges_dst"]
+    N = batch["feat"].shape[0]
+    h = batch["feat"].astype(dt) @ params["enc_w"].astype(dt) \
+        + params["enc_b"].astype(dt)
+    if cfg.kind == "gatedgcn":
+        ef = batch.get("edge_feat")
+        if ef is None:
+            ef = jnp.ones((src.shape[0], 1), dt)
+        e = ef.astype(dt) @ params["edge_enc_w"].astype(dt) \
+            + params["edge_enc_b"].astype(dt)
+    else:
+        e = None
+    deg_log_mean = jnp.maximum(jnp.log1p(degree(dst, N)).mean(), 1e-2)
+
+    def apply_layer(h, e, lp):
+        lp = jax.tree.map(lambda a: a.astype(dt), lp)
+        if cfg.kind == "gin":
+            h2, e2 = gin_layer(h, lp, src, dst, N), e
+        elif cfg.kind == "pna":
+            # degree scalers are fp32; pin the carry dtype for the scan
+            h2, e2 = pna_layer(h, lp, src, dst, N, deg_log_mean), e
+        else:
+            h2, e2 = gatedgcn_layer(h, e, lp, src, dst, N)
+        return h2.astype(dt), (e2.astype(dt) if e2 is not None else e2)
+
+    lp_stack = params["layers"]
+    big = N > 500_000
+    block = 4 if (big and cfg.n_layers % 4 == 0) else 1
+    if big and block > 1:
+        # sqrt-remat over layer blocks (§Perf H-gatedgcn): only block
+        # boundaries are saved — at ogb_products scale each per-layer
+        # (h, e) save costs ~2.9 GiB (e: [124M, d]); 16 saves -> 4.
+        nb = cfg.n_layers // block
+        lp_blocks = jax.tree.map(
+            lambda a: a.reshape((nb, block) + a.shape[1:]), lp_stack)
+        e0 = e if cfg.kind == "gatedgcn" else jnp.zeros((1, 1), dt)
+
+        def block_body(carry, lp_blk):
+            h, e = carry
+            for i in range(block):
+                lp = jax.tree.map(lambda a: a[i], lp_blk)
+                h, e = apply_layer(h, e, lp)
+            return (h, e), None
+
+        (h, e), _ = jax.lax.scan(jax.checkpoint(block_body), (h, e0),
+                                 lp_blocks)
+    else:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], lp_stack)
+            h, e = apply_layer(h, e, lp)
+    if cfg.graph_level:
+        g = jax.ops.segment_sum(h, batch["graph_id"],
+                                num_segments=n_graphs)
+        return g @ params["head_w"].astype(dt) + params["head_b"].astype(dt)
+    return h @ params["head_w"].astype(dt) + params["head_b"].astype(dt)
+
+
+def loss_fn(params, cfg: GNNConfig, batch, n_graphs: int | None = None):
+    logits = forward(params, cfg, batch, n_graphs=n_graphs)
+    return cross_entropy_loss(logits, batch["labels"])

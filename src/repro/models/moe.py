@@ -1,0 +1,282 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based dispatch
+(GShard/Switch style), SwiGLU experts, optional DeepSeek/Qwen-style shared
+experts, and the standard load-balance auxiliary loss.
+
+Dispatch is permutation-free: per routing choice a one-hot cumsum assigns a
+slot in the per-expert capacity buffer; overflow tokens are dropped (train)
+— FLOPs therefore scale with top_k (not num_experts), which keeps the
+roofline's MODEL_FLOPS/HLO_FLOPS ratio honest. Expert axis shards over
+"model" (EP); under SPMD the scatter/gather becomes the canonical all-to-all
+pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0
+    shared_gate: bool = False
+    capacity_factor: float = 1.25
+    pad_experts_to: int | None = None  # EP divisibility padding
+    aux_loss_coef: float = 0.01
+    # scan the token stream through the experts in this many chunks: the
+    # [E, cap, D] dispatch buffers shrink by the same factor (memory), at
+    # identical FLOPs. Applied only when tokens/chunk stays >= 8192.
+    token_chunks: int = 1
+    # per-shard capacity dispatch (§Perf H-moe): slots are assigned by a
+    # cumsum LOCAL to each data shard and the buffer grows a leading
+    # data-shard dim, so every scatter write is shard-local — the SPMD
+    # partitioner then avoids all-reducing the full [E, cap, D] buffer
+    # across the data axis. dispatch_shards must divide the token count;
+    # dispatch_axes names the mesh axes of the token shards.
+    dispatch_shards: int = 1
+    dispatch_axes: tuple = ("data",)
+    ep_axis: str = "model"
+
+    @property
+    def padded_experts(self) -> int:
+        return self.pad_experts_to or self.num_experts
+
+
+def _maybe_constrain(x, spec):
+    """with_sharding_constraint that no-ops outside a mesh context (tests
+    and single-device smoke runs)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (RuntimeError, ValueError):
+        return x
+
+
+def moe_ffn_replicated_ep(x, wp, cfg: MoEConfig):
+    """Replicated-token expert parallelism via shard_map (§Perf H-moe-3).
+
+    Observation: under DP x TP the token activations are *replicated over
+    the model axis*, so every EP shard already holds every token. Each
+    shard therefore (1) routes locally, (2) selects the tokens belonging to
+    its local experts into a tiny local capacity buffer, (3) runs its
+    experts, and (4) contributes a partial output; one psum over the model
+    axis combines them. Dispatch traffic collapses from all-reducing
+    [E, cap, D] buffers (7.3 TiB/step/chip measured on dbrx train_4k) to a
+    single [N_local, D] bf16 all-reduce per call.
+
+    Falls back to moe_ffn when no mesh is set (single-device smoke)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    ep_ax = cfg.ep_axis
+    if mesh is None or ep_ax not in getattr(mesh, "shape", {}):
+        return moe_ffn(x, wp, cfg)
+    from jax.sharding import PartitionSpec as P
+    MP = mesh.shape[ep_ax]
+    da = tuple(a for a in cfg.dispatch_axes if a in mesh.shape)
+    E, Ep, K = cfg.num_experts, cfg.padded_experts, cfg.top_k
+    if Ep % MP != 0:
+        return moe_ffn(x, wp, cfg)
+    EL = Ep // MP
+    N, D = x.shape
+    DA = 1
+    for a in da:
+        DA *= mesh.shape[a]
+    if N % DA != 0:
+        return moe_ffn(x, wp, cfg)
+    NL = N // DA
+    # inference-safe floor of 8; an expert can hold at most NL local tokens
+    capL = min(NL, max(int(NL * K / Ep * cfg.capacity_factor), 8))
+
+    def body(x_l, router, wg, wu, wd):
+        m = jax.lax.axis_index(ep_ax)
+        logits = (x_l.astype(jnp.float32) @ router.astype(jnp.float32))
+        if Ep != E:
+            logits = logits.at[:, E:].set(-1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, K)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+        e_lo = m * EL
+        buf = jnp.zeros((EL, capL, D), dtype=x_l.dtype)
+        slots, keeps, locals_ = [], [], []
+        prev = jnp.zeros((Ep,), jnp.int32)
+        for j in range(K):
+            e = idx[:, j]
+            oh = jax.nn.one_hot(e, Ep, dtype=jnp.int32)
+            pos = jnp.cumsum(oh, axis=0) * oh
+            slot = pos.sum(-1) - 1 + prev[e]
+            prev = prev + oh.sum(0)
+            is_local = (e >= e_lo) & (e < e_lo + EL)
+            keep = (slot < capL) & is_local
+            el = jnp.where(keep, e - e_lo, EL)      # EL -> dropped
+            buf = buf.at[el, jnp.where(keep, slot, capL)].add(
+                x_l, mode="drop")
+            slots.append(slot)
+            keeps.append(keep)
+            locals_.append(el)
+        g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(x_l.dtype),
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("ecd,edf->ecf", buf, wu.astype(x_l.dtype),
+                       preferred_element_type=jnp.float32)
+        hh = (jax.nn.silu(g) * u).astype(x_l.dtype)
+        yb = jnp.einsum("ecf,efd->ecd", hh, wd.astype(x_l.dtype),
+                        preferred_element_type=jnp.float32).astype(x_l.dtype)
+        y = jnp.zeros_like(x_l)
+        for j in range(K):
+            el, slot, keep = locals_[j], slots[j], keeps[j]
+            ytok = yb[jnp.clip(el, 0, EL - 1), jnp.clip(slot, 0, capL - 1)]
+            y = y + jnp.where(keep[:, None], ytok, 0) * \
+                gates[:, j:j + 1].astype(x_l.dtype)
+        y = jax.lax.psum(y, ep_ax)                  # combine across experts
+        me = probs[:, :E].mean(0)
+        fe = jax.nn.one_hot(idx[:, 0], Ep, dtype=jnp.float32)[:, :E].mean(0)
+        aux = cfg.aux_loss_coef * E * jnp.sum(me * fe)
+        if da:
+            aux = jax.lax.pmean(aux, da if len(da) > 1 else da[0])
+        return y, aux
+
+    xspec = P(da if len(da) > 1 else (da[0] if da else None), None)
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(xspec, P(None, None), P(ep_ax, None, None),
+                  P(ep_ax, None, None), P(ep_ax, None, None)),
+        out_specs=(xspec, P()), check_vma=False)
+    y, aux = fn(x, wp["router"], wp["w_gate"], wp["w_up"], wp["w_down"])
+
+    if cfg.num_shared:
+        gs = jax.nn.silu(x @ wp["shared_gate_w"].astype(x.dtype))
+        us = x @ wp["shared_up"].astype(x.dtype)
+        ys = (gs * us) @ wp["shared_down"].astype(x.dtype)
+        if cfg.shared_gate:
+            sg = jax.nn.sigmoid(x.astype(jnp.float32) @
+                                wp["shared_out_gate"].astype(jnp.float32))
+            ys = ys * sg.astype(x.dtype)
+        y = y + ys
+    return y, aux
+
+
+def moe_apply(x, wp, cfg: MoEConfig):
+    """Dispatch to the best MoE implementation for the ambient mesh."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        mesh = None
+    if mesh is not None and cfg.ep_axis in getattr(mesh, "shape", {}):
+        return moe_ffn_replicated_ep(x, wp, cfg)
+    return moe_ffn_chunked(x, wp, cfg)
+
+
+def moe_ffn_chunked(x, wp, cfg: MoEConfig):
+    """Token-chunked MoE: scan x through moe_ffn in cfg.token_chunks pieces
+    so the dispatch buffers never hold the full token stream."""
+    N = x.shape[0]
+    nc = cfg.token_chunks
+    if nc <= 1 or N < nc * 8192 or N % nc != 0:
+        return moe_ffn(x, wp, cfg)
+
+    def body(aux, xc):
+        yc, a = moe_ffn(xc, wp, cfg)
+        return aux + a, yc
+
+    aux, ys = jax.lax.scan(jax.checkpoint(body), jnp.float32(0.0),
+                           x.reshape(nc, N // nc, -1))
+    return ys.reshape(N, -1), aux / nc
+
+
+def moe_ffn(x, wp, cfg: MoEConfig):
+    """x: [N, D] tokens; wp: dict with router/w_gate/w_up/w_down (+shared).
+
+    Returns (y [N, D], aux_loss scalar). Expert weights are stored with the
+    *padded* expert count; rows past num_experts get zero routing mass.
+    """
+    N, D = x.shape
+    E, Ep, K = cfg.num_experts, cfg.padded_experts, cfg.top_k
+    router_logits = (x.astype(jnp.float32) @
+                     wp["router"].astype(jnp.float32))          # [N, Ep]
+    if Ep != E:  # padding experts never win
+        router_logits = router_logits.at[:, E:].set(-1e30)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)                         # [N, K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    SD = cfg.dispatch_shards if (cfg.dispatch_shards > 1
+                                 and N % cfg.dispatch_shards == 0) else 1
+    cap = max(int(N * K / Ep * cfg.capacity_factor), 4)
+    capL = max(cap // SD, 4)
+    NL = N // SD
+    # shard-local dispatch: tokens reshape to [SD, NL, D] (dim 0 == the data
+    # shards), slots come from a cumsum along dim 1 only, and the scatter /
+    # gather are vmapped over dim 0 — a *batched* scatter whose batch dim is
+    # sharded identically on operand and updates, so the partitioner keeps
+    # every write local instead of all-reducing the full buffer (§Perf).
+    xs = x.reshape(SD, NL, D)
+    buf = jnp.zeros((SD, Ep, capL, D), dtype=x.dtype)
+    slots, keeps = [], []
+    prev_count = jnp.zeros((SD, Ep), jnp.int32)
+    scatter_add = jax.vmap(
+        lambda b, e_, sl, xv: b.at[e_, sl].add(xv, mode="drop"))
+    for j in range(K):
+        e = idx[:, j].reshape(SD, NL)                            # [SD, NL]
+        oh = jax.nn.one_hot(e, Ep, dtype=jnp.int32)              # [SD,NL,Ep]
+        pos = jnp.cumsum(oh, axis=1) * oh
+        slot = pos.sum(-1) - 1 + jnp.take_along_axis(
+            prev_count[:, None, :].repeat(NL, 1), e[..., None], -1)[..., 0]
+        keep = slot < capL
+        # overflow tokens index slot == capL -> dropped by mode="drop"
+        buf = scatter_add(buf, e, jnp.where(keep, slot, capL), xs)
+        prev_count = prev_count + oh.sum(1)
+        slots.append(slot)
+        keeps.append(keep)
+
+    # expert computation: [Ep, SD*capL, D] x [Ep, D, F] (SwiGLU).
+    # Constrain the einsum operands so the contraction over D runs locally:
+    # expert weights are EP-sharded but REPLICATED over data here (one small
+    # weight all-gather) and the capacity axis stays data-sharded — without
+    # this, FSDP's D-sharded weights make XLA all-reduce the [E, cap, F]
+    # fp32 activations every layer (measured 2.6 TiB/step/chip on dbrx).
+    from jax.sharding import PartitionSpec as P
+    ep = cfg.ep_axis
+    da = cfg.dispatch_axes if SD > 1 else None
+    buff = buf.transpose(1, 0, 2, 3).reshape(Ep, SD * capL, D)
+    buff = _maybe_constrain(buff, P(ep, da, None))
+    wg = _maybe_constrain(wp["w_gate"].astype(x.dtype), P(ep, None, None))
+    wu = _maybe_constrain(wp["w_up"].astype(x.dtype), P(ep, None, None))
+    wd = _maybe_constrain(wp["w_down"].astype(x.dtype), P(ep, None, None))
+    g = jnp.einsum("ecd,edf->ecf", buff, wg,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", buff, wu,
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    yb = jnp.einsum("ecf,efd->ecd", h, wd,
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    yb = yb.reshape(Ep, SD, capL, D).transpose(1, 0, 2, 3)  # [SD,Ep,capL,D]
+
+    gather = jax.vmap(lambda b, e_, sl: b[e_, sl])
+    y = jnp.zeros_like(xs)
+    gates_s = gates.reshape(SD, NL, K)
+    for j in range(K):
+        e, slot, keep = (idx[:, j].reshape(SD, NL), slots[j], keeps[j])
+        ytok = gather(yb, e, jnp.clip(slot, 0, capL - 1))
+        y = y + jnp.where(keep[..., None], ytok, 0) * \
+            gates_s[..., j:j + 1].astype(x.dtype)
+    y = y.reshape(N, D)
+
+    # Switch-style load-balance aux loss over the real experts
+    me = probs[:, :E].mean(0)
+    onehot_top1 = jax.nn.one_hot(idx[:, 0], Ep, dtype=jnp.float32)[:, :E]
+    fe = onehot_top1.mean(0)
+    aux = cfg.aux_loss_coef * E * jnp.sum(me * fe)
+
+    if cfg.num_shared:
+        gs = jax.nn.silu(x @ wp["shared_gate_w"].astype(x.dtype))
+        us = x @ wp["shared_up"].astype(x.dtype)
+        ys = (gs * us) @ wp["shared_down"].astype(x.dtype)
+        if cfg.shared_gate:
+            sg = jax.nn.sigmoid(
+                x.astype(jnp.float32) @ wp["shared_out_gate"].astype(
+                    jnp.float32))
+            ys = ys * sg.astype(x.dtype)
+        y = y + ys
+    return y, aux

@@ -1,0 +1,324 @@
+"""Decoder-only LM (dense + MoE): LLaMA/Qwen/DBRX-family architectures.
+
+Design notes
+  - Layers are *stacked* (leading n_layers axis) and executed with lax.scan:
+    keeps HLO size O(1) in depth (critical for 40-cell dry-run compile times)
+    and gives remat a natural per-layer boundary.
+  - Params are stored fp32 (master) and cast to cfg.compute_dtype inside the
+    forward; optimizer states are fp32 — MaxText-style mixed precision.
+  - Every param is declared once in `param_defs` with its shape AND its
+    PartitionSpec, so init / abstract (dry-run) / shardings can never drift.
+  - GQA TP: q heads shard over "model" when divisible; otherwise the
+    row-parallel fallback (d_model contracted over "model") keeps the mesh
+    fully used except attention einsums (documented; see qwen2.5-14b).
+    KV projections replicate over "model" (tp > kv_heads duplication).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .attention import gqa_attention
+from .common import apply_rope, cross_entropy_loss, rms_norm, rope_angles, trunc_normal
+from .moe import MoEConfig, moe_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    moe: Optional[MoEConfig] = None
+    window: Optional[int] = None          # sliding-window attention (opt-in)
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"                   # none | full
+    # tensor-parallel plan, resolved against the mesh at lowering time
+    tp_size: int = 16
+
+    @property
+    def heads_shardable(self) -> bool:
+        return self.n_heads % self.tp_size == 0
+
+    def param_count(self) -> int:
+        d, L = self.d_model, self.n_layers
+        qkv = d * (self.n_heads + 2 * self.n_kv_heads) * self.d_head
+        o = self.n_heads * self.d_head * d
+        if self.moe:
+            m = self.moe
+            ffn = 3 * d * m.d_ff_expert * m.num_experts
+            if m.num_shared:
+                ffn += 3 * d * m.d_ff_expert * m.num_shared
+                if m.shared_gate:
+                    ffn += d
+            ffn += d * m.padded_experts  # router
+        else:
+            ffn = 3 * d * self.d_ff
+        return L * (qkv + o + ffn + 2 * d) + 2 * self.vocab * d + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        if not self.moe:
+            return self.param_count()
+        d, L, m = self.d_model, self.n_layers, self.moe
+        qkv = d * (self.n_heads + 2 * self.n_kv_heads) * self.d_head
+        o = self.n_heads * self.d_head * d
+        ffn = 3 * d * m.d_ff_expert * (m.top_k + m.num_shared)
+        ffn += d * m.padded_experts
+        return L * (qkv + o + ffn + 2 * d) + 2 * self.vocab * d + d
+
+
+# --------------------------------------------------------------- param defs
+def param_defs(cfg: LMConfig) -> dict:
+    """{path: (shape, PartitionSpec)} — single source of truth."""
+    L, d, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    hq = cfg.n_heads * cfg.d_head
+    hkv = cfg.n_kv_heads * cfg.d_head
+    col = cfg.heads_shardable  # column-parallel attention?
+    defs = {
+        "embed": ((V, d), P("model", "data")),
+        "final_norm": ((d,), P(None)),
+        "lm_head": ((d, V), P("data", "model")),
+        "layers.ln1": ((L, d), P(None, None)),
+        "layers.ln2": ((L, d), P(None, None)),
+        # heads shardable -> Megatron column/row parallel attention.
+        # Otherwise (e.g. 40 heads on a 16-way axis) the CONTEXT-PARALLEL
+        # plan: attention weights are FSDP-only and the sequence axis of
+        # the activations shards over "model" (set via act_spec) — K/V are
+        # all-gathered per layer (small: Hkv*Dh per token), scores stay
+        # q-block local. §Perf H-qwen25.
+        "layers.wq": ((L, d, hq),
+                      P(None, "data", "model") if col else
+                      P(None, "data", None)),
+        "layers.wk": ((L, d, hkv), P(None, "data", None)),
+        "layers.wv": ((L, d, hkv), P(None, "data", None)),
+        "layers.wo": ((L, hq, d),
+                      P(None, "model", "data") if col else
+                      P(None, None, "data")),
+    }
+    if cfg.qkv_bias:
+        defs["layers.bq"] = ((L, hq), P(None, "model") if col
+                             else P(None, None))
+        defs["layers.bk"] = ((L, hkv), P(None, None))
+        defs["layers.bv"] = ((L, hkv), P(None, None))
+    if cfg.moe:
+        m = cfg.moe
+        E, F = m.padded_experts, m.d_ff_expert
+        defs.update({
+            "layers.router": ((L, d, E), P(None, "data", None)),
+            "layers.w_gate": ((L, E, d, F), P(None, "model", "data", None)),
+            "layers.w_up": ((L, E, d, F), P(None, "model", "data", None)),
+            "layers.w_down": ((L, E, F, d), P(None, "model", None, "data")),
+        })
+        if m.num_shared:
+            Fs = F * m.num_shared
+            defs.update({
+                "layers.shared_gate_w": ((L, d, Fs), P(None, "data", "model")),
+                "layers.shared_up": ((L, d, Fs), P(None, "data", "model")),
+                "layers.shared_down": ((L, Fs, d), P(None, "model", "data")),
+            })
+            if m.shared_gate:
+                defs["layers.shared_out_gate"] = ((L, d, 1),
+                                                  P(None, "data", None))
+    else:
+        defs.update({
+            "layers.w_gate": ((L, d, cfg.d_ff), P(None, "data", "model")),
+            "layers.w_up": ((L, d, cfg.d_ff), P(None, "data", "model")),
+            "layers.w_down": ((L, cfg.d_ff, d), P(None, "model", "data")),
+        })
+    return defs
+
+
+def _nest(flat: dict) -> dict:
+    out: dict = {}
+    for path, v in flat.items():
+        parts = path.split(".")
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return out
+
+
+def init_params(cfg: LMConfig, key) -> dict:
+    defs = param_defs(cfg)
+    keys = jax.random.split(key, len(defs))
+    flat = {}
+    for (path, (shape, _)), k in zip(sorted(defs.items()), keys):
+        if path.endswith(("ln1", "ln2", "final_norm")):
+            flat[path] = jnp.ones(shape, jnp.float32)
+        else:
+            flat[path] = trunc_normal(k, shape, scale=1.0)
+    return _nest(flat)
+
+
+def abstract_params(cfg: LMConfig) -> dict:
+    return _nest({p: jax.ShapeDtypeStruct(s, jnp.float32)
+                  for p, (s, _) in param_defs(cfg).items()})
+
+
+def param_shardings(cfg: LMConfig) -> dict:
+    return _nest({p: spec for p, (s, spec) in param_defs(cfg).items()})
+
+
+# ------------------------------------------------------------------ forward
+def _layer(cfg: LMConfig, x, lp, sin, cos, cache=None, pos=None,
+           kv_valid_len=None):
+    """One decoder layer. x: [B, T, D]. cache: (k, v) [B, S, Hkv, Dh]."""
+    B, T, d = x.shape
+    dt = x.dtype
+    h = rms_norm(x, lp["ln1"].astype(dt))
+    q = h @ lp["wq"].astype(dt)
+    k = h @ lp["wk"].astype(dt)
+    v = h @ lp["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(dt)
+        k = k + lp["bk"].astype(dt)
+        v = v + lp["bv"].astype(dt)
+    q = q.reshape(B, T, cfg.n_heads, cfg.d_head)
+    k = k.reshape(B, T, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(B, T, cfg.n_kv_heads, cfg.d_head)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, pos, 0, 0))
+        new_cache = (ck, cv)
+        attn = gqa_attention(q, ck, cv, causal=False, q_offset=pos,
+                             kv_valid_len=kv_valid_len, window=cfg.window)
+    else:
+        new_cache = (k, v)  # exposed for prefill cache collection
+        attn = gqa_attention(q, k, v, causal=True, window=cfg.window)
+    x = x + attn.reshape(B, T, -1) @ lp["wo"].astype(dt)
+
+    h = rms_norm(x, lp["ln2"].astype(dt))
+    if cfg.moe:
+        wp = {k2: lp[k2] for k2 in
+              ("router", "w_gate", "w_up", "w_down")}
+        for k2 in ("shared_gate_w", "shared_up", "shared_down",
+                   "shared_out_gate"):
+            if k2 in lp:
+                wp[k2] = lp[k2]
+        y, aux = moe_apply(h.reshape(B * T, d), wp, cfg.moe)
+        y = y.reshape(B, T, d)
+    else:
+        g = jax.nn.silu(h @ lp["w_gate"].astype(dt))
+        y = (g * (h @ lp["w_up"].astype(dt))) @ lp["w_down"].astype(dt)
+        aux = jnp.float32(0.0)
+    return x + y, new_cache, aux
+
+
+def forward(params, cfg: LMConfig, tokens, act_spec=None,
+            collect_kv: bool = False, head_act_spec=None):
+    """tokens: [B, T] -> logits [B, T, vocab] (compute_dtype activations).
+
+    act_spec: optional PartitionSpec pinned onto the residual stream after
+    every layer (e.g. P(("data",), None, "model")) — the Megatron
+    sequence-parallel analogue: per-layer all-gather/reduce-scatter instead
+    of a full replicated [B, T, D] carry in HBM."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    B, T = tokens.shape
+    x = params["embed"][tokens].astype(dt)
+    sin, cos = rope_angles(jnp.arange(T), cfg.d_head, cfg.rope_theta, dt)
+    constrain = (lambda z: jax.lax.with_sharding_constraint(z, act_spec)) \
+        if act_spec is not None else (lambda z: z)
+    x = constrain(x)
+    # cast the stacked layer weights to compute dtype BEFORE the scan: the
+    # per-layer FSDP all-gathers then move bf16, not fp32 master copies
+    # (2x collective bytes; §Perf H-lm-1)
+    layers_c = jax.tree.map(lambda a: a.astype(dt)
+                            if a.dtype == jnp.float32 else a,
+                            params["layers"])
+
+    def body(carry, lp):
+        x, aux = carry
+        y, kv, a = _layer(cfg, x, lp, sin, cos)
+        ys = kv if collect_kv else None
+        return (constrain(y), aux + a), ys
+
+    body_fn = body
+    if cfg.remat == "full" and not collect_kv:
+        body_fn = jax.checkpoint(body)
+    (x, aux), kvs = jax.lax.scan(body_fn, (x, jnp.float32(0.0)),
+                                 layers_c)
+    x = rms_norm(x, params["final_norm"].astype(dt))
+    if head_act_spec is not None:
+        # context-parallel plans re-shard [B, S, D] from seq-sharded to
+        # d-sharded here so the vocab-sharded head contracts locally
+        x = jax.lax.with_sharding_constraint(x, head_act_spec)
+    logits = x @ params["lm_head"].astype(dt)
+    if collect_kv:
+        return logits, aux / cfg.n_layers, kvs
+    return logits, aux / cfg.n_layers
+
+
+def loss_fn(params, cfg: LMConfig, batch, act_spec=None,
+            head_act_spec=None):
+    logits, aux = forward(params, cfg, batch["tokens"], act_spec=act_spec,
+                          head_act_spec=head_act_spec)
+    return cross_entropy_loss(logits, batch["labels"]) + aux
+
+
+def prefill_step(params, cfg: LMConfig, tokens, act_spec=None):
+    """Inference prefill: run the prompt, return (next_token, kv cache).
+
+    The per-layer K/V tensors are collected as scan outputs -> cache layout
+    [L, B, S, Hkv, Dh], identical to decode_step's expectation."""
+    logits, _, (ks, vs) = forward(params, cfg, tokens, act_spec=act_spec,
+                                  collect_kv=True)
+    nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(tokens.dtype)
+    return nxt, {"k": ks.astype(jnp.bfloat16), "v": vs.astype(jnp.bfloat16)}
+
+
+# ------------------------------------------------------------------- decode
+def init_cache_abstract(cfg: LMConfig, batch: int, max_len: int,
+                        dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(params, cfg: LMConfig, cache, tokens, pos):
+    """One serving step: tokens [B] at position `pos` (scalar int32).
+
+    Returns (next_tokens [B], logits [B, vocab], updated cache)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(dt)[:, None, :]       # [B, 1, D]
+    sin, cos = rope_angles(pos[None], cfg.d_head, cfg.rope_theta, dt)
+    sin, cos = sin[None], cos[None]                          # [1, 1, Dh/2]
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, ck, cv = xs
+        y, new_cache, a = _layer(cfg, x, lp, sin, cos, cache=(ck, cv),
+                                 pos=pos, kv_valid_len=pos + 1)
+        return (y, aux + a), new_cache
+
+    (x, _), new_kv = jax.lax.scan(
+        body, (x, jnp.float32(0.0)),
+        (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"].astype(dt))
+    logits = (x @ params["lm_head"].astype(dt))[:, 0, :]
+    nxt = jnp.argmax(logits, axis=-1).astype(tokens.dtype)
+    return nxt, logits, {"k": new_kv[0], "v": new_kv[1]}

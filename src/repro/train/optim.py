@@ -1,0 +1,124 @@
+"""Hand-rolled optimizers (no optax in this environment): AdamW and SGD with
+momentum, global-norm clipping, and warmup-cosine schedules. Optimizer
+states mirror the parameter pytree, so they inherit the parameter
+PartitionSpecs (fully sharded optimizer == ZeRO-1 under FSDP specs)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    mom: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def warmup_cosine(cfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def init_opt_state(cfg: OptimizerConfig, params):
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    if cfg.name == "adamw":
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(), v=zeros())
+    if cfg.name == "sgd":
+        return SGDState(step=jnp.zeros((), jnp.int32), mom=zeros())
+    raise ValueError(cfg.name)
+
+
+def abstract_opt_state(cfg: OptimizerConfig, abstract_params):
+    like = lambda: jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), abstract_params)
+    if cfg.name == "adamw":
+        return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                          m=like(), v=like())
+    if cfg.name == "sgd":
+        return SGDState(step=jax.ShapeDtypeStruct((), jnp.int32), mom=like())
+    raise ValueError(cfg.name)
+
+
+def opt_state_shardings(cfg: OptimizerConfig, param_specs):
+    from jax.sharding import PartitionSpec as P
+    if cfg.name == "adamw":
+        return AdamWState(step=P(), m=param_specs, v=param_specs)
+    if cfg.name == "sgd":
+        return SGDState(step=P(), mom=param_specs)
+    raise ValueError(cfg.name)
+
+
+def apply_updates(cfg: OptimizerConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    lr = warmup_cosine(cfg, state.step)
+    if cfg.name == "adamw":
+        b1, b2 = cfg.betas
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mhat = m2 / (1 - b1 ** t)
+            vhat = v2 / (1 - b2 ** t)
+            step_p = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p
+            return p - lr * step_p, m2, v2
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.m)
+        flat_v = jax.tree.leaves(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+        return new_p, AdamWState(step, new_m, new_v), {
+            "grad_norm": gnorm, "lr": lr}
+    if cfg.name == "sgd":
+        step = state.step + 1
+        def upd(p, g, mom):
+            mom2 = 0.9 * mom + g.astype(jnp.float32)
+            return p - lr * (mom2 + cfg.weight_decay * p), mom2
+        flat_p, tdef = jax.tree.flatten(params)
+        out = [upd(p, g, m) for p, g, m in
+               zip(flat_p, jax.tree.leaves(grads),
+                   jax.tree.leaves(state.mom))]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_mom = jax.tree.unflatten(tdef, [o[1] for o in out])
+        return new_p, SGDState(step, new_mom), {"grad_norm": gnorm, "lr": lr}
+    raise ValueError(cfg.name)

@@ -1,0 +1,71 @@
+import numpy as np
+import pytest
+
+from repro.core.baselines import (LCRAdapt, NaiveIndex, WBFS, cbfs_query,
+                                  dijkstra_query)
+from repro.core.generators import random_queries, road_grid, scale_free
+from repro.core.ref import wcsd_bfs
+from repro.core.wc_index import build_wc_index
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = scale_free(120, 3, num_levels=4, seed=21)
+    s, t, wl = random_queries(g, 80, seed=5)
+    exp = np.array([wcsd_bfs(g, int(a), int(b), int(w))
+                    for a, b, w in zip(s, t, wl)])
+    return g, s, t, wl, exp
+
+
+def test_cbfs(setup):
+    g, s, t, wl, exp = setup
+    got = [cbfs_query(g, int(a), int(b), int(w)) for a, b, w in zip(s, t, wl)]
+    assert np.array_equal(got, exp)
+
+
+def test_wbfs(setup):
+    g, s, t, wl, exp = setup
+    wb = WBFS.build(g)
+    got = [wb.query(int(a), int(b), int(w)) for a, b, w in zip(s, t, wl)]
+    assert np.array_equal(got, exp)
+    assert wb.memory_bytes() > g.memory_bytes()  # |w| partitions cost space
+
+
+def test_dijkstra_unweighted(setup):
+    g, s, t, wl, exp = setup
+    got = [dijkstra_query(g, int(a), int(b), int(w))
+           for a, b, w in zip(s[:40], t[:40], wl[:40])]
+    assert np.array_equal(got, exp[:40])
+
+
+def test_dijkstra_weighted_extension():
+    g = road_grid(6, 6, num_levels=3, seed=2)
+    rng = np.random.default_rng(0)
+    edge_len = rng.integers(1, 5, size=len(g.nbr)).astype(np.float64)
+    # symmetrize lengths
+    for u in range(g.num_nodes):
+        b, e = g.indptr[u], g.indptr[u + 1]
+        for i in range(b, e):
+            v = g.nbr[i]
+            vb, ve = g.indptr[v], g.indptr[v + 1]
+            j = vb + list(g.nbr[vb:ve]).index(u)
+            edge_len[j] = edge_len[i]
+    d = dijkstra_query(g, 0, 35, 0, edge_len=edge_len)
+    assert d >= wcsd_bfs(g, 0, 35, 0)  # weighted >= hop count w/ min len 1
+
+
+def test_naive_index(setup):
+    g, s, t, wl, exp = setup
+    nv = NaiveIndex.build(g)
+    assert np.array_equal(nv.query_batch(s, t, wl), exp)
+    # paper's point: |w| separate indices are bigger than one WC-INDEX
+    wc = build_wc_index(g)
+    assert nv.memory_bytes() > wc.memory_bytes()
+
+
+def test_lcr_adapt(setup):
+    g, s, t, wl, exp = setup
+    lcr = LCRAdapt.build(g)
+    got = [lcr.query(int(a), int(b), int(w))
+           for a, b, w in zip(s[:40], t[:40], wl[:40])]
+    assert np.array_equal(got, exp[:40])

@@ -1,0 +1,76 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import Graph, expand_frontier_csr
+from repro.core.generators import road_grid, scale_free, erdos_renyi
+
+
+def test_from_edges_dedup_and_symmetry():
+    g = Graph.from_edges(4, np.array([0, 1, 0, 0]), np.array([1, 0, 2, 0]),
+                         np.array([1.0, 3.0, 2.0, 9.0]))
+    # self loop dropped; duplicate (0,1)/(1,0) kept once with max quality
+    assert g.num_edges == 2
+    nbrs, lvls = g.neighbors(0)
+    assert set(nbrs.tolist()) == {1, 2}
+    # (0,1) quality should be max(1.0, 3.0) = 3.0
+    q01 = g.levels[lvls[list(nbrs).index(1)]]
+    assert q01 == 3.0
+
+
+def test_levels_are_sorted_unique():
+    g = erdos_renyi(100, 5.0, num_levels=4, seed=0)
+    assert np.all(np.diff(g.levels) > 0)
+    assert g.num_levels <= 4
+    assert g.edges_level.max() < g.num_levels
+
+
+def test_level_of_threshold_semantics():
+    g = Graph.from_edges(3, np.array([0, 1]), np.array([1, 2]),
+                         np.array([1.0, 2.5]))
+    assert g.level_of(0.5) == 0     # every edge qualifies
+    assert g.level_of(1.0) == 0
+    assert g.level_of(1.1) == 1     # only the 2.5 edge
+    assert g.level_of(3.0) == 2     # nothing qualifies
+
+
+def test_filtered_preserves_global_levels():
+    g = erdos_renyi(60, 4.0, num_levels=5, seed=1)
+    sub = g.filtered(2)
+    assert np.array_equal(sub.levels, g.levels)
+    if len(sub.edges_level):
+        assert sub.edges_level.min() >= 2
+
+
+def test_expand_frontier_matches_neighbors():
+    g = road_grid(5, 5, num_levels=3, seed=2)
+    nodes = np.array([0, 7, 12], dtype=np.int32)
+    src_pos, nbrs, lvls = expand_frontier_csr(g, nodes)
+    for i, v in enumerate(nodes):
+        exp_n, exp_l = g.neighbors(int(v))
+        got = nbrs[src_pos == i]
+        assert sorted(got.tolist()) == sorted(exp_n.tolist())
+
+
+def test_padded_adjacency_roundtrip():
+    g = scale_free(50, 3, num_levels=3, seed=3)
+    nbr_pad, lvl_pad = g.padded_adjacency()
+    for v in range(g.num_nodes):
+        exp_n, exp_l = g.neighbors(v)
+        got = nbr_pad[v][nbr_pad[v] >= 0]
+        assert sorted(got.tolist()) == sorted(exp_n.tolist())
+
+
+@given(st.integers(10, 60), st.integers(1, 5), st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_graph_invariants_fuzz(n, levels, seed):
+    g = erdos_renyi(n, 4.0, num_levels=levels, seed=seed)
+    # CSR consistent with edge list
+    assert g.indptr[-1] == len(g.nbr)
+    assert len(g.edges_src) == len(g.nbr)
+    deg = g.degree()
+    assert deg.sum() == len(g.nbr)
+    # symmetry: (u, v) present iff (v, u) present with same level
+    key = g.edges_src.astype(np.int64) * n + g.edges_dst
+    rkey = g.edges_dst.astype(np.int64) * n + g.edges_src
+    assert set(key.tolist()) == set(rkey.tolist())

@@ -1,0 +1,139 @@
+"""Pallas kernels vs ref.py oracles (interpret mode), shape/dtype sweeps +
+hypothesis property fuzz."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.generators import random_queries, scale_free
+from repro.core.query import DeviceQueryEngine
+from repro.core.wc_index import build_wc_index
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+
+# ------------------------------------------------------------- wcsd_query
+@pytest.mark.parametrize("B,L", [(8, 128), (16, 128), (64, 256), (3, 128),
+                                 (100, 384)])
+def test_wcsd_query_kernel_shapes(B, L):
+    rng = np.random.default_rng(B * 1000 + L)
+    hs = rng.integers(-1, 50, size=(B, L)).astype(np.int32)
+    ht = rng.integers(-1, 50, size=(B, L)).astype(np.int32)
+    ds = rng.integers(0, 100, size=(B, L)).astype(np.int32)
+    dt = rng.integers(0, 100, size=(B, L)).astype(np.int32)
+    from repro.kernels.wcsd_query import wcsd_query_gathered
+    got = wcsd_query_gathered(jnp.asarray(hs), jnp.asarray(ds),
+                              jnp.asarray(ht), jnp.asarray(dt)) \
+        if B % 8 == 0 else None
+    exp = kref.wcsd_query_gathered_ref(jnp.asarray(hs), jnp.asarray(ds),
+                                       jnp.asarray(ht), jnp.asarray(dt))
+    if got is not None:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+def test_wcsd_query_end_to_end_vs_host():
+    g = scale_free(150, 3, num_levels=5, seed=23)
+    idx = build_wc_index(g)
+    s, t, wl = random_queries(g, 130, seed=7)
+    eng = DeviceQueryEngine(idx, use_pallas=True)
+    got = np.asarray(eng.query(s, t, wl))
+    exp = idx.query_batch(s, t, wl)
+    np.testing.assert_array_equal(got, exp)
+
+
+@given(st.integers(1, 40), st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_wcsd_query_kernel_fuzz(B, seed):
+    rng = np.random.default_rng(seed)
+    L = 128
+    hs = rng.integers(-1, 20, size=(B, L)).astype(np.int32)
+    ht = rng.integers(-2, 20, size=(B, L)).astype(np.int32)
+    ds = rng.integers(0, 1 << 29, size=(B, L)).astype(np.int32)
+    dt = rng.integers(0, 1000, size=(B, L)).astype(np.int32)
+    hub = jnp.asarray(np.concatenate([hs, ht], 1))
+    # use the public op (handles padding + masking) against a brute force
+    V = 40
+    hubp = rng.integers(-1, 30, size=(V, L)).astype(np.int32)
+    hubp.sort(axis=1)
+    dist = rng.integers(0, 64, size=(V, L)).astype(np.int32)
+    wlev = rng.integers(-1, 6, size=(V, L)).astype(np.int32)
+    count = rng.integers(0, L + 1, size=V).astype(np.int32)
+    s = rng.integers(0, V, size=B).astype(np.int32)
+    t = rng.integers(0, V, size=B).astype(np.int32)
+    w = rng.integers(0, 6, size=B).astype(np.int32)
+    got = np.asarray(ops.wcsd_query(jnp.asarray(hubp), jnp.asarray(dist),
+                                    jnp.asarray(wlev), jnp.asarray(count),
+                                    jnp.asarray(s), jnp.asarray(t),
+                                    jnp.asarray(w)))
+    ref = np.asarray(ops.wcsd_query(jnp.asarray(hubp), jnp.asarray(dist),
+                                    jnp.asarray(wlev), jnp.asarray(count),
+                                    jnp.asarray(s), jnp.asarray(t),
+                                    jnp.asarray(w), use_kernel=False))
+    np.testing.assert_array_equal(got, ref)
+
+
+# ---------------------------------------------------------------- frontier
+@pytest.mark.parametrize("V,D", [(64, 4), (256, 16), (100, 7), (512, 32)])
+def test_frontier_kernel_shapes(V, D):
+    rng = np.random.default_rng(V + D)
+    nbr = rng.integers(-1, V, size=(V, D)).astype(np.int32)
+    lvl = np.where(nbr >= 0, rng.integers(0, 6, size=(V, D)), -1).astype(
+        np.int32)
+    Fw = rng.integers(-1, 7, size=V).astype(np.int32)
+    R = rng.integers(-1, 7, size=V).astype(np.int32)
+    a = ops.frontier_relax(jnp.asarray(nbr), jnp.asarray(lvl),
+                           jnp.asarray(Fw), jnp.asarray(R))
+    b = ops.frontier_relax(jnp.asarray(nbr), jnp.asarray(lvl),
+                           jnp.asarray(Fw), jnp.asarray(R), use_kernel=False)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_frontier_kernel_matches_bfs_round():
+    """One kernel round == one round of the reference constrained BFS."""
+    g = scale_free(200, 4, num_levels=4, seed=29)
+    nbr_pad, lvl_pad = g.padded_adjacency()
+    root = 5
+    Fw = np.full(g.num_nodes, -1, np.int32)
+    Fw[root] = g.num_levels
+    R = Fw.copy()
+    newF, newR = ops.frontier_relax(jnp.asarray(nbr_pad),
+                                    jnp.asarray(lvl_pad),
+                                    jnp.asarray(Fw), jnp.asarray(R))
+    newF = np.asarray(newF)
+    nbrs, lvls = g.neighbors(root)
+    for v, l in zip(nbrs, lvls):
+        assert newF[v] == max(lvl for u, lvl in zip(nbrs, lvls) if u == v)
+
+
+# --------------------------------------------------------------------- cin
+@pytest.mark.parametrize("B,H,M,D,K", [(8, 16, 8, 4, 8), (20, 13, 7, 6, 11),
+                                       (4, 200, 39, 10, 200)])
+def test_cin_kernel_shapes(B, H, M, D, K):
+    rng = np.random.default_rng(B)
+    x1 = rng.standard_normal((B, H, D)).astype(np.float32)
+    x0 = rng.standard_normal((B, M, D)).astype(np.float32)
+    w = rng.standard_normal((K, H, M)).astype(np.float32)
+    got = np.asarray(ops.cin_layer(jnp.asarray(x1), jnp.asarray(x0),
+                                   jnp.asarray(w)))
+    exp = np.asarray(kref.cin_layer_ref(jnp.asarray(x1), jnp.asarray(x0),
+                                        jnp.asarray(w)))
+    # tolerance scales with the H*M-length fp32 reduction (different
+    # contraction order kernel vs ref)
+    np.testing.assert_allclose(got, exp, rtol=1e-4,
+                               atol=1e-5 * H * M ** 0.5)
+
+
+def test_cin_kernel_bf16():
+    rng = np.random.default_rng(0)
+    x1 = rng.standard_normal((8, 16, 8)).astype(np.float32)
+    x0 = rng.standard_normal((8, 8, 8)).astype(np.float32)
+    w = rng.standard_normal((16, 16, 8)).astype(np.float32)
+    got = np.asarray(ops.cin_layer(jnp.asarray(x1, jnp.bfloat16),
+                                   jnp.asarray(x0, jnp.bfloat16),
+                                   jnp.asarray(w, jnp.bfloat16)))
+    exp = np.asarray(kref.cin_layer_ref(jnp.asarray(x1), jnp.asarray(x0),
+                                        jnp.asarray(w)))
+    np.testing.assert_allclose(got, exp, rtol=5e-2, atol=0.5)  # bf16 inputs

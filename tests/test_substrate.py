@@ -1,0 +1,234 @@
+"""Training substrate: optimizer, accumulation, compression, checkpointing,
+fault tolerance, serving, data pipelines (incl. the fanout neighbor
+sampler)."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.checkpoint.fault import FaultTolerantRunner, Heartbeat
+from repro.core.generators import random_queries, scale_free
+from repro.core.serve import WCSDServer
+from repro.core.wc_index import build_wc_index
+from repro.core.ref import wcsd_bfs
+from repro.data.graphs import NeighborSampler, distance_encoding, pad_block
+from repro.data.lm import TokenStream
+from repro.train import optim as O
+from repro.train.grad_compress import (compress_decompress, dequantize_int8,
+                                       quantize_int8)
+from repro.train.loop import StepTimeMonitor, Trainer, make_train_step
+
+
+def _toy():
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.standard_normal((6, 1), ).astype(
+        np.float32)), "b": jnp.zeros((1,))}
+
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+
+    def batch(s):
+        r = np.random.default_rng(s)
+        x = r.standard_normal((32, 6)).astype(np.float32)
+        y = x @ np.arange(1.0, 7.0, dtype=np.float32)[:, None]
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+    return params, loss_fn, batch
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_converges():
+    params, loss_fn, batch = _toy()
+    ocfg = O.OptimizerConfig(lr=0.1, warmup_steps=5, total_steps=400,
+                             weight_decay=0.0, clip_norm=50.0)
+    opt = O.init_opt_state(ocfg, params)
+    step = jax.jit(make_train_step(loss_fn, ocfg))
+    for i in range(200):
+        params, opt, m = step(params, opt, batch(i))
+    assert float(m["loss"]) < 0.05
+
+
+def test_sgd_and_schedule():
+    params, loss_fn, batch = _toy()
+    ocfg = O.OptimizerConfig(name="sgd", lr=0.02, warmup_steps=5,
+                             total_steps=100, weight_decay=0.0,
+                             clip_norm=50.0)
+    opt = O.init_opt_state(ocfg, params)
+    step = jax.jit(make_train_step(loss_fn, ocfg))
+    l0 = None
+    for i in range(50):
+        params, opt, m = step(params, opt, batch(i))
+        l0 = l0 or float(m["loss"])
+    assert float(m["loss"]) < l0
+    # warmup-cosine boundary behavior
+    lr0 = O.warmup_cosine(ocfg, jnp.int32(0))
+    lr_w = O.warmup_cosine(ocfg, jnp.int32(5))
+    lr_end = O.warmup_cosine(ocfg, jnp.int32(100))
+    assert float(lr0) == 0.0 and np.isclose(float(lr_w), ocfg.lr, rtol=1e-5)
+    assert np.isclose(float(lr_end), ocfg.lr * ocfg.min_lr_ratio, rtol=1e-5)
+
+
+def test_grad_accumulation_equivalence():
+    params, loss_fn, batch = _toy()
+    ocfg = O.OptimizerConfig(lr=0.01)
+    opt = O.init_opt_state(ocfg, params)
+    b = batch(0)
+    s1 = jax.jit(make_train_step(loss_fn, ocfg, accum_steps=1))
+    s4 = jax.jit(make_train_step(loss_fn, ocfg, accum_steps=4))
+    p1, _, m1 = s1(params, opt, b)
+    p4, _, m4 = s4(params, opt, b)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p4["w"]),
+                               atol=1e-5)
+
+
+# -------------------------------------------------------------- compression
+def test_int8_quantization_bounds():
+    rng = np.random.default_rng(2)
+    g = jnp.asarray(rng.standard_normal(4096).astype(np.float32) * 3)
+    q, s = quantize_int8(g)
+    gh = dequantize_int8(q, s)
+    assert float(jnp.abs(g - gh).max()) <= float(s) / 2 + 1e-6
+
+
+def test_error_feedback_unbiased_over_steps():
+    rng = np.random.default_rng(3)
+    g = jnp.asarray(rng.standard_normal(512).astype(np.float32))
+    res = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for _ in range(50):
+        gh, res = compress_decompress(g, res)
+        acc = acc + gh
+    # with error feedback the accumulated compressed signal tracks 50*g
+    np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g),
+                               atol=float(jnp.abs(g).max()) * 0.01)
+
+
+# ------------------------------------------------------------- checkpointing
+def test_checkpoint_roundtrip_and_gc():
+    params, loss_fn, batch = _toy()
+    ocfg = O.OptimizerConfig()
+    opt = O.init_opt_state(ocfg, params)
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=2)
+        for s in [1, 2, 3, 4]:
+            cm.save(s, {"params": params, "opt_state": opt})
+        assert cm.latest_step() == 4
+        # gc kept only last 2
+        steps = sorted(os.listdir(d))
+        assert len(steps) == 2
+        state, step = cm.restore({"params": params, "opt_state": opt})
+        assert step == 4
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        man = cm.manifest(4)
+        assert "leaves" in man and man["step"] == 4
+
+
+def test_fault_tolerant_restart_replays_batches():
+    params, loss_fn, batch = _toy()
+    ocfg = O.OptimizerConfig(lr=0.02)
+    opt = O.init_opt_state(ocfg, params)
+    step = jax.jit(make_train_step(loss_fn, ocfg))
+    with tempfile.TemporaryDirectory() as d:
+        runner = FaultTolerantRunner(
+            step, params, opt, CheckpointManager(d), ckpt_every=4,
+            failure_schedule={6: RuntimeError("chip down"),
+                              9: RuntimeError("again")})
+        log = runner.run(None, max_steps=15, batch_for_step=batch)
+        events = [l["event"] for l in log]
+        assert events.count("failure") == 2
+        assert runner.step == 15
+        # deterministic replay: the same step ran after restore
+        steps_run = [l["step"] for l in log if l["event"] == "step"]
+        assert sorted(set(steps_run)) == list(range(15))
+
+
+def test_heartbeat_and_elastic_remesh():
+    params, loss_fn, batch = _toy()
+    ocfg = O.OptimizerConfig()
+    opt = O.init_opt_state(ocfg, params)
+    step = jax.jit(make_train_step(loss_fn, ocfg))
+    hb = Heartbeat(n_workers=4, timeout_s=0.0)  # everyone instantly dead
+    hb.beat(0)
+    remeshed = []
+
+    def remesh(n_alive):
+        remeshed.append(n_alive)
+        return step, params, opt
+
+    with tempfile.TemporaryDirectory() as d:
+        runner = FaultTolerantRunner(step, params, opt, CheckpointManager(d),
+                                     heartbeat=hb, remesh_fn=remesh)
+        runner.run(None, max_steps=2, batch_for_step=batch)
+    assert remeshed and remeshed[0] < 4
+
+
+def test_straggler_monitor():
+    m = StepTimeMonitor(alpha=0.3, z=2.0)
+    flags = [m.observe(0.1) for _ in range(10)]
+    assert not any(flags)
+    assert m.observe(10.0) is True
+    assert m.stragglers == 1
+
+
+# ------------------------------------------------------------------ serving
+def test_wcsd_server_batching_and_memo():
+    g = scale_free(120, 3, num_levels=4, seed=31)
+    idx = build_wc_index(g)
+    srv = WCSDServer(idx, max_batch=32)
+    s, t, wl = random_queries(g, 100, seed=8)
+    out = srv.query_many(s, t, wl)
+    exp = idx.query_batch(s, t, wl)
+    np.testing.assert_array_equal(out, exp)
+    assert srv.stats.batches >= 3
+    # repeated queries hit the memo
+    srv.query_many(s[:10], t[:10], wl[:10])
+    assert srv.stats.memo_hits >= 10
+
+
+# --------------------------------------------------------------------- data
+def test_token_stream_deterministic_cursor():
+    s1 = TokenStream(1000, 16, 4, seed=1)
+    b1 = s1.next_batch()
+    b2 = s1.next_batch()
+    s2 = TokenStream(1000, 16, 4, seed=1)
+    s2.set_cursor(1)
+    np.testing.assert_array_equal(s2.next_batch()["tokens"], b2["tokens"])
+
+
+def test_neighbor_sampler_block_structure():
+    g = scale_free(500, 4, num_levels=3, seed=33)
+    samp = NeighborSampler(g, seed=0)
+    seeds = np.arange(32, dtype=np.int32)
+    block = samp.sample(seeds, fanouts=[5, 3])
+    # seeds occupy the first slots
+    np.testing.assert_array_equal(block["nodes"][:32], seeds)
+    # every edge endpoint is within the node set
+    assert block["edges_src"].max() < len(block["nodes"])
+    assert block["edges_dst"].max() < len(block["nodes"])
+    # every sampled edge exists in the graph
+    nodes = block["nodes"]
+    for s_, d_ in list(zip(block["edges_src"][:50], block["edges_dst"][:50])):
+        u, v = int(nodes[s_]), int(nodes[d_])
+        assert v in g.neighbors(u)[0] or u in g.neighbors(v)[0]
+    padded = pad_block(block, 4096, 8192)
+    assert len(padded["nodes"]) == 4096
+    assert len(padded["edges_src"]) == 8192
+
+
+def test_distance_encoding_features():
+    g = scale_free(100, 3, num_levels=3, seed=35)
+    idx = build_wc_index(g)
+    nodes = np.arange(20)
+    lms = np.array([0, 50])
+    feats = distance_encoding(idx, nodes, lms, w_levels=[0, 2])
+    assert feats.shape == (20, 4)
+    # spot check one value against the oracle
+    d = wcsd_bfs(g, 5, 0, 0)
+    assert feats[5, 0] == min(d, 32)

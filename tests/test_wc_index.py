@@ -1,0 +1,169 @@
+"""The paper's core claims, asserted: correctness vs the BFS oracle
+(soundness+completeness), Thm. 3 monotonicity, minimality, ordering
+behavior — with hypothesis fuzzing over random graphs/qualities/queries."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import Graph, INF_DIST
+from repro.core.generators import erdos_renyi, road_grid, scale_free, random_queries
+from repro.core.ref import wcsd_bfs, pareto_dists
+from repro.core.wc_index import build_wc_index
+from repro.core.wc_index_batched import build_wc_index_batched, clean_index
+from repro.core.dominance import pareto_filter, pareto_filter_grouped
+
+
+def _random_graph(n, avg_deg, levels, seed):
+    return erdos_renyi(n, avg_deg, num_levels=levels, seed=seed)
+
+
+# ------------------------------------------------------------- correctness
+@pytest.mark.parametrize("ordering", ["degree", "treedec", "hybrid"])
+def test_query_matches_oracle(ordering):
+    g = scale_free(200, 3, num_levels=4, seed=5)
+    idx = build_wc_index(g, ordering=ordering)
+    s, t, wl = random_queries(g, 300, seed=1)
+    exp = np.array([wcsd_bfs(g, int(a), int(b), int(w))
+                    for a, b, w in zip(s, t, wl)])
+    got = idx.query_batch(s, t, wl)
+    assert np.array_equal(got, exp)
+    for i in range(0, 50):
+        assert idx.query_one(int(s[i]), int(t[i]), int(wl[i])) == exp[i]
+
+
+@given(st.integers(8, 80), st.integers(1, 5), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_oracle_equivalence_fuzz(n, levels, seed):
+    g = _random_graph(n, 3.5, levels, seed)
+    idx = build_wc_index(g)
+    s, t, wl = random_queries(g, 60, seed=seed + 1)
+    exp = np.array([wcsd_bfs(g, int(a), int(b), int(w))
+                    for a, b, w in zip(s, t, wl)])
+    assert np.array_equal(idx.query_batch(s, t, wl), exp)
+
+
+def test_unreachable_and_identity():
+    # two disconnected components
+    g = Graph.from_edges(6, np.array([0, 1, 3, 4]), np.array([1, 2, 4, 5]),
+                         np.array([1.0, 2.0, 1.0, 2.0]))
+    idx = build_wc_index(g)
+    assert idx.query_one(0, 5, 0) == INF_DIST
+    assert idx.query_one(0, 0, 0) == 0
+    # level above any edge quality -> INF
+    assert idx.query_one(0, 1, idx.num_levels) == INF_DIST
+
+
+# ------------------------------------------------------------ Thm 3 / minimal
+def test_theorem3_monotonicity():
+    """Within a (vertex, hub) group both dist and wlev strictly increase."""
+    g = road_grid(10, 10, num_levels=5, seed=3)
+    idx = build_wc_index(g)
+    for v in range(g.num_nodes):
+        c = int(idx.count[v])
+        h, d, w = (idx.hub_rank[v, :c], idx.dist[v, :c], idx.wlev[v, :c])
+        assert np.all(np.diff(h) >= 0), "labels must be hub-sorted"
+        for hub in np.unique(h):
+            m = h == hub
+            assert np.all(np.diff(d[m]) > 0)
+            assert np.all(np.diff(w[m]) > 0)
+
+
+def test_soundness_entries_are_real_paths():
+    """Every index entry (hub, d, w) corresponds to an actual w-path of
+    exactly that constrained distance (soundness, via the oracle)."""
+    g = scale_free(80, 3, num_levels=4, seed=9)
+    idx = build_wc_index(g)
+    for v in range(0, g.num_nodes, 7):
+        c = int(idx.count[v])
+        for i in range(c):
+            hub = int(idx.order[idx.hub_rank[v, i]])
+            d, wl = int(idx.dist[v, i]), int(idx.wlev[v, i])
+            if hub == v:
+                assert d == 0
+                continue
+            real = wcsd_bfs(g, v, hub, min(wl, g.num_levels - 1))
+            # d is the w-constrained distance at quality level wl
+            assert real <= d
+            # and a path of quality >= wl with length d exists:
+            # oracle at level wl must be == d (completeness of entry)
+            assert real == d
+
+
+def test_minimality_no_dominated_entries():
+    g = erdos_renyi(100, 4.0, num_levels=4, seed=11)
+    idx = build_wc_index(g)
+    total = 0
+    for v in range(g.num_nodes):
+        c = int(idx.count[v])
+        h = idx.hub_rank[v, :c]
+        keep = pareto_filter_grouped(h.astype(np.int64),
+                                     idx.dist[v, :c].astype(np.int64),
+                                     idx.wlev[v, :c].astype(np.int64))
+        total += c
+        assert keep.all(), f"dominated label entry at vertex {v}"
+
+
+def test_completeness_against_pareto_oracle():
+    """Every Pareto-optimal (distance, quality) pair is answerable."""
+    g = scale_free(60, 2, num_levels=5, seed=13)
+    idx = build_wc_index(g)
+    s = 0
+    D = pareto_dists(g, s)   # [V, W] oracle distances per level
+    for t in range(1, g.num_nodes, 5):
+        for l in range(g.num_levels):
+            assert idx.query_one(s, t, l) == D[t, l]
+
+
+# ----------------------------------------------------------- batched builder
+@given(st.integers(20, 70), st.integers(2, 4), st.integers(0, 500),
+       st.sampled_from([4, 16, 64]))
+@settings(max_examples=10, deadline=None)
+def test_batched_builder_fuzz(n, levels, seed, batch):
+    g = _random_graph(n, 3.0, levels, seed)
+    idx, stats = build_wc_index_batched(g, batch_size=batch)
+    s, t, wl = random_queries(g, 50, seed=seed + 2)
+    exp = np.array([wcsd_bfs(g, int(a), int(b), int(w))
+                    for a, b, w in zip(s, t, wl)])
+    assert np.array_equal(idx.query_batch(s, t, wl), exp)
+
+
+def test_cleaning_restores_sequential_minimal_size():
+    g = scale_free(150, 3, num_levels=4, seed=17)
+    seq = build_wc_index(g)
+    bat, _ = build_wc_index_batched(g, batch_size=32)
+    cleaned, removed = clean_index(bat)
+    assert bat.size_entries() >= seq.size_entries()
+    assert cleaned.size_entries() == seq.size_entries()
+    s, t, wl = random_queries(g, 200, seed=3)
+    assert np.array_equal(cleaned.query_batch(s, t, wl),
+                          seq.query_batch(s, t, wl))
+
+
+# ------------------------------------------------------------------ pruning
+def test_pruning_reduces_index_size():
+    g = scale_free(150, 3, num_levels=3, seed=19)
+    pruned = build_wc_index(g, prune=True)
+    unpruned = build_wc_index(g, prune=False)
+    assert pruned.size_entries() < unpruned.size_entries()
+    s, t, wl = random_queries(g, 100, seed=4)
+    assert np.array_equal(pruned.query_batch(s, t, wl),
+                          unpruned.query_batch(s, t, wl))
+
+
+# ---------------------------------------------------------------- dominance
+@given(st.lists(st.tuples(st.integers(0, 20), st.integers(0, 10)),
+                min_size=1, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_pareto_filter_properties(pairs):
+    d = np.array([p[0] for p in pairs], dtype=np.int64)
+    w = np.array([p[1] for p in pairs], dtype=np.int64)
+    keep = pareto_filter(d, w)
+    kept = [(int(a), int(b)) for a, b in zip(d[keep], w[keep])]
+    # kept entries are mutually non-dominating
+    for i, (d1, w1) in enumerate(kept):
+        for j, (d2, w2) in enumerate(kept):
+            if i != j:
+                assert not (d1 <= d2 and w1 >= w2), (kept, i, j)
+    # every dropped entry is dominated by some kept entry
+    for d0, w0 in zip(d[~keep], w[~keep]):
+        assert any(kd <= d0 and kw >= w0 for kd, kw in kept)
