@@ -31,6 +31,8 @@ def bench_query_kernel(B=1024, L=256):
 
     compiled = jax.jit(query_batch_jnp).lower(*args).compile()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+        ca = ca[0] if ca else {}
     xla_bytes = float(ca.get("bytes accessed", 0.0))
     # the kernel's HBM traffic: gathered rows in + [B] out (everything else
     # stays in VMEM tiles)
@@ -51,6 +53,68 @@ def bench_query_kernel(B=1024, L=256):
     rows.append(dict(table="kernel_wcsd_query", dataset=f"B{B}xL{L}",
                      algo="jnp_us_per_query",
                      value=(time.perf_counter() - t0) / 3 / B * 1e6))
+    return rows
+
+
+def bench_segmented_kernel(B=2048, V=4000, seed=0):
+    """Segmented (CSR bucket-pair) kernel vs the dense gathered kernel on a
+    skewed label-length distribution: HBM traffic and compare volume.
+
+    The dense path pads every label row to the global max width; the
+    segmented path routes each query to tiles shaped for its own endpoints
+    and gathers rows in-kernel (scalar prefetch), so neither the [B, L]
+    gathered copies nor the wide pads ever hit HBM."""
+    from repro.core.generators import random_queries, scale_free
+    from repro.core.query import DeviceQueryEngine, plan_query_batch
+    from repro.core.wc_index import build_wc_index, round_to_lane
+
+    rows = []
+    g = scale_free(V, 4, num_levels=9, seed=seed)
+    idx = build_wc_index(g, ordering="degree")
+    packed = idx.packed()
+    s, t, w = random_queries(g, B, seed=seed + 1)
+    cap128 = round_to_lane(int(idx.count.max()))
+    widths = packed.bucket_widths.astype(np.int64)
+    plan = plan_query_batch(packed.bucket_of, s, t)
+
+    # dense gathered kernel: 4 arrays (hs/ds/ht/dt) of [B, cap128] in + [B]
+    dense_bytes = 4.0 * (4 * B * cap128 + B)
+    dense_cmp = float(B) * cap128 * cap128
+    # segmented kernel: per query 3 int32 rows per side at bucket width
+    seg_bytes = sum(4.0 * len(p.positions) *
+                    (3 * (int(widths[p.bucket_s]) + int(widths[p.bucket_t])) + 1)
+                    for p in plan)
+    seg_cmp = float(sum(len(p.positions) *
+                        int(widths[p.bucket_s] * widths[p.bucket_t])
+                        for p in plan))
+    name = f"B{B}xV{V}"
+    rows += [
+        dict(table="kernel_segmented", dataset=name, algo="dense_hbm_bytes",
+             value=dense_bytes),
+        dict(table="kernel_segmented", dataset=name, algo="seg_hbm_bytes",
+             value=seg_bytes),
+        dict(table="kernel_segmented", dataset=name, algo="hbm_ratio",
+             value=dense_bytes / seg_bytes),
+        dict(table="kernel_segmented", dataset=name, algo="dense_cmp_volume",
+             value=dense_cmp),
+        dict(table="kernel_segmented", dataset=name, algo="seg_cmp_volume",
+             value=seg_cmp),
+        dict(table="kernel_segmented", dataset=name, algo="cmp_ratio",
+             value=dense_cmp / seg_cmp),
+        dict(table="kernel_segmented", dataset=name, algo="sub_batches",
+             value=len(plan)),
+    ]
+    # CPU wall time of the XLA fallbacks (scale reference only)
+    dense = DeviceQueryEngine(idx)
+    seg = DeviceQueryEngine(idx, layout="csr")
+    np.asarray(dense.query(s, t, w)); np.asarray(seg.query(s, t, w))
+    for algo, eng in [("dense_us_per_query", dense),
+                      ("seg_us_per_query", seg)]:
+        t0 = time.perf_counter()
+        for _ in range(3):
+            np.asarray(eng.query(s, t, w))
+        rows.append(dict(table="kernel_segmented", dataset=name, algo=algo,
+                         value=(time.perf_counter() - t0) / 3 / B * 1e6))
     return rows
 
 

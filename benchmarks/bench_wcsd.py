@@ -178,6 +178,61 @@ def bench_batched_builder():
     return rows
 
 
+def bench_label_store(dataset="SO(s)", n_queries=2048):
+    """Padded vs CSR-packed label store on a skewed scale-free config:
+    store bytes (padded [V, cap] vs flat CSR vs bucket tiles) and µs/query
+    of the dense vs segmented device path."""
+    rows = []
+    g = _social(dataset)
+    idx = build_wc_index(g, ordering="degree")
+    packed = idx.packed()
+    V, cap = idx.num_nodes, idx.label_capacity
+    # what the dense pallas engine actually ships: width padded to 128
+    from repro.core.wc_index import round_to_lane
+    cap128 = round_to_lane(int(idx.count.max()))
+    padded_bytes = V * cap128 * 12 + idx.count.nbytes
+    rows += [
+        dict(table="label_store", dataset=dataset, algo="entries",
+             value=idx.size_entries()),
+        dict(table="label_store", dataset=dataset, algo="max_label",
+             value=int(idx.count.max())),
+        dict(table="label_store", dataset=dataset, algo="padded_bytes",
+             value=padded_bytes),
+        dict(table="label_store", dataset=dataset, algo="csr_bytes",
+             value=packed.memory_bytes()),
+        dict(table="label_store", dataset=dataset, algo="csr_tile_bytes",
+             value=packed.tile_memory_bytes()),
+        dict(table="label_store", dataset=dataset, algo="bytes_ratio",
+             value=padded_bytes / max(packed.memory_bytes(), 1)),
+        dict(table="label_store", dataset=dataset, algo="num_buckets",
+             value=packed.num_buckets),
+    ]
+    s, t, wl = random_queries(g, n_queries, seed=21)
+    dense = DeviceQueryEngine(idx)
+    seg = DeviceQueryEngine(idx, layout="csr")
+    np.asarray(dense.query(s, t, wl))       # warmup compiles
+    np.asarray(seg.query(s, t, wl))
+    t_dense, _ = _time(lambda: np.asarray(dense.query(s, t, wl)), repeat=3)
+    t_seg, _ = _time(lambda: np.asarray(seg.query(s, t, wl)), repeat=3)
+    # compare volume: dense pays B * cap128^2, segmented pays the bucket
+    # pair widths of each routed sub-batch
+    from repro.core.query import plan_query_batch
+    widths = packed.bucket_widths.astype(np.int64)
+    seg_cmp = sum(len(p.positions) * int(widths[p.bucket_s] * widths[p.bucket_t])
+                  for p in plan_query_batch(packed.bucket_of, s, t))
+    rows += [
+        dict(table="label_store", dataset=dataset, algo="dense_us_per_query",
+             value=t_dense / n_queries * 1e6),
+        dict(table="label_store", dataset=dataset, algo="seg_us_per_query",
+             value=t_seg / n_queries * 1e6),
+        dict(table="label_store", dataset=dataset, algo="dense_cmp_volume",
+             value=float(n_queries) * cap128 * cap128),
+        dict(table="label_store", dataset=dataset, algo="seg_cmp_volume",
+             value=float(seg_cmp)),
+    ]
+    return rows
+
+
 def bench_serving(batch=4096):
     """Throughput of the serving engine (batched device queries)."""
     rows = []

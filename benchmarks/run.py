@@ -28,7 +28,12 @@ def main() -> None:
             n_levels=8 if args.quick else 20),
         "batched": bench_wcsd.bench_batched_builder,
         "serving": bench_wcsd.bench_serving,
+        "label_store": lambda: bench_wcsd.bench_label_store(
+            dataset="MV(s)" if args.quick else "SO(s)",
+            n_queries=256 if args.quick else 2048),
         "kernel_query": bench_kernels.bench_query_kernel,
+        "kernel_segmented": lambda: bench_kernels.bench_segmented_kernel(
+            B=256 if args.quick else 2048, V=800 if args.quick else 4000),
         "kernel_cin": bench_kernels.bench_cin_traffic,
     }
     if args.only:

@@ -17,15 +17,23 @@ from repro.core.ref import wcsd_bfs
 def main():
     g = scale_free(2000, 4, num_levels=5, seed=0)
     idx = build_wc_index(g)
-    srv = WCSDServer(idx, max_batch=512)
-
     s, t, wl = random_queries(g, 10_000, seed=1)
-    t0 = time.perf_counter()
-    out = srv.query_many(s, t, wl)
-    dt = time.perf_counter() - t0
-    print(f"10,000 queries in {dt:.2f}s -> {len(s)/dt:,.0f} qps "
-          f"({dt/len(s)*1e6:.0f} us/query)")
-    print(f"batches: {srv.stats.batches}, memo hits: {srv.stats.memo_hits}")
+
+    # layout="padded": one [V, cap] store; layout="csr": CSR-packed bucket
+    # tiles, flushes planned per bucket pair (see docs/index-format.md)
+    out = None
+    for layout in ("padded", "csr"):
+        srv = WCSDServer(idx, max_batch=512, layout=layout)
+        srv.query_many(s[:64], t[:64], wl[:64])  # warm compile
+        t0 = time.perf_counter()
+        got = srv.query_many(s, t, wl)
+        dt = time.perf_counter() - t0
+        print(f"[{layout:6s}] 10,000 queries in {dt:.2f}s -> "
+              f"{len(s)/dt:,.0f} qps ({dt/len(s)*1e6:.0f} us/query), "
+              f"batches: {srv.stats.batches}, "
+              f"memo hits: {srv.stats.memo_hits}")
+        assert out is None or np.array_equal(out, got)
+        out = got
 
     # spot check vs oracle
     for i in range(0, 200, 37):

@@ -16,6 +16,7 @@ the (at most) two label rows per query with collective-permute-free
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -23,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .graph import INF_DIST
-from .wc_index import WCIndex
+from .wc_index import PackedLabels, WCIndex, round_to_lane
 
 DEV_INF = jnp.int32(1 << 29)
 
@@ -87,15 +88,73 @@ def query_batch_sorted_jnp(hub, dist, wlev, count, s, t, w_level):
     return jnp.where(best >= DEV_INF, INF_DIST, best).astype(jnp.int32)
 
 
+@dataclasses.dataclass
+class QuerySubBatch:
+    """One bucket-pair slice of an incoming batch (see `plan_query_batch`)."""
+    bucket_s: int
+    bucket_t: int
+    positions: np.ndarray  # [n] indices into the original batch
+
+
+def plan_query_batch(bucket_of: np.ndarray, s: np.ndarray, t: np.ndarray
+                     ) -> list[QuerySubBatch]:
+    """Group a (s, t) batch by the (bucket(s), bucket(t)) pair.
+
+    The dense path pays ``B * cap^2`` hub compares where cap is the *global*
+    max label length; routing each query to the tile pair sized for its own
+    endpoints bounds the compare volume per query by
+    ``width(bucket(s)) * width(bucket(t))`` — on skewed label distributions
+    almost every query lands in the smallest bucket pair. Sub-batches come
+    back in a deterministic (bucket_s, bucket_t) order and their position
+    arrays partition ``arange(len(s))``.
+    """
+    bucket_of = np.asarray(bucket_of)
+    bs = bucket_of[np.asarray(s)]
+    bt = bucket_of[np.asarray(t)]
+    nb = int(bucket_of.max()) + 1 if len(bucket_of) else 1
+    key = bs.astype(np.int64) * nb + bt
+    order = np.argsort(key, kind="stable")
+    uniq, starts = np.unique(key[order], return_index=True)
+    bounds = np.append(starts, len(order))
+    return [QuerySubBatch(bucket_s=int(k // nb), bucket_t=int(k % nb),
+                          positions=order[a:b])
+            for k, a, b in zip(uniq, bounds[:-1], bounds[1:])]
+
+
 class DeviceQueryEngine:
-    """Holds device-resident padded labels and answers query batches."""
+    """Holds device-resident labels and answers query batches.
+
+    layout="padded": one [V, cap] store, every query pays the global-max
+    label width (kernel: `wcsd_query_gathered`).
+    layout="csr": the CSR-packed store's length-bucketed tiles; batches are
+    split by `plan_query_batch` and each sub-batch runs the segmented
+    kernel shaped for its own bucket pair (`wcsd_query_segmented`).
+    """
 
     def __init__(self, idx: WCIndex, cap: int | None = None,
-                 use_pallas: bool = False, interpret: bool = True):
+                 use_pallas: bool = False, interpret: bool = True,
+                 layout: str = "padded"):
+        if layout not in ("padded", "csr"):
+            raise ValueError(f"unknown layout: {layout!r}")
+        if layout == "csr" and cap is not None:
+            raise ValueError("cap (label-row trimming) only applies to the "
+                             "padded layout; the CSR store keeps exact rows")
+        self.layout = layout
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.num_levels = idx.num_levels
+        if layout == "csr":
+            packed = idx.packed()
+            self.packed = packed
+            self._bucket_of = packed.bucket_of
+            self._slot_of = packed.slot_of
+            self._tiles = [tuple(jnp.asarray(a) for a in packed.bucket_tiles(b))
+                           for b in range(packed.num_buckets)]
+            return
         h, d, w, c = idx.padded_device_arrays(cap)
         # pad label width to a lane-friendly multiple of 128 for the kernel
         L = h.shape[1]
-        Lp = max(128, int(np.ceil(L / 128)) * 128) if use_pallas else L
+        Lp = round_to_lane(L) if use_pallas else L
         if Lp != L:
             pad = ((0, 0), (0, Lp - L))
             h = np.pad(h, pad, constant_values=-1)
@@ -105,11 +164,10 @@ class DeviceQueryEngine:
         self.dist = jnp.asarray(d)
         self.wlev = jnp.asarray(w)
         self.count = jnp.asarray(c)
-        self.use_pallas = use_pallas
-        self.interpret = interpret
-        self.num_levels = idx.num_levels
 
     def query(self, s, t, w_level) -> jax.Array:
+        if self.layout == "csr":
+            return self._query_segmented(s, t, w_level)
         s = jnp.asarray(s, jnp.int32)
         t = jnp.asarray(t, jnp.int32)
         w_level = jnp.asarray(w_level, jnp.int32)
@@ -119,6 +177,34 @@ class DeviceQueryEngine:
                                    s, t, w_level, interpret=self.interpret)
         return query_batch_jnp(self.hub, self.dist, self.wlev, self.count,
                                s, t, w_level)
+
+    def _query_segmented(self, s, t, w_level) -> jax.Array:
+        """Plan on host, route each sub-batch to its bucket-pair kernel."""
+        from ..kernels import ops as kops
+        s = np.asarray(s, np.int32)
+        t = np.asarray(t, np.int32)
+        w_level = np.asarray(w_level, np.int32)
+        out = np.full(s.shape[0], INF_DIST, dtype=np.int32)
+        for sub in plan_query_batch(self._bucket_of, s, t):
+            pos = sub.positions
+            n = len(pos)
+            # pad sub-batch to the next power of two: the compiled kernel
+            # count stays O(buckets^2 * log B) instead of one per batch size
+            npad = 1 << max(0, (n - 1).bit_length())
+            srow = np.zeros(npad, dtype=np.int32)
+            trow = np.zeros(npad, dtype=np.int32)
+            wq = np.full(npad, self.num_levels + 1, dtype=np.int32)  # pad:
+            srow[:n] = self._slot_of[s[pos]]      # infeasible at any level
+            trow[:n] = self._slot_of[t[pos]]
+            wq[:n] = w_level[pos]
+            hs, ds, ws = self._tiles[sub.bucket_s]
+            ht, dt, wt = self._tiles[sub.bucket_t]
+            res = kops.wcsd_query_segmented(
+                hs, ds, ws, ht, dt, wt,
+                jnp.asarray(srow), jnp.asarray(trow), jnp.asarray(wq),
+                interpret=self.interpret, use_kernel=self.use_pallas)
+            out[pos] = np.asarray(res)[:n]
+        return jnp.asarray(out)
 
     def query_from_quality(self, s, t, w: np.ndarray, levels: np.ndarray):
         """Real-valued thresholds -> levels (exact canonicalization)."""

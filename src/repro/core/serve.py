@@ -29,8 +29,12 @@ class ServeStats:
 
 class WCSDServer:
     def __init__(self, idx: WCIndex, max_batch: int = 1024,
-                 use_pallas: bool = False, memo_capacity: int = 65536):
-        self.engine = DeviceQueryEngine(idx, use_pallas=use_pallas)
+                 use_pallas: bool = False, memo_capacity: int = 65536,
+                 layout: str = "padded"):
+        # layout="csr" serves from the CSR-packed bucket tiles: each flush
+        # is planned by bucket pair and routed to the segmented kernel.
+        self.engine = DeviceQueryEngine(idx, use_pallas=use_pallas,
+                                        layout=layout)
         self.max_batch = int(max_batch)
         self.memo: collections.OrderedDict[tuple, int] = collections.OrderedDict()
         self.memo_capacity = memo_capacity
@@ -63,8 +67,11 @@ class WCSDServer:
         batch = self.pending
         self.pending = []
         n = len(batch)
-        # pad to the next power of two (bounded recompiles)
-        padded = 1 << max(0, (n - 1).bit_length())
+        # pad to the next power of two (bounded recompiles); the csr engine
+        # pads each planned sub-batch itself, so padding here would only add
+        # dummy queries that the segmented kernels compute and discard
+        padded = n if self.engine.layout == "csr" else \
+            1 << max(0, (n - 1).bit_length())
         rid = np.array([b[0] for b in batch], dtype=np.int64)
         s = np.zeros(padded, dtype=np.int32)
         t = np.zeros(padded, dtype=np.int32)

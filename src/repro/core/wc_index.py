@@ -129,6 +129,10 @@ class WCIndex:
         dsum = np.where(ok, dsum, INF_DIST)
         return np.minimum(dsum.min(axis=(1, 2)), INF_DIST).astype(np.int32)
 
+    def packed(self, lane: int = 128) -> "PackedLabels":
+        """CSR-packed view of the labels (see `PackedLabels`)."""
+        return PackedLabels.from_index(self, lane=lane)
+
     # ------------------------------------------------------- device mirrors
     def padded_device_arrays(self, cap: int | None = None):
         """(hub_rank, dist, wlev, count) trimmed/padded to ``cap`` columns,
@@ -142,6 +146,151 @@ class WCIndex:
             return out
         return (fit(self.hub_rank, -1), fit(self.dist, INF_DIST),
                 fit(self.wlev, -1), self.count.copy())
+
+
+LANE = 128  # TPU lane width; bucket tile widths are multiples of this
+
+
+def round_to_lane(n: int, lane: int = LANE) -> int:
+    """Smallest multiple of ``lane`` >= max(n, 1) — the width the dense
+    device path actually ships a label row at."""
+    return max(lane, -(-int(n) // lane) * lane)
+
+
+@dataclasses.dataclass
+class PackedLabels:
+    """CSR-packed label store: the canonical compact format.
+
+    The padded `[V, cap]` arrays on `WCIndex` are sized by the single worst
+    vertex — on scale-free graphs one hub-heavy vertex inflates memory and
+    query compare volume for *every* vertex. This store keeps exactly
+    `size_entries()` label entries:
+
+      hub_rank/dist/wlev : [E] flat arrays, vertex-major; within a vertex the
+                           entries keep the hub-sorted Thm.-3 order.
+      offsets            : [V+1] CSR row pointers; row v is
+                           ``flat[offsets[v]:offsets[v+1]]``.
+
+    For the device query path, vertices are additionally *length-bucketed*:
+    bucket b holds every vertex whose label length fits in ``bucket_widths[b]``
+    (lane-multiple widths in geometric progression: 128, 256, 512, ... so the
+    number of compiled kernel variants stays logarithmic in the max label
+    length). `bucket_tiles(b)` materializes bucket b as padded
+    ``[n_b, bucket_widths[b]]`` tiles with the query-kernel pad contract
+    (hub = -1, dist = INF_DIST, wlev = -1); total tile memory is
+    ``sum_b n_b * W_b`` entries instead of ``V * cap``.
+    """
+
+    hub_rank: np.ndarray       # [E] int32
+    dist: np.ndarray           # [E] int32
+    wlev: np.ndarray           # [E] int32
+    offsets: np.ndarray        # [V+1] int64
+    bucket_widths: np.ndarray  # [NB] int32 padded widths, ascending
+    bucket_of: np.ndarray      # [V] int32 bucket id per vertex
+    slot_of: np.ndarray        # [V] int32 row of the vertex inside its bucket
+    bucket_vertices: list      # [NB] arrays: bucket slot -> vertex id
+
+    # ----------------------------------------------------------- construction
+    @staticmethod
+    def from_index(idx: "WCIndex", lane: int = LANE) -> "PackedLabels":
+        V = idx.num_nodes
+        count = idx.count.astype(np.int64)
+        offsets = np.zeros(V + 1, dtype=np.int64)
+        np.cumsum(count, out=offsets[1:])
+        E = int(offsets[-1])
+        # flatten the padded rows: entry j of vertex v -> offsets[v] + j
+        rows = np.repeat(np.arange(V, dtype=np.int64), count)
+        cols = _concat_ranges(count)
+        hub = np.ascontiguousarray(idx.hub_rank[rows, cols])
+        dist = np.ascontiguousarray(idx.dist[rows, cols])
+        wlev = np.ascontiguousarray(idx.wlev[rows, cols])
+        assert hub.shape == (E,)
+        # geometric lane-multiple buckets: width = lane * 2^b
+        need = np.maximum(count, 1)
+        blog = np.ceil(np.log2(np.maximum(np.ceil(need / lane), 1))
+                       ).astype(np.int64)
+        widths_all = lane * (1 << blog)                      # [V]
+        uniq = np.unique(widths_all)
+        bucket_of = np.searchsorted(uniq, widths_all).astype(np.int32)
+        slot_of = np.zeros(V, dtype=np.int32)
+        bucket_vertices = []
+        for b in range(len(uniq)):
+            members = np.flatnonzero(bucket_of == b).astype(np.int32)
+            slot_of[members] = np.arange(len(members), dtype=np.int32)
+            bucket_vertices.append(members)
+        return PackedLabels(hub_rank=hub, dist=dist, wlev=wlev,
+                            offsets=offsets,
+                            bucket_widths=uniq.astype(np.int32),
+                            bucket_of=bucket_of, slot_of=slot_of,
+                            bucket_vertices=bucket_vertices)
+
+    # ------------------------------------------------------------------ props
+    @property
+    def num_nodes(self) -> int:
+        return int(len(self.offsets) - 1)
+
+    @property
+    def num_buckets(self) -> int:
+        return int(len(self.bucket_widths))
+
+    def size_entries(self) -> int:
+        return int(len(self.hub_rank))
+
+    def row(self, v: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        s, e = int(self.offsets[v]), int(self.offsets[v + 1])
+        return self.hub_rank[s:e], self.dist[s:e], self.wlev[s:e]
+
+    def memory_bytes(self) -> int:
+        """Flat CSR store: 3 int32 per entry + the offset array."""
+        return int(self.hub_rank.nbytes + self.dist.nbytes + self.wlev.nbytes
+                   + self.offsets.nbytes)
+
+    def tile_memory_bytes(self) -> int:
+        """Device-resident bucket tiles: sum_b n_b * W_b entries * 3 int32."""
+        n_b = np.array([len(m) for m in self.bucket_vertices], dtype=np.int64)
+        return int((n_b * self.bucket_widths.astype(np.int64)).sum() * 12)
+
+    # ------------------------------------------------------------ conversions
+    def bucket_tiles(self, b: int):
+        """Bucket b as padded [n_b, W_b] (hub, dist, wlev) tiles.
+
+        Pad contract (see kernels/wcsd_query.py): hub = -1, dist = INF_DIST,
+        wlev = -1 — a pad cell never passes the ``wlev >= w`` feasibility
+        mask, so its distance is replaced by DEV_INF before the reduction.
+        """
+        members = self.bucket_vertices[b]
+        W = int(self.bucket_widths[b])
+        n = len(members)
+        hub = np.full((n, W), -1, dtype=np.int32)
+        dist = np.full((n, W), INF_DIST, dtype=np.int32)
+        wlev = np.full((n, W), -1, dtype=np.int32)
+        lens = (self.offsets[members + 1] - self.offsets[members])
+        rows = np.repeat(np.arange(n, dtype=np.int64), lens)
+        cols = _concat_ranges(lens)
+        flat = np.repeat(self.offsets[members], lens) + cols
+        hub[rows, cols] = self.hub_rank[flat]
+        dist[rows, cols] = self.dist[flat]
+        wlev[rows, cols] = self.wlev[flat]
+        return hub, dist, wlev
+
+    def to_padded(self, cap: int | None = None):
+        """Round-trip back to padded `[V, cap]` arrays (numpy reference
+        path): returns (hub_rank, dist, wlev, count) with the same fill
+        values as `WCIndex.padded_device_arrays`."""
+        V = self.num_nodes
+        count = (self.offsets[1:] - self.offsets[:-1]).astype(np.int32)
+        c = int(cap if cap is not None else max(int(count.max()), 1))
+        hub = np.full((V, c), -1, dtype=np.int32)
+        dist = np.full((V, c), INF_DIST, dtype=np.int32)
+        wlev = np.full((V, c), -1, dtype=np.int32)
+        lens = np.minimum(count.astype(np.int64), c)
+        rows = np.repeat(np.arange(V, dtype=np.int64), lens)
+        cols = _concat_ranges(lens)
+        flat = np.repeat(self.offsets[:-1], lens) + cols
+        hub[rows, cols] = self.hub_rank[flat]
+        dist[rows, cols] = self.dist[flat]
+        wlev[rows, cols] = self.wlev[flat]
+        return hub, dist, wlev, count
 
 
 def _ensure_capacity(idx_arrays, count, need):

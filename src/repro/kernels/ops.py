@@ -57,6 +57,28 @@ def wcsd_query(hub, dist, wlev, count, s, t, w_level, *,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def wcsd_query_segmented(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
+                         srow, trow, w_level, *, interpret: bool = True,
+                         use_kernel: bool = True):
+    """One bucket-pair sub-batch of the segmented CSR query path.
+
+    hub_s/dist_s/wlev_s: [Ns, Ws] s-side bucket tiles, hub_t/...: [Nt, Wt]
+    t-side tiles (Ws, Wt multiples of 128; pad contract hub = -1,
+    wlev = -1). srow/trow: [B] row ids into the tiles, w_level: [B].
+    Returns [B] int32 distances (INF_DIST when no feasible path)."""
+    if use_kernel:
+        best = _wq.wcsd_query_segmented(hub_s, dist_s, wlev_s,
+                                        hub_t, dist_t, wlev_t,
+                                        srow, trow, w_level,
+                                        interpret=interpret)
+    else:
+        best = _ref.wcsd_query_segmented_ref(hub_s, dist_s, wlev_s,
+                                             hub_t, dist_t, wlev_t,
+                                             srow, trow, w_level)
+    return jnp.where(best >= DEV_INF, INF_DIST, best).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
 def frontier_relax(nbr_pad, lvl_pad, Fw, R, *, interpret: bool = True,
                    use_kernel: bool = True):
     """One constrained-relaxation round over a padded adjacency.

@@ -16,6 +16,26 @@ def wcsd_query_gathered_ref(hs, ds, ht, dt):
     return jnp.where(eq, dsum, DEV_INF).min(axis=(1, 2))
 
 
+def wcsd_query_segmented_ref(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
+                             srow, trow, w_level):
+    """Gather + mask + min-plus in plain jnp (segmented-path oracle).
+
+    Store tiles [Ns, Ws] / [Nt, Wt] (widths may differ), query rows and
+    levels [B]. Pad cells carry wlev = -1 so the feasibility mask covers
+    in-bounds masking too."""
+    def side(store_h, store_d, store_w, rows):
+        h = store_h[rows]
+        m = store_w[rows] >= w_level[:, None]
+        d = jnp.where(m, jnp.minimum(store_d[rows], DEV_INF), DEV_INF)
+        return h, d
+
+    hs, ds = side(hub_s, dist_s, wlev_s, srow)
+    ht, dt = side(hub_t, dist_t, wlev_t, trow)
+    eq = hs[:, :, None] == ht[:, None, :]
+    return jnp.where(eq, ds[:, :, None] + dt[:, None, :], DEV_INF).min(
+        axis=(1, 2))
+
+
 def frontier_relax_gathered_ref(fw_nbr, lvl_pad, R):
     wprime = jnp.minimum(fw_nbr, lvl_pad)
     cand = wprime.max(axis=1)

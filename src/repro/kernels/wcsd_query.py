@@ -28,6 +28,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEV_INF = 1 << 29  # python int: safe to close over in pallas kernels
 
@@ -73,4 +74,77 @@ def wcsd_query_gathered(hs, ds, ht, dt, *, block_b: int = 8,
         out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
         interpret=interpret,
     )(hs, ds, ht, dt)
+    return out[:, 0]
+
+
+# --------------------------------------------------------------- segmented
+def _segmented_kernel(srow_ref, trow_ref, wq_ref,
+                      hs_ref, ds_ref, ws_ref, ht_ref, dt_ref, wt_ref,
+                      out_ref):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, DEV_INF)
+
+    wq = wq_ref[i]
+    # feasibility mask applied in-kernel: store pads carry wlev = -1 and
+    # real entries wlev >= 0, so one compare covers both in-bounds and
+    # quality-threshold masking (no count array on device).
+    hs = hs_ref[...]                                        # [1, Ws]
+    ds = jnp.where(ws_ref[...] >= wq,
+                   jnp.minimum(ds_ref[...], DEV_INF), DEV_INF)
+    ht = ht_ref[...]                                        # [1, bLt]
+    dt = jnp.where(wt_ref[...] >= wq,
+                   jnp.minimum(dt_ref[...], DEV_INF), DEV_INF)
+    eq = hs[0, :, None] == ht[0, None, :]                   # [Ws, bLt]
+    best = jnp.where(eq, ds[0, :, None] + dt[0, None, :], DEV_INF).min()
+    out_ref[0, 0] = jnp.minimum(out_ref[0, 0], best)
+
+
+@functools.partial(jax.jit, static_argnames=("block_lt", "interpret"))
+def wcsd_query_segmented(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
+                         srow, trow, w_level, *, block_lt: int = 128,
+                         interpret: bool = True):
+    """Bucket-pair query path: gathers CSR label rows in-kernel.
+
+    Unlike `wcsd_query_gathered`, whose caller materializes [B, L] gathered
+    + masked copies in HBM, this kernel reads label rows straight out of the
+    bucket-tiled store: the query's row ids arrive as scalar-prefetch
+    arguments (`PrefetchScalarGridSpec`) and each BlockSpec index_map picks
+    block ``(srow[i], 0)`` / ``(trow[i], j)`` of the store, so the gather is
+    the DMA itself. Feasibility masking (wlev >= w) moves in-kernel, which
+    lets both query sides share one store — per query the HBM traffic is
+    3·(Ws + Wt) int32 instead of 4·2·L after host-side gather/mask.
+
+    hub_s/dist_s/wlev_s: [Ns, Ws] s-side bucket tiles (pad: hub -1,
+    wlev -1); hub_t/...: [Nt, Wt] t-side tiles. srow/trow/w_level: [B]
+    int32. Ws and Wt may differ (that is the point: a (128, 128) bucket
+    pair does 1/64th the compares of a 1024-padded dense row pair).
+    Returns [B] int32 best sums (>= DEV_INF means infeasible).
+    """
+    B = srow.shape[0]
+    Ws, Wt = hub_s.shape[1], hub_t.shape[1]
+    grid = (B, Wt // block_lt)
+
+    def s_spec():
+        return pl.BlockSpec((1, Ws), lambda i, j, srow, trow, wq: (srow[i], 0))
+
+    def t_spec():
+        return pl.BlockSpec((1, block_lt),
+                            lambda i, j, srow, trow, wq: (trow[i], j))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[s_spec(), s_spec(), s_spec(),
+                  t_spec(), t_spec(), t_spec()],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, srow, trow, wq: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _segmented_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        interpret=interpret,
+    )(srow, trow, w_level, hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t)
     return out[:, 0]

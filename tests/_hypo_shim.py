@@ -1,0 +1,76 @@
+"""Hypothesis pass-through with a deterministic fallback.
+
+The property tests prefer real hypothesis (declared in pyproject's test
+extra; CI installs it). When it is absent — e.g. a bare container with only
+jax/numpy/pytest — this shim stands in so the test modules still *collect
+and run*: each `@given` property is executed `max_examples` times (capped)
+with values drawn from a seeded numpy generator instead of being shrunk by
+hypothesis. Weaker fuzzing, but no skipped coverage and no collection
+errors.
+
+Only the strategy surface this repo uses is emulated: ``st.integers``,
+``st.sampled_from``, ``st.tuples``, ``st.lists``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+
+    import numpy as np
+
+    _MAX_EXAMPLES_CAP = 25  # keep the fallback fuzz pass CI-sized
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class st:  # noqa: N801 - mimic `hypothesis.strategies` module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.sample(rng) for s in strategies))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elements.sample(rng)
+                for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def run(*args, **kwargs):
+                n = getattr(run, "_max_examples",
+                            getattr(fn, "_max_examples", 20))
+                rng = np.random.default_rng(0)
+                for _ in range(min(n, _MAX_EXAMPLES_CAP)):
+                    drawn = tuple(s.sample(rng) for s in strategies)
+                    fn(*args, *drawn, **kwargs)
+            # pytest must not mistake the drawn parameters for fixtures
+            del run.__wrapped__
+            run.__signature__ = inspect.Signature()
+            return run
+        return deco

@@ -1,5 +1,6 @@
 import os
 import sys
 
-# src layout import without install
+# src layout import without install; tests dir for the _hypo_shim helper
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))

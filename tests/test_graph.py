@@ -1,6 +1,6 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo_shim import given, settings, st  # hypothesis or fallback
 
 from repro.core.graph import Graph, expand_frontier_csr
 from repro.core.generators import road_grid, scale_free, erdos_renyi

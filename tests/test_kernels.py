@@ -2,7 +2,7 @@
 hypothesis property fuzz."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo_shim import given, settings, st  # hypothesis or fallback
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,186 @@
+"""CSR-packed label store + segmented query path: round-trip fidelity,
+bucket-tiling invariants, planner coverage, and end-to-end agreement with
+the numpy oracle (`WCIndex.query_batch`) across all quality levels."""
+import numpy as np
+import pytest
+
+from repro.core.generators import random_queries, road_grid, scale_free
+from repro.core.graph import INF_DIST
+from repro.core.query import DeviceQueryEngine, plan_query_batch
+from repro.core.wc_index import PackedLabels, build_wc_index, round_to_lane
+
+
+def _indices():
+    road = build_wc_index(road_grid(12, 12, num_levels=4, seed=2))
+    social = build_wc_index(scale_free(300, 3, num_levels=5, seed=1),
+                            ordering="degree")
+    return {"road": road, "social": social}
+
+
+@pytest.fixture(scope="module")
+def indices():
+    return _indices()
+
+
+# ----------------------------------------------------------------- packing
+def test_packed_round_trip(indices):
+    for idx in indices.values():
+        packed = idx.packed()
+        assert packed.size_entries() == idx.size_entries()
+        hub, dist, wlev, count = packed.to_padded(cap=idx.label_capacity)
+        h2, d2, w2, c2 = idx.padded_device_arrays(cap=idx.label_capacity)
+        assert np.array_equal(count, c2)
+        col = np.arange(hub.shape[1])
+        m = col[None, :] < count[:, None]
+        for a, b in [(hub, h2), (dist, d2), (wlev, w2)]:
+            assert np.array_equal(a[m], b[m])
+            # pad cells carry the same sentinel contract on both paths
+            assert np.array_equal(a[~m], b[~m])
+
+
+def test_packed_rows_match_labels(indices):
+    idx = indices["social"]
+    packed = idx.packed()
+    for v in range(0, idx.num_nodes, 17):
+        c = int(idx.count[v])
+        h, d, w = packed.row(v)
+        assert np.array_equal(h, idx.hub_rank[v, :c])
+        assert np.array_equal(d, idx.dist[v, :c])
+        assert np.array_equal(w, idx.wlev[v, :c])
+
+
+def test_bucket_invariants(indices):
+    for idx in indices.values():
+        packed = idx.packed()
+        # widths are ascending multiples of 128
+        assert np.all(packed.bucket_widths % 128 == 0)
+        assert np.all(np.diff(packed.bucket_widths) > 0)
+        # every vertex lands in exactly one bucket, in the smallest width
+        # that fits its label row
+        seen = np.zeros(packed.num_nodes, dtype=int)
+        lens = packed.offsets[1:] - packed.offsets[:-1]
+        for b, members in enumerate(packed.bucket_vertices):
+            seen[members] += 1
+            W = int(packed.bucket_widths[b])
+            assert np.all(lens[members] <= W)
+            if W > 128:
+                assert np.all(lens[members] > W // 2), \
+                    "vertex placed in a wider bucket than needed"
+            # slot_of inverts bucket_vertices
+            assert np.array_equal(packed.slot_of[members],
+                                  np.arange(len(members)))
+        assert np.all(seen == 1)
+
+
+def test_bucket_tiles_pad_contract(indices):
+    idx = indices["social"]
+    packed = idx.packed()
+    lens = packed.offsets[1:] - packed.offsets[:-1]
+    for b in range(packed.num_buckets):
+        hub, dist, wlev = packed.bucket_tiles(b)
+        members = packed.bucket_vertices[b]
+        assert hub.shape == (len(members), int(packed.bucket_widths[b]))
+        col = np.arange(hub.shape[1])
+        pad = col[None, :] >= lens[members][:, None]
+        assert np.all(hub[pad] == -1)
+        assert np.all(wlev[pad] == -1)
+        assert np.all(dist[pad] == INF_DIST)
+        for v in members[:: max(1, len(members) // 8)]:
+            h, d, w = packed.row(int(v))
+            slot = int(packed.slot_of[v])
+            assert np.array_equal(hub[slot, :len(h)], h)
+            assert np.array_equal(dist[slot, :len(d)], d)
+            assert np.array_equal(wlev[slot, :len(w)], w)
+
+
+def test_packed_memory_never_exceeds_padded(indices):
+    for idx in indices.values():
+        packed = idx.packed()
+        padded_bytes = idx.num_nodes * idx.label_capacity * 12
+        assert packed.memory_bytes() <= padded_bytes + packed.offsets.nbytes
+        # tiles never exceed what the 128-aligned dense engine would ship
+        cap128 = round_to_lane(idx.label_capacity)
+        assert packed.tile_memory_bytes() <= idx.num_nodes * cap128 * 12
+
+
+# ----------------------------------------------------------------- planner
+def test_planner_partitions_batch(indices):
+    idx = indices["social"]
+    packed = idx.packed()
+    rng = np.random.default_rng(0)
+    s = rng.integers(0, idx.num_nodes, 200).astype(np.int32)
+    t = rng.integers(0, idx.num_nodes, 200).astype(np.int32)
+    plan = plan_query_batch(packed.bucket_of, s, t)
+    allpos = np.concatenate([p.positions for p in plan])
+    assert np.array_equal(np.sort(allpos), np.arange(200))
+    for p in plan:
+        assert np.all(packed.bucket_of[s[p.positions]] == p.bucket_s)
+        assert np.all(packed.bucket_of[t[p.positions]] == p.bucket_t)
+
+
+# ------------------------------------------------------------- end to end
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_segmented_matches_oracle_all_levels(indices, use_pallas):
+    """Acceptance: segmented CSR path == numpy oracle on road-grid and
+    scale-free graphs, across every w level (including the infeasible
+    level == num_levels)."""
+    for name, idx in indices.items():
+        eng = DeviceQueryEngine(idx, layout="csr", use_pallas=use_pallas)
+        rng = np.random.default_rng(7)
+        n = 40
+        s = rng.integers(0, idx.num_nodes, n).astype(np.int32)
+        t = rng.integers(0, idx.num_nodes, n).astype(np.int32)
+        for level in range(idx.num_levels + 1):
+            wl = np.full(n, level, dtype=np.int32)
+            got = np.asarray(eng.query(s, t, wl))
+            exp = idx.query_batch(s, t, wl)
+            assert np.array_equal(got, exp), (name, level)
+
+
+def test_segmented_multi_bucket_cross_pairs():
+    """A hub-heavy scale-free graph splits into >= 2 buckets; cross-bucket
+    sub-batches must agree with the oracle too."""
+    g = scale_free(1200, 4, num_levels=9, seed=42)
+    idx = build_wc_index(g, ordering="degree")
+    packed = idx.packed()
+    assert packed.num_buckets >= 2, "config no longer exercises bucketing"
+    # force queries that hit every bucket pair
+    reps = [int(m[0]) for m in packed.bucket_vertices]
+    s, t = [], []
+    for a in reps:
+        for b in reps:
+            s.append(a), t.append(b)
+    extra_s, extra_t, extra_w = random_queries(g, 100, seed=3)
+    s = np.concatenate([np.array(s, np.int32), extra_s])
+    t = np.concatenate([np.array(t, np.int32), extra_t])
+    wl = np.concatenate([np.zeros(len(reps) ** 2, np.int32), extra_w])
+    plan = plan_query_batch(packed.bucket_of, s, t)
+    assert len(plan) >= packed.num_buckets ** 2
+    eng = DeviceQueryEngine(idx, layout="csr", use_pallas=True)
+    assert np.array_equal(np.asarray(eng.query(s, t, wl)),
+                          idx.query_batch(s, t, wl))
+
+
+def test_segmented_kernel_vs_ref_op():
+    """ops.wcsd_query_segmented kernel vs jnp ref on synthetic tiles with
+    different side widths."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(11)
+    Ns, Nt, Ws, Wt, B = 12, 20, 256, 128, 33
+    hs = np.sort(rng.integers(-1, 40, size=(Ns, Ws)), 1).astype(np.int32)
+    ht = np.sort(rng.integers(-1, 40, size=(Nt, Wt)), 1).astype(np.int32)
+    ds = rng.integers(0, 100, size=(Ns, Ws)).astype(np.int32)
+    dt = rng.integers(0, 100, size=(Nt, Wt)).astype(np.int32)
+    ws = rng.integers(-1, 5, size=(Ns, Ws)).astype(np.int32)
+    wt = rng.integers(-1, 5, size=(Nt, Wt)).astype(np.int32)
+    srow = rng.integers(0, Ns, B).astype(np.int32)
+    trow = rng.integers(0, Nt, B).astype(np.int32)
+    wq = rng.integers(0, 6, B).astype(np.int32)
+    args = tuple(jnp.asarray(a) for a in (hs, ds, ws, ht, dt, wt,
+                                          srow, trow, wq))
+    got = np.asarray(ops.wcsd_query_segmented(*args))
+    exp = np.asarray(ops.wcsd_query_segmented(*args, use_kernel=False))
+    np.testing.assert_array_equal(got, exp)

@@ -1,0 +1,128 @@
+"""WCSDServer semantics: memo hits + LRU eviction, power-of-two flush
+padding, result() forcing a flush, and CSR-layout serving correctness."""
+import numpy as np
+import pytest
+
+from repro.core.generators import scale_free
+from repro.core.serve import WCSDServer
+from repro.core.wc_index import build_wc_index
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    return build_wc_index(scale_free(120, 3, num_levels=4, seed=5),
+                          ordering="degree")
+
+
+# ------------------------------------------------------------------- memo
+def test_memo_hit_skips_device(small_index):
+    srv = WCSDServer(small_index, max_batch=64)
+    r1 = srv.submit(3, 9, 1)
+    srv.flush()
+    batches_before = srv.stats.batches
+    r2 = srv.submit(3, 9, 1)          # memoized -> no pending, no flush
+    assert srv.stats.memo_hits == 1
+    assert srv.pending == []
+    assert srv.result(r2) == srv.result(r1)
+    assert srv.stats.batches == batches_before
+
+
+def test_memo_is_symmetric(small_index):
+    srv = WCSDServer(small_index, max_batch=64)
+    srv.submit(7, 2, 0)
+    srv.flush()
+    srv.submit(2, 7, 0)               # reversed endpoints hit the same key
+    assert srv.stats.memo_hits == 1
+
+
+def test_memo_distinguishes_levels(small_index):
+    srv = WCSDServer(small_index, max_batch=64)
+    srv.submit(7, 2, 0)
+    srv.flush()
+    srv.submit(7, 2, 1)               # different level -> miss
+    assert srv.stats.memo_hits == 0
+
+
+def test_memo_lru_eviction(small_index):
+    srv = WCSDServer(small_index, max_batch=1024, memo_capacity=4)
+    for i in range(6):                 # 6 distinct keys through capacity 4
+        srv.submit(i, i + 10, 0)
+    srv.flush()
+    assert len(srv.memo) == 4
+    # oldest two evicted, newest four retained
+    assert (0, 10, 0) not in srv.memo and (1, 11, 0) not in srv.memo
+    assert (5, 15, 0) in srv.memo
+    # re-submitting an evicted key is a miss; a retained key is a hit
+    srv.submit(0, 10, 0)
+    assert srv.stats.memo_hits == 0
+    srv.submit(5, 15, 0)
+    assert srv.stats.memo_hits == 1
+
+
+def test_memo_hit_refreshes_lru_order(small_index):
+    srv = WCSDServer(small_index, max_batch=1024, memo_capacity=2)
+    srv.submit(1, 11, 0)
+    srv.submit(2, 12, 0)
+    srv.flush()
+    srv.submit(1, 11, 0)               # hit refreshes (1, 11, 0)
+    srv.submit(3, 13, 0)               # inserting a third evicts (2, 12, 0)
+    srv.flush()
+    assert (1, 11, 0) in srv.memo
+    assert (2, 12, 0) not in srv.memo
+
+
+# ------------------------------------------------------------------ flush
+def test_flush_pads_to_power_of_two(small_index):
+    srv = WCSDServer(small_index, max_batch=1024)
+    seen = []
+    inner = srv.engine.query
+    srv.engine.query = lambda s, t, w: (seen.append(len(np.asarray(s)))
+                                        or inner(s, t, w))
+    key = 0
+    for n, want in [(1, 1), (2, 2), (3, 4), (5, 8), (8, 8), (9, 16)]:
+        for _ in range(n):             # fresh keys -> every submit a miss
+            srv.submit(key, key + 1, 0)
+            key += 2
+        srv.flush()
+        assert seen[-1] == want, (n, seen[-1])
+
+
+def test_flush_at_max_batch(small_index):
+    srv = WCSDServer(small_index, max_batch=4)
+    rng = np.random.default_rng(0)
+    for i in range(4):                 # distinct keys -> 4 misses
+        srv.submit(int(rng.integers(50)), int(60 + i), 0)
+    assert srv.stats.batches == 1      # auto-flushed on hitting max_batch
+    assert srv.pending == []
+
+
+def test_result_forces_flush(small_index):
+    srv = WCSDServer(small_index, max_batch=1024)
+    rid = srv.submit(4, 8, 1)
+    assert srv.pending and srv.stats.batches == 0
+    got = srv.result(rid)              # pending rid -> flush happens inline
+    assert got is not None
+    assert srv.stats.batches == 1
+    assert srv.pending == []
+    assert srv.result(12345) is None   # unknown rid: no flush, None
+
+
+# ------------------------------------------------------------ correctness
+@pytest.mark.parametrize("layout", ["padded", "csr"])
+def test_query_many_matches_oracle(small_index, layout):
+    g_queries = random_queries_for(small_index, 300, seed=9)
+    srv = WCSDServer(small_index, max_batch=64, layout=layout)
+    s, t, wl = g_queries
+    got = srv.query_many(s, t, wl)
+    exp = small_index.query_batch(s, t, wl)
+    assert np.array_equal(got, exp)
+    assert srv.stats.requests == 300
+    assert srv.stats.batches >= 1
+
+
+def random_queries_for(idx, n, seed):
+    rng = np.random.default_rng(seed)
+    s = rng.integers(0, idx.num_nodes, n).astype(np.int32)
+    t = rng.integers(0, idx.num_nodes, n).astype(np.int32)
+    wl = rng.integers(0, idx.num_levels, n).astype(np.int32)
+    return s, t, wl

@@ -3,7 +3,7 @@
 behavior — with hypothesis fuzzing over random graphs/qualities/queries."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo_shim import given, settings, st  # hypothesis or fallback
 
 from repro.core.graph import Graph, INF_DIST
 from repro.core.generators import erdos_renyi, road_grid, scale_free, random_queries
