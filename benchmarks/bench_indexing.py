@@ -1,0 +1,88 @@
+"""Old-vs-new rank-batched construction: the host-roundtrip builder
+(padded labels, pack after build) against the device-resident pipeline
+(Pallas round kernels, on-device F/R/T/E state, direct CSR emission).
+
+Reports, per graph config:
+  - build wall-clock for both paths (the old path includes the `.packed()`
+    repack it forces on serving);
+  - host sync counts: device->host ARRAY transfers (the old path downloads
+    a [B, V] emission mask every round; the new path downloads one
+    [B, V, W+1] table per batch) and scalar termination checks (identical
+    by construction — same number of rounds);
+  - store equality: the direct-CSR store must match pack-after-build on
+    every array (1.0 == identical).
+
+On CPU the Pallas kernels run in interpret mode, so the new path's
+wall-clock carries emulation overhead and the sync counts are the
+hardware-relevant comparison: on a real accelerator each array sync is a
+device round-trip stall, and the old path pays one per BFS round.
+
+CSV rows `table,dataset,algo,value` like the other benches.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.generators import erdos_renyi, road_grid, scale_free
+from repro.core.wc_index_batched import (build_wc_index_batched,
+                                         build_wc_index_batched_packed)
+
+CONFIGS = {
+    "GRID(s)": lambda: road_grid(16, 16, num_levels=5, seed=42),
+    "ER(s)": lambda: erdos_renyi(320, 4.0, num_levels=5, seed=42),
+    "BA(s)": lambda: scale_free(320, 3, num_levels=4, seed=42),
+}
+QUICK_CONFIGS = {
+    "GRID(s)": lambda: road_grid(10, 10, num_levels=4, seed=42),
+    "BA(s)": lambda: scale_free(150, 3, num_levels=4, seed=42),
+}
+
+_STORE_FIELDS = ("hub_rank", "dist", "wlev", "offsets", "bucket_widths",
+                 "bucket_of", "slot_of")
+
+
+def bench_build_paths(configs=None, batch_size=32):
+    rows = []
+    for name, make in (configs or CONFIGS).items():
+        g = make()
+
+        t0 = time.perf_counter()
+        old, so = build_wc_index_batched(g, batch_size=batch_size)
+        packed_old = old.packed()      # the repack serving had to pay
+        t_old = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        new, sn = build_wc_index_batched_packed(g, batch_size=batch_size)
+        t_new = time.perf_counter() - t0
+
+        identical = all(np.array_equal(getattr(packed_old, f),
+                                       getattr(new.labels, f))
+                        for f in _STORE_FIELDS)
+        rows += [
+            dict(table="idxbuild_wall_s", dataset=name,
+                 algo="host-roundtrip+pack", value=t_old),
+            dict(table="idxbuild_wall_s", dataset=name,
+                 algo="device-resident-csr", value=t_new),
+            dict(table="idxbuild_host_array_syncs", dataset=name,
+                 algo="host-roundtrip+pack", value=so["host_array_syncs"]),
+            dict(table="idxbuild_host_array_syncs", dataset=name,
+                 algo="device-resident-csr", value=sn["host_array_syncs"]),
+            dict(table="idxbuild_host_scalar_syncs", dataset=name,
+                 algo="host-roundtrip+pack", value=so["host_scalar_syncs"]),
+            dict(table="idxbuild_host_scalar_syncs", dataset=name,
+                 algo="device-resident-csr", value=sn["host_scalar_syncs"]),
+            dict(table="idxbuild_store_identical", dataset=name,
+                 algo="csr-vs-pack", value=float(identical)),
+            dict(table="idxbuild_entries", dataset=name,
+                 algo="device-resident-csr", value=new.size_entries()),
+        ]
+    return rows
+
+
+if __name__ == "__main__":
+    print("table,dataset,algo,value")
+    for row in bench_build_paths():
+        print(f"{row['table']},{row['dataset']},{row['algo']},"
+              f"{row['value']:.6g}", flush=True)

@@ -9,7 +9,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks import bench_kernels, bench_wcsd  # noqa: E402
+from benchmarks import bench_indexing, bench_kernels, bench_wcsd  # noqa: E402
 
 
 def main() -> None:
@@ -27,6 +27,8 @@ def main() -> None:
         "large_w": lambda: bench_wcsd.bench_large_w(
             n_levels=8 if args.quick else 20),
         "batched": bench_wcsd.bench_batched_builder,
+        "index_build": lambda: bench_indexing.bench_build_paths(
+            configs=bench_indexing.QUICK_CONFIGS if args.quick else None),
         "serving": bench_wcsd.bench_serving,
         "label_store": lambda: bench_wcsd.bench_label_store(
             dataset="MV(s)" if args.quick else "SO(s)",

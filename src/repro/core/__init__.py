@@ -1,15 +1,19 @@
 """Core of the paper reproduction: WC-INDEX and friends."""
 from .graph import Graph, INF_DIST
-from .wc_index import PackedLabels, WCIndex, build_wc_index
-from .wc_index_batched import build_wc_index_batched, clean_index
+from .wc_index import (PackedLabels, PackedLabelsBuilder, PackedWCIndex,
+                       WCIndex, build_wc_index)
+from .wc_index_batched import (build_wc_index_batched,
+                               build_wc_index_batched_packed, clean_index)
 from .ordering import make_order, degree_order, tree_decomposition_order, hybrid_order
 from .query import (DeviceQueryEngine, QuerySubBatch, plan_query_batch,
                     query_batch_jnp)
 from .serve import WCSDServer
 
 __all__ = [
-    "Graph", "INF_DIST", "PackedLabels", "WCIndex", "build_wc_index",
-    "build_wc_index_batched", "clean_index", "make_order", "degree_order",
-    "tree_decomposition_order", "hybrid_order", "DeviceQueryEngine",
-    "QuerySubBatch", "plan_query_batch", "query_batch_jnp", "WCSDServer",
+    "Graph", "INF_DIST", "PackedLabels", "PackedLabelsBuilder",
+    "PackedWCIndex", "WCIndex", "build_wc_index", "build_wc_index_batched",
+    "build_wc_index_batched_packed", "clean_index", "make_order",
+    "degree_order", "tree_decomposition_order", "hybrid_order",
+    "DeviceQueryEngine", "QuerySubBatch", "plan_query_batch",
+    "query_batch_jnp", "WCSDServer",
 ]

@@ -78,6 +78,40 @@ def dijkstra_query(g: Graph, s: int, t: int, w_level: int,
     return int(INF_DIST)
 
 
+def constrained_distance_grid(g: Graph) -> np.ndarray:
+    """[V, V, W+1] exact constrained distances for the FULL (s, t, w_level)
+    grid, via per-level BFS from every source on the level-filtered graph.
+
+    The differential-test oracle on small instances: one BFS sweep per
+    (level, source) is W·V times cheaper than V²·W single-pair calls, and
+    the implementation shares nothing with the index/query paths under
+    test. Level W (above every edge quality) is included: only s == t is
+    reachable there."""
+    V, W = g.num_nodes, g.num_levels
+    out = np.full((V, V, W + 1), INF_DIST, dtype=np.int32)
+    src_all = np.repeat(np.arange(V, dtype=np.int64), np.diff(g.indptr))
+    for level in range(W + 1):
+        keep = g.nbr_level >= level
+        deg = np.bincount(src_all[keep], minlength=V)
+        indptr = np.zeros(V + 1, dtype=np.int64)
+        np.cumsum(deg, out=indptr[1:])
+        nbr = g.nbr[keep]
+        for s in range(V):
+            dist = out[s, :, level]
+            dist[s] = 0
+            frontier = np.array([s], dtype=np.int64)
+            d = 0
+            while len(frontier):
+                d += 1
+                nxt = np.concatenate([nbr[indptr[u]:indptr[u + 1]]
+                                      for u in frontier])
+                nxt = np.unique(nxt)
+                nxt = nxt[dist[nxt] == INF_DIST]
+                dist[nxt] = d
+                frontier = nxt
+    return out
+
+
 # ------------------------------------------------------ Naive per-w 2-hop
 def _single_level_graph(g: Graph, min_level: int) -> Graph:
     """Filtered subgraph with qualities collapsed to one level, so that

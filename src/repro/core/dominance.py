@@ -28,6 +28,31 @@ def pareto_filter(d: np.ndarray, w: np.ndarray) -> np.ndarray:
     return keep
 
 
+def pareto_csr_emit(v: np.ndarray, hub: np.ndarray, d: np.ndarray,
+                    w: np.ndarray, num_nodes: int
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Fused Pareto post-pass + CSR emission order for a flat entry list.
+
+    Input: parallel arrays (vertex, hub, d, w) in any order. Returns
+    ``(order, keep)`` where ``order`` sorts the entries vertex-major with
+    hub ascending inside each vertex and d ascending inside each
+    (vertex, hub) group — exactly the label-row order the CSR store wants —
+    and ``keep`` (aligned with ``order``) marks the entries that survive
+    the per-(vertex, hub) dominance filter. One sort serves both the
+    minimality sweep and the flat-store scatter, so the builder never
+    materializes a padded [V, cap] intermediate between them."""
+    v = np.asarray(v, dtype=np.int64)
+    hub = np.asarray(hub, dtype=np.int64)
+    n = len(v)
+    if n == 0:
+        return np.zeros(0, dtype=np.int64), np.zeros(0, dtype=bool)
+    key = v * num_nodes + hub  # unique per (vertex, hub): hub rank < V
+    keep_by_entry = pareto_filter_grouped(key, np.asarray(d, dtype=np.int64),
+                                          np.asarray(w, dtype=np.int64))
+    order = np.lexsort((d, hub, v))
+    return order, keep_by_entry[order]
+
+
 def pareto_filter_grouped(hub: np.ndarray, d: np.ndarray, w: np.ndarray
                           ) -> np.ndarray:
     """Per-hub Pareto filter over a flat (hub, d, w) entry list.

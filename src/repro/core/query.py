@@ -24,7 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .graph import INF_DIST
-from .wc_index import PackedLabels, WCIndex, round_to_lane
+from .wc_index import (PackedLabels, PackedWCIndex, WCIndex, round_to_lane,
+                       round_to_pow2)
 
 DEV_INF = jnp.int32(1 << 29)
 
@@ -49,6 +50,7 @@ def query_batch_jnp(hub, dist, wlev, count, s, t, w_level):
     return jnp.where(best >= DEV_INF, INF_DIST, best).astype(jnp.int32)
 
 
+@jax.jit
 def query_batch_sorted_jnp(hub, dist, wlev, count, s, t, w_level):
     """Theorem-3-aware variant: per hub only the FIRST quality-feasible entry
     matters, so we first reduce each side to its per-hub minimum distance
@@ -129,9 +131,14 @@ class DeviceQueryEngine:
     layout="csr": the CSR-packed store's length-bucketed tiles; batches are
     split by `plan_query_batch` and each sub-batch runs the segmented
     kernel shaped for its own bucket pair (`wcsd_query_segmented`).
+
+    ``idx`` may be a padded `WCIndex` or a `PackedWCIndex` from the
+    device-resident batched builder; for the latter the csr layout adopts
+    the already-packed store as-is (`idx.packed()` is the store itself —
+    no repack between construction and serving).
     """
 
-    def __init__(self, idx: WCIndex, cap: int | None = None,
+    def __init__(self, idx: WCIndex | PackedWCIndex, cap: int | None = None,
                  use_pallas: bool = False, interpret: bool = True,
                  layout: str = "padded"):
         if layout not in ("padded", "csr"):
@@ -190,7 +197,7 @@ class DeviceQueryEngine:
             n = len(pos)
             # pad sub-batch to the next power of two: the compiled kernel
             # count stays O(buckets^2 * log B) instead of one per batch size
-            npad = 1 << max(0, (n - 1).bit_length())
+            npad = round_to_pow2(n)
             srow = np.zeros(npad, dtype=np.int32)
             trow = np.zeros(npad, dtype=np.int32)
             wq = np.full(npad, self.num_levels + 1, dtype=np.int32)  # pad:

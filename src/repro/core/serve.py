@@ -15,7 +15,7 @@ from typing import Optional
 import numpy as np
 
 from .query import DeviceQueryEngine
-from .wc_index import WCIndex
+from .wc_index import PackedWCIndex, WCIndex, round_to_pow2
 
 
 @dataclasses.dataclass
@@ -28,27 +28,39 @@ class ServeStats:
 
 
 class WCSDServer:
-    def __init__(self, idx: WCIndex, max_batch: int = 1024,
+    def __init__(self, idx: WCIndex | PackedWCIndex, max_batch: int = 1024,
                  use_pallas: bool = False, memo_capacity: int = 65536,
-                 layout: str = "padded"):
+                 layout: str = "padded", undirected: bool = True):
         # layout="csr" serves from the CSR-packed bucket tiles: each flush
         # is planned by bucket pair and routed to the segmented kernel.
+        # A PackedWCIndex (device-resident batched builder output) is served
+        # as-is under layout="csr" — no repack between build and serve.
+        # undirected=False disables the symmetric (s <= t) memo
+        # canonicalization for indices over directed graphs, where
+        # d(s, t) != d(t, s) and the swap would alias distinct answers.
         self.engine = DeviceQueryEngine(idx, use_pallas=use_pallas,
                                         layout=layout)
         self.max_batch = int(max_batch)
+        self.undirected = bool(undirected)
         self.memo: collections.OrderedDict[tuple, int] = collections.OrderedDict()
         self.memo_capacity = memo_capacity
         self.pending: list[tuple[int, int, int, int]] = []  # (rid, s, t, wl)
+        self._pending_rids: set[int] = set()  # O(1) result() membership
         self.results: dict[int, int] = {}
         self._next_rid = 0
         self.stats = ServeStats()
+
+    def _memo_key(self, s: int, t: int, w_level: int) -> tuple:
+        if self.undirected and s > t:
+            return (t, s, w_level)
+        return (s, t, w_level)
 
     # ------------------------------------------------------------- requests
     def submit(self, s: int, t: int, w_level: int) -> int:
         """Queue one request; returns a request id."""
         rid = self._next_rid
         self._next_rid += 1
-        key = (s, t, w_level) if s <= t else (t, s, w_level)
+        key = self._memo_key(s, t, w_level)
         self.stats.requests += 1
         if key in self.memo:
             self.memo.move_to_end(key)
@@ -56,6 +68,7 @@ class WCSDServer:
             self.stats.memo_hits += 1
         else:
             self.pending.append((rid, s, t, w_level))
+            self._pending_rids.add(rid)
             if len(self.pending) >= self.max_batch:
                 self.flush()
         return rid
@@ -66,12 +79,12 @@ class WCSDServer:
         t0 = time.perf_counter()
         batch = self.pending
         self.pending = []
+        self._pending_rids.clear()
         n = len(batch)
         # pad to the next power of two (bounded recompiles); the csr engine
         # pads each planned sub-batch itself, so padding here would only add
         # dummy queries that the segmented kernels compute and discard
-        padded = n if self.engine.layout == "csr" else \
-            1 << max(0, (n - 1).bit_length())
+        padded = n if self.engine.layout == "csr" else round_to_pow2(n)
         rid = np.array([b[0] for b in batch], dtype=np.int64)
         s = np.zeros(padded, dtype=np.int32)
         t = np.zeros(padded, dtype=np.int32)
@@ -83,7 +96,7 @@ class WCSDServer:
         for r, (ss, tt, ww), d in zip(rid, [(b[1], b[2], b[3]) for b in batch],
                                       out):
             self.results[int(r)] = int(d)
-            key = (ss, tt, ww) if ss <= tt else (tt, ss, ww)
+            key = self._memo_key(ss, tt, ww)
             self.memo[key] = int(d)
             if len(self.memo) > self.memo_capacity:
                 self.memo.popitem(last=False)
@@ -92,7 +105,9 @@ class WCSDServer:
         self.stats.flush_time_s += time.perf_counter() - t0
 
     def result(self, rid: int) -> Optional[int]:
-        if rid not in self.results and any(p[0] == rid for p in self.pending):
+        # membership via the pending-rid set: O(1) per lookup instead of an
+        # O(pending) scan of the request list
+        if rid not in self.results and rid in self._pending_rids:
             self.flush()
         return self.results.get(rid)
 

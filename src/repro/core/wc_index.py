@@ -41,6 +41,37 @@ def _concat_ranges(lengths: np.ndarray) -> np.ndarray:
     return np.arange(total, dtype=np.int64) - np.repeat(cum, lengths)
 
 
+def merge_query_rows(hs, ds, ws, ht, dt, wt, w_level: int) -> int:
+    """Sort-merge over two hub-sorted label rows (paper Algorithm 5).
+
+    Thm. 3: within a (vertex, hub) group dist & wlev are both ascending, so
+    the FIRST entry with wlev >= w carries the minimal feasible distance.
+    Shared by `WCIndex.query_one` (padded rows) and
+    `PackedWCIndex.query_one` (CSR rows)."""
+    cs, ct = len(hs), len(ht)
+    best = int(INF_DIST)
+    i = j = 0
+    while i < cs and j < ct:
+        if hs[i] < ht[j]:
+            i += 1
+        elif hs[i] > ht[j]:
+            j += 1
+        else:
+            hub = hs[i]
+            di = dj = -1
+            while i < cs and hs[i] == hub:
+                if di < 0 and ws[i] >= w_level:
+                    di = int(ds[i])
+                i += 1
+            while j < ct and ht[j] == hub:
+                if dj < 0 and wt[j] >= w_level:
+                    dj = int(dt[j])
+                j += 1
+            if di >= 0 and dj >= 0 and di + dj < best:
+                best = di + dj
+    return best
+
+
 @dataclasses.dataclass
 class WCIndex:
     order: np.ndarray      # [V] rank -> vertex
@@ -84,32 +115,10 @@ class WCIndex:
         """Single query: sort-merge over the two hub-sorted label lists
         (query-efficient implementation, paper Algorithm 5)."""
         cs, ct = int(self.count[s]), int(self.count[t])
-        hs, ht = self.hub_rank[s, :cs], self.hub_rank[t, :ct]
-        ds, dt = self.dist[s, :cs], self.dist[t, :ct]
-        ws, wt = self.wlev[s, :cs], self.wlev[t, :ct]
-        best = int(INF_DIST)
-        i = j = 0
-        while i < cs and j < ct:
-            if hs[i] < ht[j]:
-                i += 1
-            elif hs[i] > ht[j]:
-                j += 1
-            else:
-                hub = hs[i]
-                # Thm. 3: within the (vertex, hub) group, dist & wlev are both
-                # ascending -> the FIRST entry with wlev >= w has minimal dist.
-                di = dj = -1
-                while i < cs and hs[i] == hub:
-                    if di < 0 and ws[i] >= w_level:
-                        di = int(ds[i])
-                    i += 1
-                while j < ct and ht[j] == hub:
-                    if dj < 0 and wt[j] >= w_level:
-                        dj = int(dt[j])
-                    j += 1
-                if di >= 0 and dj >= 0 and di + dj < best:
-                    best = di + dj
-        return best
+        return merge_query_rows(self.hub_rank[s, :cs], self.dist[s, :cs],
+                                self.wlev[s, :cs], self.hub_rank[t, :ct],
+                                self.dist[t, :ct], self.wlev[t, :ct],
+                                w_level)
 
     def query_batch(self, s: np.ndarray, t: np.ndarray, w_level: np.ndarray
                     ) -> np.ndarray:
@@ -157,6 +166,13 @@ def round_to_lane(n: int, lane: int = LANE) -> int:
     return max(lane, -(-int(n) // lane) * lane)
 
 
+def round_to_pow2(n: int) -> int:
+    """Smallest power of two >= max(n, 1). Batch / scatter lengths are
+    padded to powers of two so the count of compiled shapes stays
+    logarithmic in the workload size."""
+    return 1 << (max(int(n), 1) - 1).bit_length()
+
+
 @dataclasses.dataclass
 class PackedLabels:
     """CSR-packed label store: the canonical compact format.
@@ -192,19 +208,13 @@ class PackedLabels:
 
     # ----------------------------------------------------------- construction
     @staticmethod
-    def from_index(idx: "WCIndex", lane: int = LANE) -> "PackedLabels":
-        V = idx.num_nodes
-        count = idx.count.astype(np.int64)
-        offsets = np.zeros(V + 1, dtype=np.int64)
-        np.cumsum(count, out=offsets[1:])
-        E = int(offsets[-1])
-        # flatten the padded rows: entry j of vertex v -> offsets[v] + j
-        rows = np.repeat(np.arange(V, dtype=np.int64), count)
-        cols = _concat_ranges(count)
-        hub = np.ascontiguousarray(idx.hub_rank[rows, cols])
-        dist = np.ascontiguousarray(idx.dist[rows, cols])
-        wlev = np.ascontiguousarray(idx.wlev[rows, cols])
-        assert hub.shape == (E,)
+    def from_flat(hub: np.ndarray, dist: np.ndarray, wlev: np.ndarray,
+                  offsets: np.ndarray, lane: int = LANE) -> "PackedLabels":
+        """Wrap already-flat CSR label arrays (vertex-major, hub-sorted rows)
+        and derive the length-bucketed device routing tables."""
+        offsets = np.asarray(offsets, dtype=np.int64)
+        V = len(offsets) - 1
+        count = offsets[1:] - offsets[:-1]
         # geometric lane-multiple buckets: width = lane * 2^b
         need = np.maximum(count, 1)
         blog = np.ceil(np.log2(np.maximum(np.ceil(need / lane), 1))
@@ -218,11 +228,29 @@ class PackedLabels:
             members = np.flatnonzero(bucket_of == b).astype(np.int32)
             slot_of[members] = np.arange(len(members), dtype=np.int32)
             bucket_vertices.append(members)
-        return PackedLabels(hub_rank=hub, dist=dist, wlev=wlev,
+        return PackedLabels(hub_rank=np.ascontiguousarray(hub, dtype=np.int32),
+                            dist=np.ascontiguousarray(dist, dtype=np.int32),
+                            wlev=np.ascontiguousarray(wlev, dtype=np.int32),
                             offsets=offsets,
                             bucket_widths=uniq.astype(np.int32),
                             bucket_of=bucket_of, slot_of=slot_of,
                             bucket_vertices=bucket_vertices)
+
+    @staticmethod
+    def from_index(idx: "WCIndex", lane: int = LANE) -> "PackedLabels":
+        V = idx.num_nodes
+        count = idx.count.astype(np.int64)
+        offsets = np.zeros(V + 1, dtype=np.int64)
+        np.cumsum(count, out=offsets[1:])
+        E = int(offsets[-1])
+        # flatten the padded rows: entry j of vertex v -> offsets[v] + j
+        rows = np.repeat(np.arange(V, dtype=np.int64), count)
+        cols = _concat_ranges(count)
+        hub = np.ascontiguousarray(idx.hub_rank[rows, cols])
+        assert hub.shape == (E,)
+        return PackedLabels.from_flat(hub, idx.dist[rows, cols],
+                                      idx.wlev[rows, cols], offsets,
+                                      lane=lane)
 
     # ------------------------------------------------------------------ props
     @property
@@ -291,6 +319,145 @@ class PackedLabels:
         dist[rows, cols] = self.dist[flat]
         wlev[rows, cols] = self.wlev[flat]
         return hub, dist, wlev, count
+
+
+class PackedLabelsBuilder:
+    """Incremental-append producer of a `PackedLabels` store.
+
+    The rank-batched device builder emits labels one root-batch at a time;
+    each batch covers an ascending slice of hub ranks, so per vertex the
+    batches arrive already hub-sorted relative to each other. The builder
+    keeps the raw per-batch chunks (flat arrays, no [V, cap] padding) and
+    `finalize` performs the fused Pareto post-pass + one stable vertex-major
+    counting sort + self-entry append, emitting the CSR arrays directly.
+
+    append_batch contract: within a batch, entries sorted by (vertex, hub
+    ascending, dist ascending), and every hub rank strictly exceeds all hub
+    ranks previously appended for that vertex (rank-batch arrival order).
+    """
+
+    def __init__(self, num_nodes: int, lane: int = LANE):
+        self.num_nodes = int(num_nodes)
+        self.lane = int(lane)
+        self._chunks: list[tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 np.ndarray]] = []
+        self._total = 0
+
+    def append_batch(self, v: np.ndarray, hub: np.ndarray, dist: np.ndarray,
+                     wlev: np.ndarray) -> None:
+        if len(v) == 0:
+            return
+        self._chunks.append((np.asarray(v, dtype=np.int32).copy(),
+                             np.asarray(hub, dtype=np.int32).copy(),
+                             np.asarray(dist, dtype=np.int32).copy(),
+                             np.asarray(wlev, dtype=np.int32).copy()))
+        self._total += len(v)
+
+    def size_entries(self) -> int:
+        return self._total
+
+    def finalize(self, rank: np.ndarray, num_levels: int,
+                 minimalize: bool = True) -> tuple["PackedLabels", int]:
+        """Emit the CSR store: Pareto-filter per (vertex, hub), scatter into
+        vertex-major flat arrays, append one self entry per vertex. Returns
+        (store, dominated_entries_removed)."""
+        from .dominance import pareto_csr_emit
+
+        V, W = self.num_nodes, int(num_levels)
+        if self._chunks:
+            v_all = np.concatenate([c[0] for c in self._chunks])
+            h_all = np.concatenate([c[1] for c in self._chunks])
+            d_all = np.concatenate([c[2] for c in self._chunks])
+            w_all = np.concatenate([c[3] for c in self._chunks])
+        else:
+            v_all = h_all = d_all = w_all = np.zeros(0, dtype=np.int32)
+        removed = 0
+        if minimalize:
+            order, keep = pareto_csr_emit(v_all, h_all, d_all, w_all, V)
+            order = order[keep]
+            removed = int(len(keep) - keep.sum())
+        else:
+            order = np.lexsort((d_all, h_all, v_all))
+        v_all, h_all = v_all[order], h_all[order]
+        d_all, w_all = d_all[order], w_all[order]
+        count = np.bincount(v_all, minlength=V).astype(np.int64) + 1
+        offsets = np.zeros(V + 1, dtype=np.int64)
+        np.cumsum(count, out=offsets[1:])
+        E = int(offsets[-1])
+        hub = np.empty(E, dtype=np.int32)
+        dist = np.empty(E, dtype=np.int32)
+        wlev = np.empty(E, dtype=np.int32)
+        pos = np.repeat(offsets[:-1], count - 1) + _concat_ranges(count - 1)
+        hub[pos], dist[pos], wlev[pos] = h_all, d_all, w_all
+        # self entries close each row; rank[v] exceeds every stored hub rank
+        self_pos = offsets[1:] - 1
+        hub[self_pos] = np.asarray(rank, dtype=np.int32)
+        dist[self_pos] = 0
+        wlev[self_pos] = W
+        store = PackedLabels.from_flat(hub, dist, wlev, offsets,
+                                       lane=self.lane)
+        return store, removed
+
+
+@dataclasses.dataclass
+class PackedWCIndex:
+    """A WC-Index whose labels live only in the CSR-packed store — the
+    output of the device-resident batched builder (`core/wc_index_batched.
+    build_wc_index_batched_packed`). Serving consumes `labels` directly
+    (`DeviceQueryEngine` duck-types `packed()` / `padded_device_arrays`),
+    so a freshly built index reaches the query path with no repack step."""
+
+    order: np.ndarray        # [V] rank -> vertex
+    rank: np.ndarray         # [V] vertex -> rank
+    levels: np.ndarray       # [W] quality values
+    labels: "PackedLabels"
+
+    @property
+    def num_levels(self) -> int:
+        return int(len(self.levels))
+
+    @property
+    def num_nodes(self) -> int:
+        return int(len(self.order))
+
+    def size_entries(self) -> int:
+        return self.labels.size_entries()
+
+    def memory_bytes(self) -> int:
+        return self.labels.memory_bytes()
+
+    def level_of(self, w: float) -> int:
+        return int(np.searchsorted(self.levels, w, side="left"))
+
+    # ------------------------------------------------------------- queries
+    def query_one(self, s: int, t: int, w_level: int) -> int:
+        """Host sort-merge (Alg. 5) straight over the CSR rows."""
+        return merge_query_rows(*self.labels.row(s), *self.labels.row(t),
+                                w_level)
+
+    def query_batch(self, s, t, w_level) -> np.ndarray:
+        """Numpy oracle via the padded mirror (tests/small workloads)."""
+        return self.to_index().query_batch(s, t, w_level)
+
+    # --------------------------------------------------- engine interface
+    def packed(self, lane: int = LANE) -> "PackedLabels":
+        """The store itself — already packed, no re-pack. A non-default
+        ``lane`` re-buckets the flat arrays (the flat CSR part is reused
+        as-is; only the routing tables are rebuilt)."""
+        if lane != LANE:
+            return PackedLabels.from_flat(self.labels.hub_rank,
+                                          self.labels.dist, self.labels.wlev,
+                                          self.labels.offsets, lane=lane)
+        return self.labels
+
+    def padded_device_arrays(self, cap: int | None = None):
+        return self.labels.to_padded(cap)
+
+    def to_index(self) -> "WCIndex":
+        """Padded-array round trip (reference paths and tests)."""
+        hub, dist, wlev, count = self.labels.to_padded()
+        return WCIndex(order=self.order, rank=self.rank, levels=self.levels,
+                       hub_rank=hub, dist=dist, wlev=wlev, count=count)
 
 
 def _ensure_capacity(idx_arrays, count, need):

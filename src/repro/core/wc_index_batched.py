@@ -16,6 +16,25 @@ Consequences (measured in benchmarks/bench_indexing.py):
     entries, and we only skip prunes, never add spurious paths); minimality
     is restored per (vertex, hub) by a vectorized Pareto post-pass, and the
     residual cross-hub redundancy is reported as `size_overhead`.
+
+Two implementations live here:
+
+  build_wc_index_batched          the original host-orchestrated pipeline:
+      every round gathers/prunes in jnp, downloads the [B, V] emission mask
+      to host numpy, and appends into padded [V, cap] arrays that serving
+      later has to re-pack into the CSR store.
+  build_wc_index_batched_packed   the device-resident pipeline: the round
+      (prune + emit + relax) runs in Pallas kernels (`kernels/frontier.py`),
+      the per-root hub tables T are built on device from the device-side
+      partial index, F/R and a per-(root, vertex, level) emission table E
+      stay on device for the whole batch (one [B, V, W+1] download per
+      batch instead of one [B, V] download per round), and the emissions
+      stream into a `PackedLabelsBuilder` whose finalize fuses the Pareto
+      post-pass with direct CSR emission — the padded [V, cap] final
+      labels are never materialized and serving starts with no repack.
+
+Both report `host_array_syncs` / `host_scalar_syncs` so the benchmark
+(`benchmarks/bench_indexing.py`) can show the sync-count collapse.
 """
 from __future__ import annotations
 
@@ -30,7 +49,10 @@ import jax.numpy as jnp
 from .dominance import pareto_filter_grouped
 from .graph import Graph, INF_DIST
 from .ordering import make_order
-from .wc_index import WCIndex, _concat_ranges, append_self_entries
+from .wc_index import (PackedLabelsBuilder, PackedWCIndex, WCIndex,
+                       _concat_ranges, append_self_entries, round_to_pow2)
+
+DEV_INF = 1 << 29
 
 
 @functools.partial(jax.jit, static_argnames=("num_segments", "do_prune"))
@@ -119,6 +141,8 @@ def build_wc_index_batched(g: Graph, order: Optional[np.ndarray] = None,
     rank_d = jnp.asarray(rank)
     n_rounds = 0
     raw_entries = 0
+    array_syncs = 0
+    scalar_syncs = 0
 
     for start in range(0, V, B):
         roots = order[start:start + B]
@@ -157,12 +181,14 @@ def build_wc_index_batched(g: Graph, order: Optional[np.ndarray] = None,
                 jnp.int32(d), num_segments=B * V, do_prune=(d > 0))
             n_rounds += 1
             if d > 0:
-                ew = np.asarray(emit_w)
+                ew = np.asarray(emit_w)        # [B, V] download, every round
+                array_syncs += 1
                 bs, vs = np.nonzero(ew >= 0)
                 if len(bs):
                     emitted.append((bs.astype(np.int32), vs.astype(np.int32),
                                     ew[bs, vs].astype(np.int32), d))
             d += 1
+            scalar_syncs += 1
             if not bool(jnp.any(F >= 0)):
                 break
         # ---- append batch emissions, grouped by vertex, hub-rank ascending
@@ -195,7 +221,8 @@ def build_wc_index_batched(g: Graph, order: Optional[np.ndarray] = None,
             count[uniq] += run_len.astype(np.int32)
 
     stats = {"rounds": n_rounds, "raw_entries": int(raw_entries),
-             "batch_size": B}
+             "batch_size": B, "host_array_syncs": array_syncs,
+             "host_scalar_syncs": scalar_syncs}
     if minimalize:
         # vectorized per-(vertex, hub) Pareto sweep to restore minimality
         total = int(count.sum())
@@ -228,6 +255,189 @@ def build_wc_index_batched(g: Graph, order: Optional[np.ndarray] = None,
     idx = WCIndex(order=order, rank=rank, levels=g.levels.copy(),
                   hub_rank=hub, dist=dist, wlev=wlev, count=count)
     stats["entries"] = idx.size_entries()
+    return idx, stats
+
+
+# --------------------------------------------------- device-resident builder
+@functools.partial(jax.jit, static_argnames=("num_nodes", "num_levels"))
+def _build_T_device(hub, dist, wlev, roots, root_ranks, *, num_nodes: int,
+                    num_levels: int):
+    """Per-root hub tables, built on device from the device-side partial
+    index: T[b, h, f] = min dist from root b to hub-rank h over paths of
+    quality level >= f (INF where unreachable; 0 on the root's own rank).
+    Replaces `_build_T`'s host loop + per-batch [B, V, W+1] upload."""
+    V, W1 = num_nodes, num_levels + 1
+    B = roots.shape[0]
+    hr = hub[roots]                                     # [B, cap] hub ranks
+    dr = jnp.minimum(dist[roots], DEV_INF)
+    wr = wlev[roots]
+    feas = jnp.arange(W1)[None, None, :] <= wr[:, :, None]      # [B, cap, W1]
+    vals = jnp.where(feas & (hr >= 0)[:, :, None], dr[:, :, None],
+                     jnp.int32(INF_DIST))
+    T = jnp.full((B, V, W1), INF_DIST, dtype=jnp.int32)
+    T = T.at[jnp.arange(B)[:, None], jnp.clip(hr, 0, V - 1), :].min(vals)
+    # the root reaches itself at distance 0 at any quality; inert pad rows
+    # carry root_ranks == V + 1 and must not touch the table
+    self_val = jnp.where((root_ranks < V)[:, None], 0, jnp.int32(INF_DIST))
+    T = T.at[jnp.arange(B), jnp.clip(root_ranks, 0, V - 1), :].min(self_val)
+    return T
+
+
+@jax.jit
+def _accum_emit(E, emit_w, d):
+    """Fold one round's emissions into the on-device emission table:
+    E[b, v, w] = the round (== distance) at which (root b, vertex v) emitted
+    quality level w. Each cell is written at most once (per (b, v) the
+    emitted level strictly increases across rounds), so min() is a plain
+    first-write."""
+    W1 = E.shape[2]
+    onehot = emit_w[:, :, None] == jnp.arange(W1)[None, None, :]
+    return jnp.where(onehot, jnp.minimum(E, d), E)
+
+
+@jax.jit
+def _scatter_append(hub, dist, wlev, v, pos, h_new, d_new, w_new):
+    """Append new label entries into the device-side padded partial index
+    (prune mirror). Out-of-range rows (v == V: length padding) are dropped."""
+    return (hub.at[v, pos].set(h_new, mode="drop"),
+            dist.at[v, pos].set(d_new, mode="drop"),
+            wlev.at[v, pos].set(w_new, mode="drop"))
+
+
+def build_wc_index_batched_packed(
+        g: Graph, order: Optional[np.ndarray] = None,
+        ordering: str = "degree", batch_size: int = 32,
+        minimalize: bool = True, use_kernel: bool = True,
+        interpret: bool = True) -> tuple[PackedWCIndex, dict]:
+    """Device-resident rank-batched construction emitting CSR directly.
+
+    Same label semantics as `build_wc_index_batched` (identical entry
+    multiset before the Pareto pass, identical store after it — asserted by
+    tests/test_differential.py), but the pipeline is restructured for the
+    accelerator: the per-round prune + emit + relax run as Pallas kernels,
+    per-root hub tables are built on device from the device-side partial
+    index, and F/R/E state never leaves the device inside a batch. The only
+    per-round host sync is the scalar termination check; emissions come
+    back once per batch as the [B, V, W+1] table E and stream into a
+    `PackedLabelsBuilder`, which finalizes straight into `PackedLabels` —
+    no padded [V, cap] final labels, no serve-time repack.
+
+    Returns (PackedWCIndex, stats).
+    """
+    from ..kernels import ops as kops
+
+    V, W = g.num_nodes, g.num_levels
+    if order is None:
+        order = make_order(g, ordering)
+    order = np.asarray(order, dtype=np.int32)
+    rank = np.empty(V, dtype=np.int32)
+    rank[order] = np.arange(V, dtype=np.int32)
+
+    B = int(batch_size)
+    nbr_np, lvl_np = g.padded_adjacency()
+    nbr_d = jnp.asarray(nbr_np)
+    lvl_d = jnp.asarray(lvl_np)
+    rank_d = jnp.asarray(rank)
+
+    cap = 8
+    hub_d = jnp.full((V, cap), -1, dtype=jnp.int32)
+    dist_d = jnp.full((V, cap), INF_DIST, dtype=jnp.int32)
+    wlev_d = jnp.full((V, cap), -1, dtype=jnp.int32)
+    count = np.zeros(V, dtype=np.int64)
+
+    builder = PackedLabelsBuilder(V)
+    n_rounds = 0
+    raw_entries = 0
+    array_syncs = 0
+    scalar_syncs = 0
+
+    for start in range(0, V, B):
+        roots = order[start:start + B]
+        nb = len(roots)
+        root_ranks = np.arange(start, start + nb, dtype=np.int32)
+        if nb < B:  # pad the tail batch with inert rows
+            roots = np.concatenate([roots, np.zeros(B - nb, np.int32)])
+            root_ranks = np.concatenate(
+                [root_ranks, np.full(B - nb, V + 1, np.int32)])
+        rr_d = jnp.asarray(root_ranks)
+        T_d = _build_T_device(hub_d, dist_d, wlev_d, jnp.asarray(roots),
+                              rr_d, num_nodes=V, num_levels=W)
+        F = np.full((B, V), -1, dtype=np.int32)
+        F[np.arange(nb), roots[:nb]] = W
+        F = jnp.asarray(F)
+        R = F
+        E = jnp.full((B, V, W + 1), INF_DIST, dtype=jnp.int32)
+
+        d = 0
+        while True:
+            emit_w = kops.wc_prune_emit(
+                F, T_d, hub_d, dist_d, wlev_d, jnp.int32(d),
+                do_prune=(d > 0), use_kernel=use_kernel, interpret=interpret)
+            if d > 0:
+                E = _accum_emit(E, emit_w, jnp.int32(d))
+            F, R = kops.wc_relax_batched(
+                emit_w, nbr_d, lvl_d, rank_d, rr_d, R,
+                use_kernel=use_kernel, interpret=interpret)
+            n_rounds += 1
+            d += 1
+            scalar_syncs += 1
+            if not bool(jnp.any(F >= 0)):
+                break
+
+        En = np.asarray(E)                  # ONE download per batch
+        array_syncs += 1
+        bs, vs, ws = np.nonzero(En < int(INF_DIST))
+        if len(bs) == 0:
+            continue
+        ds = En[bs, vs, ws]
+        # per (b, v) the emitted level rises with the round, so sorting by
+        # (v, b, w) is exactly (vertex, hub rank asc, dist asc)
+        o = np.lexsort((ws, bs, vs))
+        bs, vs, ws, ds = bs[o], vs[o], ws[o], ds[o]
+        hub_new = root_ranks[bs].astype(np.int32)
+        raw_entries += len(bs)
+        builder.append_batch(vs, hub_new, ds, ws)
+
+        # mirror the new entries into the device-side prune index
+        uniq, run_start = np.unique(vs, return_index=True)
+        run_len = np.diff(np.append(run_start, len(vs)))
+        pos = count[vs] + _concat_ranges(run_len)
+        need = int(pos.max()) + 1
+        if need > cap:
+            new_cap = max(need, cap * 2)
+            pad = ((0, 0), (0, new_cap - cap))
+            hub_d = jnp.pad(hub_d, pad, constant_values=-1)
+            dist_d = jnp.pad(dist_d, pad, constant_values=int(INF_DIST))
+            wlev_d = jnp.pad(wlev_d, pad, constant_values=-1)
+            cap = new_cap
+        # pad the scatter to a power-of-two length (bounded recompiles);
+        # padding rows target v == V and are dropped by the scatter
+        n = len(vs)
+        npad = round_to_pow2(n)
+        v_s = np.full(npad, V, dtype=np.int32)
+        p_s = np.zeros(npad, dtype=np.int32)
+        h_s = np.zeros(npad, dtype=np.int32)
+        d_s = np.zeros(npad, dtype=np.int32)
+        w_s = np.zeros(npad, dtype=np.int32)
+        v_s[:n] = vs
+        p_s[:n] = pos
+        h_s[:n] = hub_new
+        d_s[:n] = ds
+        w_s[:n] = ws
+        hub_d, dist_d, wlev_d = _scatter_append(
+            hub_d, dist_d, wlev_d, jnp.asarray(v_s), jnp.asarray(p_s),
+            jnp.asarray(h_s), jnp.asarray(d_s), jnp.asarray(w_s))
+        count[uniq] += run_len
+
+    labels, removed = builder.finalize(rank=rank, num_levels=W,
+                                       minimalize=minimalize)
+    idx = PackedWCIndex(order=order, rank=rank, levels=g.levels.copy(),
+                        labels=labels)
+    stats = {"rounds": n_rounds, "raw_entries": int(raw_entries),
+             "batch_size": B, "host_array_syncs": array_syncs,
+             "host_scalar_syncs": scalar_syncs,
+             "dominated_removed": removed,
+             "entries": labels.size_entries()}
     return idx, stats
 
 

@@ -1,16 +1,38 @@
-"""Pallas TPU kernel for one constrained-BFS relaxation round over a padded
-adjacency (the inner loop of WC-INDEX construction, Algorithm 3 lines 13-17).
+"""Pallas TPU kernels for the constrained-BFS rounds of WC-INDEX
+construction (Algorithm 3 lines 11-17).
 
-Per destination vertex v:
+Single-root kernel (`frontier_relax_gathered`) — one relaxation round over a
+padded adjacency. Per destination vertex v:
     cand[v] = max_{u in N(v)} min(Fw[u], level(u, v))     (-1 == inactive)
     newF[v] = cand[v] if cand[v] > R[v] else -1
     newR[v] = max(R[v], cand[v])
-
 ops.py pre-gathers Fw over the padded neighbor table ([V, D] = `Fw[nbr]`,
 XLA row gather; on a real TPU deployment this becomes a scalar-prefetch DMA
 — noted in DESIGN.md). The kernel fuses the min/max/compare chain so the
 [V, D] intermediate never round-trips to HBM, and tiles V so the working set
 (3 × [bV, D] int32) sits in VMEM.
+
+Rank-batched kernels (`wc_prune_emit_batched`, `wc_relax_batched`) — the two
+fused stages of one synchronized round for a batch of B roots (the
+device-resident builder in `core/wc_index_batched.py`):
+
+  prune+emit  per (root b, vertex v): query the partial index as of the
+              batch start — q = min_i dist[v,i] + T[b, hub[v,i], F[b,v]]
+              over quality-feasible label entries — and emit F[b,v] iff the
+              frontier distance d improves on q. The [B, V, cap] gather /
+              mask / add intermediates that the jnp formulation materializes
+              in HBM stay per-tile in VMEM here; the per-root hub table
+              T[b] rides along as one [V, W+1] block per grid row.
+  relax       per (root b, vertex v): the batched form of the single-root
+              kernel, with the root-rank mask (rank[v] > rank(b)) fused in.
+              The emitted frontier row of root b is kept whole in VMEM and
+              gathered by the neighbor table in-kernel (scalar-prefetch
+              carries the per-root rank; the row gather is the same pattern
+              as `wcsd_query_segmented`'s in-kernel label-row gather).
+
+Both batched kernels take the current round / root ranks through
+`PrefetchScalarGridSpec` so the grid's block index maps and the kernel body
+share one scalar upload per call instead of a retrace per round.
 """
 from __future__ import annotations
 
@@ -19,6 +41,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEV_INF = 1 << 29  # python int: safe to close over in pallas kernels
+INF_DIST = 1 << 30
 
 
 def _frontier_kernel(fw_nbr_ref, lvl_ref, r_ref, newf_ref, newr_ref):
@@ -55,3 +81,110 @@ def frontier_relax_gathered(fw_nbr, lvl_pad, R, *, block_v: int = 256,
         interpret=interpret,
     )(fw_nbr, lvl_pad, R[:, None])
     return newf[:, 0], newr[:, 0]
+
+
+# ------------------------------------------------------------ rank-batched
+def _prune_emit_kernel(d_ref, f_ref, t_ref, hub_ref, dist_ref, wlev_ref,
+                       emit_ref):
+    d = d_ref[0]
+    f = f_ref[0, :]                     # [bV] frontier level (-1 inactive)
+    tb = t_ref[0]                       # [V, W+1] hub table of root b
+    hub = hub_ref[...]                  # [bV, cap] partial-index labels
+    dist = dist_ref[...]
+    wlev = wlev_ref[...]
+    fw = jnp.clip(f, 0, tb.shape[1] - 1)
+    # gather the root's table at (hub rank, query level); clamp before the
+    # add so INF + INF cannot overflow int32
+    tv = tb[jnp.clip(hub, 0, tb.shape[0] - 1), fw[:, None]]     # [bV, cap]
+    feas = (hub >= 0) & (wlev >= fw[:, None])
+    cand = jnp.where(feas, jnp.minimum(dist, DEV_INF)
+                     + jnp.minimum(tv, DEV_INF), INF_DIST)
+    q = cand.min(axis=1)                # partial-index answer per vertex
+    survive = (f >= 0) & (q > d)
+    emit_ref[0, :] = jnp.where(survive, f, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
+def wc_prune_emit_batched(F, T, hub, dist, wlev, d, *, block_v: int = 256,
+                          interpret: bool = True):
+    """Fused partial-index prune + label emission for a root batch.
+
+    F: [B, V] frontier levels (-1 inactive); T: [B, V, W+1] per-root hub
+    tables indexed by hub *rank*; hub/dist/wlev: [V, cap] padded partial
+    index (pad: hub = -1, dist = INF_DIST, wlev = -1); d: [1] current round.
+    Returns emit_w [B, V]: the quality level to emit per (root, vertex), -1
+    where the frontier is pruned/inactive. V % block_v == 0 (ops.py pads).
+    """
+    B, V = F.shape
+    W1 = T.shape[2]
+    cap = hub.shape[1]
+    grid = (B, V // block_v)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_v), lambda b, i, d: (b, i)),       # F
+            pl.BlockSpec((1, T.shape[1], W1), lambda b, i, d: (b, 0, 0)),
+            pl.BlockSpec((block_v, cap), lambda b, i, d: (i, 0)),     # hub
+            pl.BlockSpec((block_v, cap), lambda b, i, d: (i, 0)),     # dist
+            pl.BlockSpec((block_v, cap), lambda b, i, d: (i, 0)),     # wlev
+        ],
+        out_specs=pl.BlockSpec((1, block_v), lambda b, i, d: (b, i)),
+    )
+    return pl.pallas_call(
+        _prune_emit_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, V), jnp.int32),
+        interpret=interpret,
+    )(d, F, T, hub, dist, wlev)
+
+
+def _relax_batched_kernel(rr_ref, ew_ref, nbr_ref, lvl_ref, rank_ref, r_ref,
+                          newf_ref, newr_ref):
+    rr = rr_ref[pl.program_id(0)]       # rank of root b
+    ew = ew_ref[0, :]                   # [V] emitted frontier row of root b
+    nbr = nbr_ref[...]                  # [bV, D] padded adjacency (-1 pad)
+    lvl = lvl_ref[...]                  # [bV, D] edge level (-1 pad)
+    rank = rank_ref[0, :]               # [bV]
+    r = r_ref[0, :]                     # [bV] best bottleneck level so far
+    fwn = ew[jnp.clip(nbr, 0, ew.shape[0] - 1)]                 # [bV, D]
+    wp = jnp.minimum(jnp.where(nbr >= 0, fwn, -1), lvl)
+    cand = wp.max(axis=1)
+    cand = jnp.where(rank > rr, cand, -1)   # only label higher-ranked nodes
+    improved = cand > r
+    newf_ref[0, :] = jnp.where(improved, cand, -1)
+    newr_ref[0, :] = jnp.maximum(r, cand)
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
+def wc_relax_batched(emit_w, nbr_pad, lvl_pad, rank, root_ranks, R, *,
+                     block_v: int = 256, interpret: bool = True):
+    """One batched relaxation: emit_w [B, V] surviving frontier, nbr_pad/
+    lvl_pad [V, D] padded adjacency, rank [1, V], root_ranks [B] (scalar
+    prefetch), R [B, V]. Returns (newF [B, V], newR [B, V])."""
+    B, V = emit_w.shape
+    D = nbr_pad.shape[1]
+    grid = (B, V // block_v)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, V), lambda b, i, rr: (b, 0)),            # ew
+            pl.BlockSpec((block_v, D), lambda b, i, rr: (i, 0)),      # nbr
+            pl.BlockSpec((block_v, D), lambda b, i, rr: (i, 0)),      # lvl
+            pl.BlockSpec((1, block_v), lambda b, i, rr: (0, i)),      # rank
+            pl.BlockSpec((1, block_v), lambda b, i, rr: (b, i)),      # R
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_v), lambda b, i, rr: (b, i)),
+            pl.BlockSpec((1, block_v), lambda b, i, rr: (b, i)),
+        ],
+    )
+    newf, newr = pl.pallas_call(
+        _relax_batched_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, V), jnp.int32),
+                   jax.ShapeDtypeStruct((B, V), jnp.int32)],
+        interpret=interpret,
+    )(root_ranks, emit_w, nbr_pad, lvl_pad, rank, R)
+    return newf, newr

@@ -101,6 +101,65 @@ def frontier_relax(nbr_pad, lvl_pad, Fw, R, *, interpret: bool = True,
     return newf[:V], newr[:V]
 
 
+def _pick_block_v(V: int) -> int:
+    return 256 if V % 256 == 0 else (64 if V % 64 == 0 else 8)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel",
+                                             "do_prune"))
+def wc_prune_emit(F, T, hub, dist, wlev, d, *, do_prune: bool = True,
+                  interpret: bool = True, use_kernel: bool = True):
+    """Fused partial-index prune + emission for a batch of roots.
+
+    F: [B, V] frontier levels (-1 inactive); T: [B, V, W+1] per-root hub
+    tables (indexed by hub rank); hub/dist/wlev: [V, cap] padded partial
+    index; d: scalar current round. Returns emit_w [B, V] (-1 = no emit).
+    With do_prune=False (round 0) the whole active frontier emits."""
+    if not do_prune:
+        return F
+    if not use_kernel:
+        return _ref.wc_prune_emit_batched_ref(F, T, hub, dist, wlev, d)
+    B, V = F.shape
+    bV = _pick_block_v(V)
+    Vp = _ceil_to(V, bV)
+    if Vp != V:
+        F = jnp.pad(F, ((0, 0), (0, Vp - V)), constant_values=-1)
+        hub = jnp.pad(hub, ((0, Vp - V), (0, 0)), constant_values=-1)
+        dist = jnp.pad(dist, ((0, Vp - V), (0, 0)), constant_values=INF_DIST)
+        wlev = jnp.pad(wlev, ((0, Vp - V), (0, 0)), constant_values=-1)
+    emit = _frontier.wc_prune_emit_batched(
+        F, T, hub, dist, wlev, jnp.asarray(d, jnp.int32).reshape(1),
+        block_v=bV, interpret=interpret)
+    return emit[:, :V]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def wc_relax_batched(emit_w, nbr_pad, lvl_pad, rank, root_ranks, R, *,
+                     interpret: bool = True, use_kernel: bool = True):
+    """One batched constrained-relaxation round.
+
+    emit_w/R: [B, V]; nbr_pad/lvl_pad: [V, D] (pad: nbr = -1, lvl = -1);
+    rank: [V] vertex -> rank; root_ranks: [B]. Returns (newF, newR)."""
+    B, V = emit_w.shape
+    rank2 = rank[None, :]
+    if not use_kernel:
+        return _ref.wc_relax_batched_ref(emit_w, nbr_pad, lvl_pad, rank2,
+                                         root_ranks, R)
+    bV = _pick_block_v(V)
+    Vp = _ceil_to(V, bV)
+    if Vp != V:
+        emit_w = jnp.pad(emit_w, ((0, 0), (0, Vp - V)), constant_values=-1)
+        nbr_pad = jnp.pad(nbr_pad, ((0, Vp - V), (0, 0)), constant_values=-1)
+        lvl_pad = jnp.pad(lvl_pad, ((0, Vp - V), (0, 0)), constant_values=-1)
+        rank2 = jnp.pad(rank2, ((0, 0), (0, Vp - V)), constant_values=-1)
+        R = jnp.pad(R, ((0, 0), (0, Vp - V)),
+                    constant_values=jnp.int32(1 << 20))
+    newf, newr = _frontier.wc_relax_batched(
+        emit_w, nbr_pad, lvl_pad, rank2, root_ranks, R,
+        block_v=bV, interpret=interpret)
+    return newf[:, :V], newr[:, :V]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "use_kernel",
                                              "block_b"))
 def cin_layer(x1, x0, w, *, interpret: bool = True, use_kernel: bool = True,

@@ -36,6 +36,35 @@ def wcsd_query_segmented_ref(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
         axis=(1, 2))
 
 
+def wc_prune_emit_batched_ref(F, T, hub, dist, wlev, d):
+    """Batched prune+emit oracle (the `_batched_round` jnp gather soup):
+    F [B, V], T [B, V, W+1], hub/dist/wlev [V, cap], d scalar round."""
+    INF = 1 << 30
+    B, V = F.shape
+    fw = jnp.clip(F, 0, T.shape[2] - 1)
+    tv = T[jnp.arange(B)[:, None, None],
+           jnp.clip(hub, 0, V - 1)[None, :, :],
+           fw[:, :, None]]                                      # [B, V, cap]
+    feas = (hub >= 0)[None] & (wlev[None] >= fw[:, :, None])
+    cand = jnp.where(feas, jnp.minimum(dist, DEV_INF)[None]
+                     + jnp.minimum(tv, DEV_INF), INF)
+    q = cand.min(axis=2)
+    survive = (F >= 0) & (q > d)
+    return jnp.where(survive, F, -1)
+
+
+def wc_relax_batched_ref(emit_w, nbr_pad, lvl_pad, rank, root_ranks, R):
+    """Batched relaxation oracle: emit_w [B, V], nbr_pad/lvl_pad [V, D],
+    rank [1, V], root_ranks [B], R [B, V] -> (newF, newR)."""
+    fwn = emit_w[:, jnp.clip(nbr_pad, 0, emit_w.shape[1] - 1)]  # [B, V, D]
+    fwn = jnp.where(nbr_pad[None] >= 0, fwn, -1)
+    wp = jnp.minimum(fwn, lvl_pad[None])
+    cand = wp.max(axis=2)
+    cand = jnp.where(rank[0][None, :] > root_ranks[:, None], cand, -1)
+    improved = cand > R
+    return jnp.where(improved, cand, -1), jnp.maximum(R, cand)
+
+
 def frontier_relax_gathered_ref(fw_nbr, lvl_pad, R):
     wprime = jnp.minimum(fw_nbr, lvl_pad)
     cand = wprime.max(axis=1)

@@ -61,16 +61,26 @@ except ModuleNotFoundError:
 
     def given(*strategies):
         def deco(fn):
+            # Like real hypothesis, positional strategies bind to the
+            # RIGHTMOST parameters; leading ones (pytest.mark.parametrize
+            # arguments, fixtures) stay visible in the signature and arrive
+            # from pytest as keywords.
+            params = list(inspect.signature(fn).parameters.values())
+            drawn_names = [p.name for p in params[len(params)
+                                                  - len(strategies):]]
+
             @functools.wraps(fn)
             def run(*args, **kwargs):
                 n = getattr(run, "_max_examples",
                             getattr(fn, "_max_examples", 20))
                 rng = np.random.default_rng(0)
                 for _ in range(min(n, _MAX_EXAMPLES_CAP)):
-                    drawn = tuple(s.sample(rng) for s in strategies)
-                    fn(*args, *drawn, **kwargs)
+                    drawn = {name: s.sample(rng)
+                             for name, s in zip(drawn_names, strategies)}
+                    fn(*args, **kwargs, **drawn)
             # pytest must not mistake the drawn parameters for fixtures
             del run.__wrapped__
-            run.__signature__ = inspect.Signature()
+            run.__signature__ = inspect.Signature(
+                params[:len(params) - len(strategies)])
             return run
         return deco

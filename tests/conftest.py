@@ -1,6 +1,22 @@
 import os
 import sys
 
+import pytest
+
 # src layout import without install; tests dir for the _hypo_shim helper
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))
+
+
+@pytest.fixture(scope="session")
+def serve_layout():
+    """Label-store layout for layout-agnostic serving tests.
+
+    Defaults to "padded"; the CI matrix exports REPRO_LABEL_LAYOUT=csr to
+    run the same tests against the CSR-packed store + segmented query path.
+    Tests that assert layout-specific behavior (e.g. flush padding) pin
+    their layout explicitly instead of using this fixture.
+    """
+    layout = os.environ.get("REPRO_LABEL_LAYOUT", "padded")
+    assert layout in ("padded", "csr"), layout
+    return layout

@@ -1,0 +1,221 @@
+"""Differential harness: every answer path must agree EXACTLY on the full
+(s, t, w_level) grid of small random instances.
+
+Five implementations under test, none sharing a code path end-to-end:
+
+  1. `WCIndex.query_one`          host sort-merge (paper Alg. 5)
+  2. `query_batch_jnp`            padded masked outer join (XLA)
+  3. `query_batch_sorted_jnp`     Thm.-3-aware segmented-min variant (XLA)
+  4. segmented CSR kernel         `DeviceQueryEngine(layout="csr",
+                                  use_pallas=True)` — bucket-pair planner +
+                                  scalar-prefetch Pallas kernel
+  5. constrained Dijkstra         per-query oracle from `core.baselines`
+
+all checked against a sixth, structurally independent expectation: the
+per-level BFS sweep `baselines.constrained_distance_grid`.
+
+Coverage: 8 parametrized blocks x 25 hypothesis examples = 200 generated
+instances (deterministic under the `_hypo_shim` fallback: the shim draws
+from a seeded generator, and each block folds its id into the graph seed).
+Shapes are pinned to a small set (V in {8, 10, 12}, fixed query/label
+padding) so the jitted paths compile a handful of variants, not one per
+instance.
+
+Also here: property tests for the index invariants (Thm. 3 monotonicity,
+post-pass minimality, sequential-vs-batched label-set equivalence) covering
+the padded batched builder AND the device-resident CSR-emitting builder.
+"""
+import numpy as np
+import pytest
+from _hypo_shim import given, settings, st  # hypothesis or fallback
+
+import jax.numpy as jnp
+
+from repro.core.baselines import constrained_distance_grid, dijkstra_query
+from repro.core.dominance import pareto_filter_grouped
+from repro.core.generators import erdos_renyi
+from repro.core.graph import INF_DIST
+from repro.core.query import (DeviceQueryEngine, query_batch_jnp,
+                              query_batch_sorted_jnp)
+from repro.core.wc_index import build_wc_index
+from repro.core.wc_index_batched import (build_wc_index_batched,
+                                         build_wc_index_batched_packed,
+                                         clean_index)
+
+FIXED_CAP = 64    # padded label width shared by every instance (V <= 12 =>
+                  # counts <= (W+1) * V < 64, asserted below)
+FIXED_B = 1024    # query batch padding for the jnp paths
+
+N_BLOCKS = 8
+EXAMPLES_PER_BLOCK = 25   # N_BLOCKS * EXAMPLES_PER_BLOCK = 200 instances
+_instances_run = [0]
+
+# one engine cache per (graph fingerprint): the csr engines recompile per
+# tile shape only; keeping construction per-instance is the point (the
+# packing path is part of what is under test)
+
+
+def _full_grid(V, W):
+    """Every (s, t, w_level) including the infeasible level W."""
+    s, t, w = np.meshgrid(np.arange(V), np.arange(V), np.arange(W + 1),
+                          indexing="ij")
+    return (s.ravel().astype(np.int32), t.ravel().astype(np.int32),
+            w.ravel().astype(np.int32))
+
+
+def _pad_queries(s, t, wl):
+    n = len(s)
+    assert n <= FIXED_B
+    sp = np.zeros(FIXED_B, dtype=np.int32)
+    tp = np.zeros(FIXED_B, dtype=np.int32)
+    wp = np.zeros(FIXED_B, dtype=np.int32)
+    sp[:n], tp[:n], wp[:n] = s, t, wl
+    return sp, tp, wp, n
+
+
+@pytest.mark.parametrize("block", range(N_BLOCKS))
+@given(st.sampled_from([8, 10, 12]), st.sampled_from([2.5, 3.5, 4.5]),
+       st.sampled_from([2, 3]), st.integers(0, 100_000))
+@settings(max_examples=EXAMPLES_PER_BLOCK, deadline=None, derandomize=True)
+def test_five_paths_agree_on_full_grid(block, n, deg, levels, seed):
+    g = erdos_renyi(n, deg, num_levels=levels, seed=seed + 7919 * block)
+    V, W = g.num_nodes, g.num_levels
+    idx = build_wc_index(g)
+    assert int(idx.count.max()) <= FIXED_CAP
+
+    s, t, wl = _full_grid(V, W)
+    exp = constrained_distance_grid(g)[s, t, wl]
+
+    # 1. host sort-merge, every grid point
+    got1 = np.array([idx.query_one(int(a), int(b), int(w))
+                     for a, b, w in zip(s, t, wl)], dtype=np.int32)
+    np.testing.assert_array_equal(got1, exp)
+
+    # 2./3. padded jnp paths (fixed shapes -> a handful of compiles)
+    hub, dist, wlev, count = idx.padded_device_arrays(cap=FIXED_CAP)
+    dev = tuple(jnp.asarray(a) for a in (hub, dist, wlev, count))
+    sp, tp, wp, nq = _pad_queries(s, t, wl)
+    qargs = (jnp.asarray(sp), jnp.asarray(tp), jnp.asarray(wp))
+    got2 = np.asarray(query_batch_jnp(*dev, *qargs))[:nq]
+    np.testing.assert_array_equal(got2, exp)
+    got3 = np.asarray(query_batch_sorted_jnp(*dev, *qargs))[:nq]
+    np.testing.assert_array_equal(got3, exp)
+
+    # 4. segmented CSR kernel via the bucket-pair planner
+    eng = DeviceQueryEngine(idx, layout="csr", use_pallas=True)
+    got4 = np.asarray(eng.query(s, t, wl))
+    np.testing.assert_array_equal(got4, exp)
+
+    # 5. constrained Dijkstra, every grid point
+    got5 = np.array([dijkstra_query(g, int(a), int(b), int(w))
+                     for a, b, w in zip(s, t, wl)], dtype=np.int32)
+    np.testing.assert_array_equal(got5, exp)
+
+    _instances_run[0] += 1
+
+
+# ------------------------------------------------------- index invariants
+def _builders(g):
+    """(name, padded WCIndex view, flat-entry arrays) for both batched
+    builders; flat arrays are (v, hub, dist, wlev) vertex-major."""
+    bat, _ = build_wc_index_batched(g, batch_size=16)
+    packed_idx, _ = build_wc_index_batched_packed(g, batch_size=16)
+    out = []
+    for name, idx in [("padded-batched", bat),
+                      ("csr-batched", packed_idx.to_index())]:
+        c = idx.count
+        rows = np.repeat(np.arange(idx.num_nodes), c)
+        cols = np.concatenate([np.arange(k) for k in c]) if len(c) else \
+            np.zeros(0, np.int64)
+        out.append((name, idx, (rows, idx.hub_rank[rows, cols],
+                                idx.dist[rows, cols], idx.wlev[rows, cols])))
+    return out
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None, derandomize=True)
+def test_thm3_monotonic_within_vertex_hub_groups(seed):
+    """Thm. 3: after the Pareto post-pass, dist and wlev strictly increase
+    inside every (vertex, hub) group, and rows stay hub-sorted — for both
+    the padded batched builder and the CSR-emitting device builder."""
+    g = erdos_renyi(40, 3.5, num_levels=3, seed=seed)
+    for name, idx, (v, h, d, w) in _builders(g):
+        key = v.astype(np.int64) * g.num_nodes + h
+        # rows hub-sorted: per-vertex key non-decreasing
+        same_v = v[1:] == v[:-1]
+        assert np.all(h[1:][same_v] >= h[:-1][same_v]), name
+        same_g = same_v & (h[1:] == h[:-1])
+        assert np.all(d[1:][same_g] > d[:-1][same_g]), name
+        assert np.all(w[1:][same_g] > w[:-1][same_g]), name
+        assert len(key)  # non-degenerate
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None, derandomize=True)
+def test_minimality_after_pareto_post_pass(seed):
+    """No dominated entry survives the post-pass in either builder."""
+    g = erdos_renyi(40, 4.0, num_levels=3, seed=seed + 1)
+    for name, idx, (v, h, d, w) in _builders(g):
+        keep = pareto_filter_grouped(v.astype(np.int64) * g.num_nodes + h,
+                                     d.astype(np.int64), w.astype(np.int64))
+        assert keep.all(), name
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None, derandomize=True)
+def test_sequential_vs_batched_label_sets(seed):
+    """After PSL-style cleaning the batched builders' label sets equal the
+    sequential builder's exactly — same (vertex, hub, dist, wlev) tuples,
+    not just the same sizes/answers."""
+    g = erdos_renyi(50, 3.0, num_levels=3, seed=seed + 2)
+    seq = build_wc_index(g)
+
+    def entry_set(idx):
+        c = idx.count
+        rows = np.repeat(np.arange(idx.num_nodes), c)
+        cols = np.concatenate([np.arange(k) for k in c])
+        return set(zip(rows.tolist(), idx.hub_rank[rows, cols].tolist(),
+                       idx.dist[rows, cols].tolist(),
+                       idx.wlev[rows, cols].tolist()))
+
+    bat, _ = build_wc_index_batched(g, batch_size=16)
+    packed_idx, _ = build_wc_index_batched_packed(g, batch_size=16)
+    assert entry_set(clean_index(bat)[0]) == entry_set(seq)
+    assert entry_set(clean_index(packed_idx.to_index())[0]) == \
+        entry_set(seq)
+
+
+def test_packed_builder_store_is_byte_identical_to_pack_after_build():
+    """Acceptance: the device-resident builder's directly-emitted CSR store
+    equals pack-after-build on every array, bucket tables included."""
+    for seed, nv in [(5, 60), (9, 90)]:
+        g = erdos_renyi(nv, 3.5, num_levels=4, seed=seed)
+        old, _ = build_wc_index_batched(g, batch_size=16)
+        via_padded = old.packed()
+        direct = build_wc_index_batched_packed(g, batch_size=16)[0].labels
+        for field in ("hub_rank", "dist", "wlev", "offsets", "bucket_widths",
+                      "bucket_of", "slot_of"):
+            np.testing.assert_array_equal(getattr(direct, field),
+                                          getattr(via_padded, field), field)
+
+
+def test_unreachable_and_identity_on_packed_index():
+    g = erdos_renyi(12, 1.0, num_levels=2, seed=3)  # sparse: likely islands
+    pidx, _ = build_wc_index_batched_packed(g, batch_size=4)
+    D = constrained_distance_grid(g)
+    for s in range(g.num_nodes):
+        for t in range(g.num_nodes):
+            for w in range(g.num_levels + 1):
+                assert pidx.query_one(s, t, w) == D[s, t, w]
+    assert pidx.query_one(0, 0, g.num_levels) == 0
+    assert np.any(D[:, :, 0] == INF_DIST)  # the generator made islands
+
+
+def test_differential_coverage_target():
+    """Acceptance: the harness is configured for >= 200 generated instances
+    (asserted statically so the check holds under any test subselection);
+    when blocks did run in this session, each must have produced exactly
+    its example count — no silent early exits."""
+    assert N_BLOCKS * EXAMPLES_PER_BLOCK >= 200
+    if _instances_run[0]:
+        assert _instances_run[0] % EXAMPLES_PER_BLOCK == 0

@@ -108,6 +108,76 @@ def test_frontier_kernel_matches_bfs_round():
         assert newF[v] == max(lvl for u, lvl in zip(nbrs, lvls) if u == v)
 
 
+# ----------------------------------------------------- rank-batched round
+@pytest.mark.parametrize("B,V,cap,W1", [(4, 64, 8, 4), (8, 100, 16, 6),
+                                        (3, 256, 8, 3)])
+def test_wc_prune_emit_kernel_shapes(B, V, cap, W1):
+    rng = np.random.default_rng(B * V)
+    F = rng.integers(-1, W1, size=(B, V)).astype(np.int32)
+    T = rng.integers(0, 1 << 30, size=(B, V, W1)).astype(np.int32)
+    hub = rng.integers(-1, V, size=(V, cap)).astype(np.int32)
+    dist = rng.integers(0, 1 << 30, size=(V, cap)).astype(np.int32)
+    wlev = rng.integers(-1, W1, size=(V, cap)).astype(np.int32)
+    d = jnp.int32(rng.integers(1, 5))
+    args = (jnp.asarray(F), jnp.asarray(T), jnp.asarray(hub),
+            jnp.asarray(dist), jnp.asarray(wlev), d)
+    got = np.asarray(ops.wc_prune_emit(*args))
+    exp = np.asarray(ops.wc_prune_emit(*args, use_kernel=False))
+    np.testing.assert_array_equal(got, exp)
+
+
+@pytest.mark.parametrize("B,V,D", [(4, 64, 5), (8, 100, 12), (3, 256, 3)])
+def test_wc_relax_batched_kernel_shapes(B, V, D):
+    rng = np.random.default_rng(B * V + D)
+    emit_w = rng.integers(-1, 6, size=(B, V)).astype(np.int32)
+    nbr = rng.integers(-1, V, size=(V, D)).astype(np.int32)
+    lvl = np.where(nbr >= 0, rng.integers(0, 6, size=(V, D)), -1).astype(
+        np.int32)
+    rank = rng.permutation(V).astype(np.int32)
+    rr = rng.integers(0, V, size=B).astype(np.int32)
+    R = rng.integers(-1, 6, size=(B, V)).astype(np.int32)
+    args = (jnp.asarray(emit_w), jnp.asarray(nbr), jnp.asarray(lvl),
+            jnp.asarray(rank), jnp.asarray(rr), jnp.asarray(R))
+    got = ops.wc_relax_batched(*args)
+    exp = ops.wc_relax_batched(*args, use_kernel=False)
+    for x, y in zip(got, exp):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_wc_batched_round_kernels_fuzz(seed):
+    """Kernel vs jnp ref on one full prune+relax round over a real graph's
+    padded adjacency and a random partial index."""
+    rng = np.random.default_rng(seed)
+    g = scale_free(80, 3, num_levels=4, seed=seed % 7)
+    V, W1 = g.num_nodes, g.num_levels + 1
+    B, cap = 8, 8
+    nbr, lvl = g.padded_adjacency()
+    F = rng.integers(-1, W1, size=(B, V)).astype(np.int32)
+    T = rng.integers(0, 40, size=(B, V, W1)).astype(np.int32)
+    hub = np.sort(rng.integers(-1, V, size=(V, cap)), 1).astype(np.int32)
+    dist = rng.integers(0, 40, size=(V, cap)).astype(np.int32)
+    wlev = rng.integers(-1, W1, size=(V, cap)).astype(np.int32)
+    rank = rng.permutation(V).astype(np.int32)
+    rr = rng.integers(0, V, size=B).astype(np.int32)
+    d = jnp.int32(rng.integers(1, 4))
+    emit_k = ops.wc_prune_emit(jnp.asarray(F), jnp.asarray(T),
+                               jnp.asarray(hub), jnp.asarray(dist),
+                               jnp.asarray(wlev), d)
+    emit_r = ops.wc_prune_emit(jnp.asarray(F), jnp.asarray(T),
+                               jnp.asarray(hub), jnp.asarray(dist),
+                               jnp.asarray(wlev), d, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(emit_k), np.asarray(emit_r))
+    R = np.where(F >= 0, F, -1).astype(np.int32)
+    relax_args = (emit_k, jnp.asarray(nbr), jnp.asarray(lvl),
+                  jnp.asarray(rank), jnp.asarray(rr), jnp.asarray(R))
+    got = ops.wc_relax_batched(*relax_args)
+    exp = ops.wc_relax_batched(*relax_args, use_kernel=False)
+    for x, y in zip(got, exp):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
 # --------------------------------------------------------------------- cin
 @pytest.mark.parametrize("B,H,M,D,K", [(8, 16, 8, 4, 8), (20, 13, 7, 6, 11),
                                        (4, 200, 39, 10, 200)])

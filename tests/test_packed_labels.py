@@ -161,6 +161,47 @@ def test_segmented_multi_bucket_cross_pairs():
                           idx.query_batch(s, t, wl))
 
 
+def test_from_flat_round_trips_from_index(indices):
+    """`from_flat` (the builder's emission entry point) and `from_index`
+    (pack-after-build) agree on every derived table."""
+    for idx in indices.values():
+        a = idx.packed()
+        b = PackedLabels.from_flat(a.hub_rank, a.dist, a.wlev, a.offsets)
+        for field in ("hub_rank", "dist", "wlev", "offsets", "bucket_widths",
+                      "bucket_of", "slot_of"):
+            assert np.array_equal(getattr(a, field), getattr(b, field))
+        for ma, mb in zip(a.bucket_vertices, b.bucket_vertices):
+            assert np.array_equal(ma, mb)
+
+
+def test_builder_append_finalize_matches_pack_after_build(indices):
+    """Feeding a WCIndex's non-self entries hub-by-hub-batch through
+    `PackedLabelsBuilder` reproduces `.packed()` exactly."""
+    from repro.core.wc_index import PackedLabelsBuilder
+
+    idx = indices["road"]
+    V = idx.num_nodes
+    c = idx.count
+    rows = np.repeat(np.arange(V), c)
+    cols = np.concatenate([np.arange(k) for k in c])
+    h = idx.hub_rank[rows, cols]
+    d = idx.dist[rows, cols]
+    w = idx.wlev[rows, cols]
+    not_self = h != idx.rank[rows]          # builder appends self entries
+    rows, h, d, w = rows[not_self], h[not_self], d[not_self], w[not_self]
+    builder = PackedLabelsBuilder(V)
+    for lo in range(0, V, 32):              # ascending hub-rank slices
+        m = (h >= lo) & (h < lo + 32)
+        o = np.lexsort((d[m], h[m], rows[m]))
+        builder.append_batch(rows[m][o], h[m][o], d[m][o], w[m][o])
+    store, removed = builder.finalize(rank=idx.rank,
+                                      num_levels=idx.num_levels)
+    assert removed == 0                     # sequential index is minimal
+    ref = idx.packed()
+    for field in ("hub_rank", "dist", "wlev", "offsets"):
+        assert np.array_equal(getattr(store, field), getattr(ref, field))
+
+
 def test_segmented_kernel_vs_ref_op():
     """ops.wcsd_query_segmented kernel vs jnp ref on synthetic tiles with
     different side widths."""

@@ -15,8 +15,8 @@ def small_index():
 
 
 # ------------------------------------------------------------------- memo
-def test_memo_hit_skips_device(small_index):
-    srv = WCSDServer(small_index, max_batch=64)
+def test_memo_hit_skips_device(small_index, serve_layout):
+    srv = WCSDServer(small_index, max_batch=64, layout=serve_layout)
     r1 = srv.submit(3, 9, 1)
     srv.flush()
     batches_before = srv.stats.batches
@@ -27,24 +27,25 @@ def test_memo_hit_skips_device(small_index):
     assert srv.stats.batches == batches_before
 
 
-def test_memo_is_symmetric(small_index):
-    srv = WCSDServer(small_index, max_batch=64)
+def test_memo_is_symmetric(small_index, serve_layout):
+    srv = WCSDServer(small_index, max_batch=64, layout=serve_layout)
     srv.submit(7, 2, 0)
     srv.flush()
     srv.submit(2, 7, 0)               # reversed endpoints hit the same key
     assert srv.stats.memo_hits == 1
 
 
-def test_memo_distinguishes_levels(small_index):
-    srv = WCSDServer(small_index, max_batch=64)
+def test_memo_distinguishes_levels(small_index, serve_layout):
+    srv = WCSDServer(small_index, max_batch=64, layout=serve_layout)
     srv.submit(7, 2, 0)
     srv.flush()
     srv.submit(7, 2, 1)               # different level -> miss
     assert srv.stats.memo_hits == 0
 
 
-def test_memo_lru_eviction(small_index):
-    srv = WCSDServer(small_index, max_batch=1024, memo_capacity=4)
+def test_memo_lru_eviction(small_index, serve_layout):
+    srv = WCSDServer(small_index, max_batch=1024, memo_capacity=4,
+                     layout=serve_layout)
     for i in range(6):                 # 6 distinct keys through capacity 4
         srv.submit(i, i + 10, 0)
     srv.flush()
@@ -59,8 +60,9 @@ def test_memo_lru_eviction(small_index):
     assert srv.stats.memo_hits == 1
 
 
-def test_memo_hit_refreshes_lru_order(small_index):
-    srv = WCSDServer(small_index, max_batch=1024, memo_capacity=2)
+def test_memo_hit_refreshes_lru_order(small_index, serve_layout):
+    srv = WCSDServer(small_index, max_batch=1024, memo_capacity=2,
+                     layout=serve_layout)
     srv.submit(1, 11, 0)
     srv.submit(2, 12, 0)
     srv.flush()
@@ -87,8 +89,8 @@ def test_flush_pads_to_power_of_two(small_index):
         assert seen[-1] == want, (n, seen[-1])
 
 
-def test_flush_at_max_batch(small_index):
-    srv = WCSDServer(small_index, max_batch=4)
+def test_flush_at_max_batch(small_index, serve_layout):
+    srv = WCSDServer(small_index, max_batch=4, layout=serve_layout)
     rng = np.random.default_rng(0)
     for i in range(4):                 # distinct keys -> 4 misses
         srv.submit(int(rng.integers(50)), int(60 + i), 0)
@@ -96,8 +98,8 @@ def test_flush_at_max_batch(small_index):
     assert srv.pending == []
 
 
-def test_result_forces_flush(small_index):
-    srv = WCSDServer(small_index, max_batch=1024)
+def test_result_forces_flush(small_index, serve_layout):
+    srv = WCSDServer(small_index, max_batch=1024, layout=serve_layout)
     rid = srv.submit(4, 8, 1)
     assert srv.pending and srv.stats.batches == 0
     got = srv.result(rid)              # pending rid -> flush happens inline
@@ -105,6 +107,64 @@ def test_result_forces_flush(small_index):
     assert srv.stats.batches == 1
     assert srv.pending == []
     assert srv.result(12345) is None   # unknown rid: no flush, None
+
+
+def test_result_unknown_rid_never_flushes_pending(small_index, serve_layout):
+    """Regression for the O(pending) scan fix: an unknown rid must return
+    None WITHOUT flushing the queued requests, however many are pending."""
+    srv = WCSDServer(small_index, max_batch=1024, layout=serve_layout)
+    for i in range(37):
+        srv.submit(i, i + 40, 0)
+    assert len(srv.pending) == 37
+    assert srv.result(999_999) is None
+    assert len(srv.pending) == 37      # untouched
+    assert srv.stats.batches == 0
+
+
+def test_pending_rid_set_tracks_queue(small_index, serve_layout):
+    """The pending-rid set mirrors the pending list through submit / memo
+    hit / auto-flush / result-before-flush."""
+    srv = WCSDServer(small_index, max_batch=4, layout=serve_layout)
+    r1 = srv.submit(1, 21, 0)
+    assert srv._pending_rids == {r1}
+    srv.flush()
+    assert srv._pending_rids == set()
+    r2 = srv.submit(1, 21, 0)          # memo hit: never enters the queue
+    assert srv._pending_rids == set() and srv.result(r2) == srv.result(r1)
+    rids = [srv.submit(i, i + 50, 0) for i in range(2, 6)]  # hits max_batch
+    assert srv.stats.batches == 2 and srv._pending_rids == set()
+    r3 = srv.submit(9, 33, 1)
+    assert srv.result(r3) is not None  # result-before-flush still works
+    assert srv._pending_rids == set()
+    assert all(srv.result(r) is not None for r in rids)
+
+
+# -------------------------------------------------------------- directed
+def test_directed_mode_keeps_memo_keys_apart(small_index):
+    """undirected=False must not canonicalize (s, t): on a directed graph
+    d(s, t) != d(t, s) and the swap would alias distinct answers. The
+    engine is stubbed with an asymmetric function to simulate that."""
+    srv = WCSDServer(small_index, max_batch=1024, undirected=False)
+    srv.engine.query = lambda s, t, w: np.asarray(s) * 1000 + np.asarray(t)
+    a = srv.submit(2, 7, 0)
+    srv.flush()
+    b = srv.submit(7, 2, 0)            # NOT a memo hit in directed mode
+    assert srv.stats.memo_hits == 0
+    srv.flush()
+    assert srv.result(a) == 2007 and srv.result(b) == 7002
+    # an exact repeat IS still memoized
+    c = srv.submit(2, 7, 0)
+    assert srv.stats.memo_hits == 1 and srv.result(c) == 2007
+
+
+def test_undirected_gate_still_canonicalizes_by_default(small_index):
+    srv = WCSDServer(small_index, max_batch=64)
+    assert srv.undirected
+    r1 = srv.submit(11, 3, 1)
+    srv.flush()
+    r2 = srv.submit(3, 11, 1)
+    assert srv.stats.memo_hits == 1
+    assert srv.result(r1) == srv.result(r2)
 
 
 # ------------------------------------------------------------ correctness
@@ -118,6 +178,23 @@ def test_query_many_matches_oracle(small_index, layout):
     assert np.array_equal(got, exp)
     assert srv.stats.requests == 300
     assert srv.stats.batches >= 1
+
+
+def test_serve_from_packed_index_no_repack():
+    """A PackedWCIndex from the device-resident builder is served as-is:
+    the engine adopts the store object (no repack) and answers match the
+    padded oracle."""
+    from repro.core.generators import erdos_renyi
+    from repro.core.wc_index_batched import build_wc_index_batched_packed
+
+    g = erdos_renyi(90, 3.5, num_levels=4, seed=8)
+    pidx, _ = build_wc_index_batched_packed(g, batch_size=16)
+    srv = WCSDServer(pidx, max_batch=64, layout="csr")
+    assert srv.engine.packed is pidx.labels   # same object, zero repack
+    s, t, wl = random_queries_for(pidx, 200, seed=4)
+    got = srv.query_many(s, t, wl)
+    exp = pidx.to_index().query_batch(s, t, wl)
+    assert np.array_equal(got, exp)
 
 
 def random_queries_for(idx, n, seed):
