@@ -234,18 +234,47 @@ def bench_label_store(dataset="SO(s)", n_queries=2048):
 
 
 def bench_serving(batch=4096):
-    """Throughput of the serving engine (batched device queries)."""
+    """Throughput of the serving engine: the single-device batched path vs
+    the sharded engine (batch sharded over every attached device, labels
+    replicated) — the µs/query comparison CI archives as BENCH_serving.json.
+    Run under ``--xla_force_host_platform_device_count=N`` (benchmarks/
+    run.py sets it for this suite) to exercise a real multi-device mesh;
+    wall-clock on virtual CPU devices measures dispatch overhead, not TPU
+    speedup, so the trend under test is correctness of the scaling path."""
+    import jax
+
+    from repro.core.query import ShardedQueryEngine
+    from repro.launch.mesh import make_serving_mesh
+
     rows = []
     g = scale_free(3000, 4, num_levels=5, seed=13)
     idx = build_wc_index(g, ordering="degree")
-    srv = WCSDServer(idx, max_batch=batch)
     s, t, wl = random_queries(g, batch * 4, seed=5)
-    srv.query_many(s[:64], t[:64], wl[:64])  # warm
-    t0 = time.perf_counter()
-    srv.query_many(s, t, wl)
-    dt = time.perf_counter() - t0
-    rows.append(dict(table="serving", dataset="BA3000", algo="qps",
-                     value=len(s) / dt))
-    rows.append(dict(table="serving", dataset="BA3000", algo="us_per_query",
-                     value=dt / len(s) * 1e6))
+
+    def timed(srv):
+        srv.query_many(s[:64], t[:64], wl[:64])  # warm
+        t0 = time.perf_counter()
+        out = srv.query_many(s, t, wl)
+        return time.perf_counter() - t0, out
+
+    dt_single, out_single = timed(WCSDServer(idx, max_batch=batch))
+    n_dev = len(jax.devices())
+    mesh = make_serving_mesh()
+    dt_shard, out_shard = timed(WCSDServer(
+        idx, max_batch=batch, backend="sharded", mesh=mesh, layout="padded"))
+    assert np.array_equal(out_single, out_shard), \
+        "sharded serving diverged from single-device"
+    for algo, dt in [("qps", dt_single), ("qps_sharded", dt_shard)]:
+        rows.append(dict(table="serving", dataset="BA3000", algo=algo,
+                         value=len(s) / dt))
+    rows += [
+        dict(table="serving", dataset="BA3000", algo="us_per_query",
+             value=dt_single / len(s) * 1e6),
+        dict(table="serving", dataset="BA3000", algo="us_per_query_sharded",
+             value=dt_shard / len(s) * 1e6),
+        dict(table="serving", dataset="BA3000", algo="sharded_devices",
+             value=n_dev),
+        dict(table="serving", dataset="BA3000", algo="sharded_speedup",
+             value=dt_single / dt_shard),
+    ]
     return rows

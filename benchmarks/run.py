@@ -1,22 +1,71 @@
 """Benchmark harness: one function per paper table (Figs. 5-12) plus the
 beyond-paper builder/kernel/serving benches. Prints ``table,dataset,algo,
-value`` CSV. ``--quick`` trims dataset sizes for CI."""
+value`` CSV; ``--json PATH`` additionally writes the machine-readable
+``{suite: [rows]}`` mapping consumed by the CI perf-trajectory artifacts
+(`BENCH_*.json`). ``--quick`` trims dataset sizes for CI; ``--only`` takes
+a comma-separated suite list."""
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import subprocess
 import sys
+import tempfile
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-from benchmarks import bench_indexing, bench_kernels, bench_wcsd  # noqa: E402
+
+def _serving_in_subprocess(args) -> list:
+    """Run the serving suite in a child process so its virtual-device
+    topology (`xla_force_host_platform_device_count`) cannot leak into the
+    other suites' measurements — jax locks the device count at first
+    initialization, so one process cannot serve both."""
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        path = f.name
+    cmd = [sys.executable, "-m", "benchmarks.run", "--only", "serving",
+           "--json", path, "--host-devices", str(args.host_devices)]
+    if args.quick:
+        cmd.append("--quick")
+    r = subprocess.run(cmd, capture_output=True, text=True, cwd=REPO_ROOT,
+                       env={**os.environ})
+    if r.returncode != 0:
+        raise RuntimeError(f"serving sub-bench failed:\n{r.stdout}\n"
+                           f"{r.stderr}")
+    with open(path) as f:
+        rows = json.load(f)["serving"]
+    os.unlink(path)
+    return rows
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only")
+    ap.add_argument("--only", help="comma-separated suite names")
+    ap.add_argument("--json", dest="json_path", metavar="PATH",
+                    help="write {suite: [rows]} JSON next to the CSV")
+    ap.add_argument("--host-devices", type=int, default=8,
+                    help="virtual host devices for the sharded serving "
+                         "bench (must be set before jax initializes)")
     args = ap.parse_args()
+
+    only = set(args.only.split(",")) if args.only else None
+    # the serving suite compares the sharded engine against single-device
+    # on a multi-device topology. When it is the ONLY suite, fix the
+    # virtual device count in-process (appending — never clobbering — any
+    # pre-existing XLA_FLAGS) BEFORE anything imports jax; when it runs
+    # alongside other suites it goes to a subprocess instead, so every
+    # other row keeps the default topology.
+    serving_in_proc = only == {"serving"}
+    if serving_in_proc and args.host_devices > 1:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.host_devices}").strip()
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import bench_indexing, bench_kernels, bench_wcsd
 
     suites = {
         "indexing": lambda: bench_wcsd.bench_indexing(
@@ -29,7 +78,9 @@ def main() -> None:
         "batched": bench_wcsd.bench_batched_builder,
         "index_build": lambda: bench_indexing.bench_build_paths(
             configs=bench_indexing.QUICK_CONFIGS if args.quick else None),
-        "serving": bench_wcsd.bench_serving,
+        "serving": (lambda: bench_wcsd.bench_serving(
+            batch=1024 if args.quick else 4096)) if serving_in_proc
+        else lambda: _serving_in_subprocess(args),
         "label_store": lambda: bench_wcsd.bench_label_store(
             dataset="MV(s)" if args.quick else "SO(s)",
             n_queries=256 if args.quick else 2048),
@@ -38,13 +89,25 @@ def main() -> None:
             B=256 if args.quick else 2048, V=800 if args.quick else 4000),
         "kernel_cin": bench_kernels.bench_cin_traffic,
     }
-    if args.only:
-        suites = {k: v for k, v in suites.items() if k == args.only}
+    if only:
+        unknown = only - suites.keys()
+        if unknown:
+            raise SystemExit(f"unknown suites: {sorted(unknown)}; "
+                             f"available: {sorted(suites)}")
+        suites = {k: v for k, v in suites.items() if k in only}
+    results: dict[str, list] = {}
     print("table,dataset,algo,value")
     for name, fn in suites.items():
-        for row in fn():
+        rows = fn()
+        results[name] = rows
+        for row in rows:
             print(f"{row['table']},{row['dataset']},{row['algo']},"
                   f"{row['value']:.6g}", flush=True)
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"# wrote {args.json_path} ({sum(map(len, results.values()))} "
+              f"rows, {len(results)} suites)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -20,15 +20,20 @@ def main():
     s, t, wl = random_queries(g, 10_000, seed=1)
 
     # layout="padded": one [V, cap] store; layout="csr": CSR-packed bucket
-    # tiles, flushes planned per bucket pair (see docs/index-format.md)
+    # tiles, flushes planned per bucket pair (see docs/index-format.md).
+    # backend="sharded" runs the same queries over every attached device
+    # (labels replicated, batch sharded; see docs/serving.md) — start with
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8 to see it scale.
     out = None
-    for layout in ("padded", "csr"):
-        srv = WCSDServer(idx, max_batch=512, layout=layout)
+    for tag, kwargs in [("padded", dict(layout="padded")),
+                        ("csr", dict(layout="csr")),
+                        ("sharded", dict(layout="csr", backend="sharded"))]:
+        srv = WCSDServer(idx, max_batch=512, **kwargs)
         srv.query_many(s[:64], t[:64], wl[:64])  # warm compile
         t0 = time.perf_counter()
         got = srv.query_many(s, t, wl)
         dt = time.perf_counter() - t0
-        print(f"[{layout:6s}] 10,000 queries in {dt:.2f}s -> "
+        print(f"[{tag:7s}] 10,000 queries in {dt:.2f}s -> "
               f"{len(s)/dt:,.0f} qps ({dt/len(s)*1e6:.0f} us/query), "
               f"batches: {srv.stats.batches}, "
               f"memo hits: {srv.stats.memo_hits}")

@@ -1,10 +1,12 @@
-"""Bonus cell (outside the assigned 40): the paper's own workload on the
-production mesh — batched WCSD queries against a device-resident WC-INDEX.
+"""The paper's serving workload: the dry-run compile cell (below) AND the
+runnable `ServeConfig` consumed by `WCSDServer` / `launch.dryrun --serve`.
 
 Labels for a ~1M-vertex graph (padded width 256) shard their vertex axis
 over "model"; the query batch shards over ("pod","data"). This is the
 serving configuration the WCSDServer would run pod-wide."""
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +16,47 @@ from ..core.query import query_batch_jnp
 from .cell import Cell
 
 SHAPES = ["serve_1m"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Everything `WCSDServer` needs to stand up a serving stack.
+
+    ``backend="sharded"`` builds a `ShardedQueryEngine` over a
+    `launch.mesh.make_serving_mesh` mesh (batch sharded, labels replicated;
+    vertex-sharded labels + row-gather reduce-scatter once the store
+    exceeds ``device_budget_bytes``). ``use_pallas``/``interpret`` select
+    the kernel path: compiled Pallas on TPU is ``use_pallas=True,
+    interpret=False`` — serving is NOT pinned to interpret mode."""
+
+    backend: str = "sharded"          # "device" | "sharded"
+    layout: str = "csr"               # "padded" | "csr"
+    use_pallas: bool = False
+    interpret: bool = True            # False on real TPUs
+    max_batch: int = 1024
+    memo_capacity: int = 65536
+    undirected: bool = True
+    multi_pod: bool = False           # ("pod", "data") batch axes
+    device_budget_bytes: int | None = None
+
+    def server_kwargs(self) -> dict:
+        return dict(backend=self.backend, layout=self.layout,
+                    use_pallas=self.use_pallas, interpret=self.interpret,
+                    max_batch=self.max_batch,
+                    memo_capacity=self.memo_capacity,
+                    undirected=self.undirected,
+                    device_budget_bytes=self.device_budget_bytes,
+                    multi_pod=self.multi_pod)
+
+
+def serve_config() -> ServeConfig:
+    """Production shape: compiled kernels, CSR store, sharded batch."""
+    return ServeConfig(use_pallas=True, interpret=False, max_batch=4096)
+
+
+def smoke_serve_config() -> ServeConfig:
+    """CI shape: interpret-mode kernels on virtual host devices."""
+    return ServeConfig(use_pallas=True, interpret=True, max_batch=256)
 
 _V = 1 << 20          # vertices
 _L = 256              # padded label width

@@ -5,8 +5,8 @@ from .wc_index import (PackedLabels, PackedLabelsBuilder, PackedWCIndex,
 from .wc_index_batched import (build_wc_index_batched,
                                build_wc_index_batched_packed, clean_index)
 from .ordering import make_order, degree_order, tree_decomposition_order, hybrid_order
-from .query import (DeviceQueryEngine, QuerySubBatch, plan_query_batch,
-                    query_batch_jnp)
+from .query import (DeviceQueryEngine, PendingResult, QuerySubBatch,
+                    ShardedQueryEngine, plan_query_batch, query_batch_jnp)
 from .serve import WCSDServer
 
 __all__ = [
@@ -14,6 +14,7 @@ __all__ = [
     "PackedWCIndex", "WCIndex", "build_wc_index", "build_wc_index_batched",
     "build_wc_index_batched_packed", "clean_index", "make_order",
     "degree_order", "tree_decomposition_order", "hybrid_order",
-    "DeviceQueryEngine", "QuerySubBatch", "plan_query_batch",
-    "query_batch_jnp", "WCSDServer",
+    "DeviceQueryEngine", "PendingResult", "QuerySubBatch",
+    "ShardedQueryEngine", "plan_query_batch", "query_batch_jnp",
+    "WCSDServer",
 ]

@@ -8,11 +8,13 @@ batches of (s, t, w_level) queries. Three implementations:
   - `kernels.ops.wcsd_query`: the Pallas TPU kernel (VMEM-tiled).
   - `WCIndex.query_one`: host sort-merge (paper Alg. 5), for tiny workloads.
 
-Distribution: queries are embarrassingly parallel -> shard the batch axis
-over ("pod", "data") and replicate labels; for graphs whose labels exceed a
-chip, shard the *vertex* axis of the label arrays over "model" and gather
-the (at most) two label rows per query with collective-permute-free
-`jnp.take` (XLA turns this into an all-gather of only the touched rows).
+Distribution (`ShardedQueryEngine`): queries are embarrassingly parallel ->
+shard the batch axis over ("data",) / ("pod", "data") and replicate the
+label store on every device; when the store exceeds a per-device HBM
+budget, fall back to sharding the *vertex* (tile-row) axis of the label
+arrays over the same devices and gather the two label rows per query with
+the `row_gather_psum` collective — per query only the touched rows cross
+the interconnect.
 """
 from __future__ import annotations
 
@@ -24,10 +26,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from .graph import INF_DIST
-from .wc_index import (PackedLabels, PackedWCIndex, WCIndex, round_to_lane,
-                       round_to_pow2)
+from .wc_index import (PackedLabels, PackedWCIndex, WCIndex, ceil_to,
+                       round_to_lane, round_to_pow2)
 
 DEV_INF = jnp.int32(1 << 29)
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """`jax.shard_map` where it exists, `jax.experimental.shard_map` on
+    older jax — the serving engines replicate per-query integer math, so
+    replication checking is disabled on both spellings."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
 
 
 @functools.partial(jax.jit, static_argnames=())
@@ -123,7 +137,88 @@ def plan_query_batch(bucket_of: np.ndarray, s: np.ndarray, t: np.ndarray
             for k, a, b in zip(uniq, bounds[:-1], bounds[1:])]
 
 
-class DeviceQueryEngine:
+class PendingResult:
+    """Handle to an in-flight query batch.
+
+    Device work is already dispatched when the handle is created; `wait()`
+    materializes the answers on host (once — the handle caches). This is
+    what lets `WCSDServer` overlap host-side planning of batch k+1 with
+    device execution of batch k."""
+
+    def __init__(self, finalize):
+        self._finalize = finalize
+        self._out = None
+
+    def wait(self) -> np.ndarray:
+        if self._finalize is not None:
+            self._out = np.asarray(self._finalize())
+            self._finalize = None
+        return self._out
+
+
+def _pad_sub_batch(slot_of, num_levels, pos, s, t, w_level, npad):
+    """(srow, trow, wq) arrays for one planned sub-batch, padded to ``npad``
+    with slot 0 at query level num_levels + 1 — infeasible at any stored
+    wlev, so pad lanes compute INF and are discarded."""
+    n = len(pos)
+    srow = np.zeros(npad, dtype=np.int32)
+    trow = np.zeros(npad, dtype=np.int32)
+    wq = np.full(npad, num_levels + 1, dtype=np.int32)
+    srow[:n] = slot_of[s[pos]]
+    trow[:n] = slot_of[t[pos]]
+    wq[:n] = w_level[pos]
+    return srow, trow, wq
+
+
+def _build_padded_store(idx, cap, lane_pad: bool):
+    """[V, L] padded label arrays (+ lane padding for the Pallas kernel)."""
+    h, d, w, c = idx.padded_device_arrays(cap)
+    L = h.shape[1]
+    Lp = round_to_lane(L) if lane_pad else L
+    if Lp != L:
+        pad = ((0, 0), (0, Lp - L))
+        h = np.pad(h, pad, constant_values=-1)
+        d = np.pad(d, pad, constant_values=INF_DIST)
+        w = np.pad(w, pad, constant_values=-1)
+    return h, d, w, c
+
+
+class _QueryEngineBase:
+    """Shared engine plumbing: the host-side bucket-pair plan / pad /
+    dispatch / assemble loop of the CSR layout, and quality-threshold
+    canonicalization. Subclasses provide ``_bucket_of`` / ``_slot_of`` /
+    ``num_levels`` and a per-sub-batch dispatch."""
+
+    def _plan_segmented(self, s, t, w_level, pad_len, dispatch
+                        ) -> PendingResult:
+        """Plan on host, dispatch each sub-batch (padded to ``pad_len(n)``)
+        via ``dispatch(sub, srow, trow, wq)``; materialization of every
+        sub-result is deferred to `wait()`."""
+        s = np.asarray(s, np.int32)
+        t = np.asarray(t, np.int32)
+        w_level = np.asarray(w_level, np.int32)
+        parts = []
+        for sub in plan_query_batch(self._bucket_of, s, t):
+            pos = sub.positions
+            srow, trow, wq = _pad_sub_batch(self._slot_of, self.num_levels,
+                                            pos, s, t, w_level,
+                                            pad_len(len(pos)))
+            parts.append((pos, dispatch(sub, srow, trow, wq)))
+
+        def assemble():
+            out = np.full(len(s), INF_DIST, dtype=np.int32)
+            for pos, res in parts:
+                out[pos] = np.asarray(res)[:len(pos)]
+            return out
+        return PendingResult(assemble)
+
+    def query_from_quality(self, s, t, w: np.ndarray, levels: np.ndarray):
+        """Real-valued thresholds -> levels (exact canonicalization)."""
+        wl = np.searchsorted(levels, np.asarray(w), side="left")
+        return self.query(s, t, wl.astype(np.int32))
+
+
+class DeviceQueryEngine(_QueryEngineBase):
     """Holds device-resident labels and answers query batches.
 
     layout="padded": one [V, cap] store, every query pays the global-max
@@ -158,15 +253,7 @@ class DeviceQueryEngine:
             self._tiles = [tuple(jnp.asarray(a) for a in packed.bucket_tiles(b))
                            for b in range(packed.num_buckets)]
             return
-        h, d, w, c = idx.padded_device_arrays(cap)
-        # pad label width to a lane-friendly multiple of 128 for the kernel
-        L = h.shape[1]
-        Lp = round_to_lane(L) if use_pallas else L
-        if Lp != L:
-            pad = ((0, 0), (0, Lp - L))
-            h = np.pad(h, pad, constant_values=-1)
-            d = np.pad(d, pad, constant_values=INF_DIST)
-            w = np.pad(w, pad, constant_values=-1)
+        h, d, w, c = _build_padded_store(idx, cap, lane_pad=use_pallas)
         self.hub = jnp.asarray(h)
         self.dist = jnp.asarray(d)
         self.wlev = jnp.asarray(w)
@@ -174,7 +261,21 @@ class DeviceQueryEngine:
 
     def query(self, s, t, w_level) -> jax.Array:
         if self.layout == "csr":
-            return self._query_segmented(s, t, w_level)
+            return jnp.asarray(self.query_async(s, t, w_level).wait())
+        # dense path: hand back the dispatched device array directly — no
+        # host round trip for callers that keep computing on device
+        return self._query_dense(s, t, w_level)
+
+    def query_async(self, s, t, w_level) -> PendingResult:
+        """Dispatch a batch without materializing answers: host planning is
+        done and every device call issued when this returns; `wait()` on
+        the handle syncs."""
+        if self.layout == "csr":
+            return self._query_segmented_async(s, t, w_level)
+        res = self._query_dense(s, t, w_level)
+        return PendingResult(lambda: res)
+
+    def _query_dense(self, s, t, w_level) -> jax.Array:
         s = jnp.asarray(s, jnp.int32)
         t = jnp.asarray(t, jnp.int32)
         w_level = jnp.asarray(w_level, jnp.int32)
@@ -185,35 +286,311 @@ class DeviceQueryEngine:
         return query_batch_jnp(self.hub, self.dist, self.wlev, self.count,
                                s, t, w_level)
 
-    def _query_segmented(self, s, t, w_level) -> jax.Array:
-        """Plan on host, route each sub-batch to its bucket-pair kernel."""
+    def _query_segmented_async(self, s, t, w_level) -> PendingResult:
         from ..kernels import ops as kops
-        s = np.asarray(s, np.int32)
-        t = np.asarray(t, np.int32)
-        w_level = np.asarray(w_level, np.int32)
-        out = np.full(s.shape[0], INF_DIST, dtype=np.int32)
-        for sub in plan_query_batch(self._bucket_of, s, t):
-            pos = sub.positions
-            n = len(pos)
-            # pad sub-batch to the next power of two: the compiled kernel
-            # count stays O(buckets^2 * log B) instead of one per batch size
-            npad = round_to_pow2(n)
-            srow = np.zeros(npad, dtype=np.int32)
-            trow = np.zeros(npad, dtype=np.int32)
-            wq = np.full(npad, self.num_levels + 1, dtype=np.int32)  # pad:
-            srow[:n] = self._slot_of[s[pos]]      # infeasible at any level
-            trow[:n] = self._slot_of[t[pos]]
-            wq[:n] = w_level[pos]
+
+        def dispatch(sub, srow, trow, wq):
             hs, ds, ws = self._tiles[sub.bucket_s]
             ht, dt, wt = self._tiles[sub.bucket_t]
-            res = kops.wcsd_query_segmented(
+            return kops.wcsd_query_segmented(
                 hs, ds, ws, ht, dt, wt,
                 jnp.asarray(srow), jnp.asarray(trow), jnp.asarray(wq),
                 interpret=self.interpret, use_kernel=self.use_pallas)
-            out[pos] = np.asarray(res)[:n]
-        return jnp.asarray(out)
 
-    def query_from_quality(self, s, t, w: np.ndarray, levels: np.ndarray):
-        """Real-valued thresholds -> levels (exact canonicalization)."""
-        wl = np.searchsorted(levels, np.asarray(w), side="left")
-        return self.query(s, t, wl.astype(np.int32))
+        # pad sub-batches to the next power of two: the compiled kernel
+        # count stays O(buckets^2 * log B) instead of one per batch size
+        return self._plan_segmented(s, t, w_level, round_to_pow2, dispatch)
+
+
+class ShardedQueryEngine(_QueryEngineBase):
+    """Multi-device serving engine: the label store on a mesh, the query
+    batch sharded over its ("pod",) "data" axes.
+
+    Two placements, chosen by a per-device HBM budget:
+
+    mode="replicated" (default): every device holds the full label store
+    (`NamedSharding` with an all-`None` spec) and answers its slice of the
+    batch under `shard_map` — zero per-query communication, linear
+    throughput scaling. layout="csr" keeps the host-side bucket-pair
+    planner: each planned sub-batch is padded to a device multiple and the
+    segmented scalar-prefetch kernel runs inside `shard_map`.
+
+    mode="sharded_labels": when the store exceeds ``device_budget_bytes``,
+    label tiles shard their vertex/row axis over the same devices in
+    contiguous blocks. Query row ids are replicated; each device
+    contributes its owned label rows and one reduce-scatter
+    (`distributed.collectives.row_gather_psum_scatter`) hands every device
+    exactly the gathered rows of its own batch slice — only touched rows
+    cross the interconnect, and each crosses it once. The masked join then
+    runs locally on the XLA path — the gather, not the compare loop, is
+    the bottleneck this mode exists for — so `use_pallas` only affects
+    replicated mode.
+
+    Every query is answered by per-query integer min-plus reductions that
+    no partitioning reorders, so results are bit-for-bit identical to
+    `DeviceQueryEngine` on the same index.
+    """
+
+    def __init__(self, idx: WCIndex | PackedWCIndex, mesh=None,
+                 cap: int | None = None, use_pallas: bool = False,
+                 interpret: bool = True, layout: str = "csr",
+                 device_budget_bytes: int | None = None,
+                 multi_pod: bool = False):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        if layout not in ("padded", "csr"):
+            raise ValueError(f"unknown layout: {layout!r}")
+        if layout == "csr" and cap is not None:
+            raise ValueError("cap (label-row trimming) only applies to the "
+                             "padded layout; the CSR store keeps exact rows")
+        if mesh is None:
+            from ..launch.mesh import make_serving_mesh
+            mesh = make_serving_mesh(multi_pod=multi_pod)
+        self.mesh = mesh
+        self.batch_axes = tuple(a for a in mesh.axis_names
+                                if a in ("pod", "data"))
+        if not self.batch_axes:
+            raise ValueError(f"mesh axes {mesh.axis_names} carry no "
+                             "('pod', 'data') batch axis")
+        self.ndev = int(np.prod([mesh.shape[a] for a in self.batch_axes]))
+        self.layout = layout
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.num_levels = idx.num_levels
+        self._P = P
+        self._qspec = P(self.batch_axes)
+        self._qsharding = NamedSharding(mesh, self._qspec)
+        # sharded_labels mode wants the query ids replicated: every shard
+        # scores the full row-id list and a reduce-scatter hands each its
+        # own batch slice of the gathered rows
+        self._qreplicated = NamedSharding(mesh, P(None))
+        self._fns: dict = {}  # jitted shard_map callables, one per path
+
+        if layout == "csr":
+            packed = idx.packed()
+            self.packed = packed
+            self._bucket_of = packed.bucket_of
+            self._slot_of = packed.slot_of
+            self.store_bytes_per_device = packed.tile_memory_bytes()
+        else:
+            h, d, w, c = _build_padded_store(idx, cap, lane_pad=use_pallas)
+            self.store_bytes_per_device = int(
+                h.nbytes + d.nbytes + w.nbytes + c.nbytes)
+        self.mode = ("replicated"
+                     if device_budget_bytes is None
+                     or self.store_bytes_per_device <= device_budget_bytes
+                     else "sharded_labels")
+        if self.mode == "sharded_labels":
+            self.store_bytes_per_device = ceil_to(
+                self.store_bytes_per_device, self.ndev) // self.ndev
+
+        rep = NamedSharding(mesh, P(*(None, None)))
+        if layout == "csr":
+            self._tiles = []
+            for b in range(packed.num_buckets):
+                tiles = packed.bucket_tiles(b)
+                if self.mode == "sharded_labels":
+                    tiles = self._shard_tile_rows(tiles)
+                else:
+                    tiles = tuple(jax.device_put(a, rep) for a in tiles)
+                self._tiles.append(tiles)
+        elif self.mode == "sharded_labels":
+            (self.hub, self.dist, self.wlev), self.count, self._rows_per = \
+                self._shard_store_rows((h, d, w), c)
+        else:
+            crep = NamedSharding(mesh, P(None))
+            self.hub = jax.device_put(h, rep)
+            self.dist = jax.device_put(d, rep)
+            self.wlev = jax.device_put(w, rep)
+            self.count = jax.device_put(c, crep)
+
+    # ------------------------------------------------------------ placement
+    def _shard_tile_rows(self, tiles):
+        """Pad a bucket tile's row count to a device multiple (standard pad
+        contract) and shard the row axis over the batch axes."""
+        from jax.sharding import NamedSharding
+        h, d, w = tiles
+        n = h.shape[0]
+        npad = ceil_to(max(n, 1), self.ndev)
+        if npad != n:
+            h = np.pad(h, ((0, npad - n), (0, 0)), constant_values=-1)
+            d = np.pad(d, ((0, npad - n), (0, 0)), constant_values=INF_DIST)
+            w = np.pad(w, ((0, npad - n), (0, 0)), constant_values=-1)
+        sh = NamedSharding(self.mesh, self._P(self.batch_axes, None))
+        return tuple(jax.device_put(a, sh) for a in (h, d, w))
+
+    def _shard_store_rows(self, arrays, count):
+        """Pad the padded store's vertex axis to a device multiple and
+        shard it; returns (sharded arrays, sharded count, rows/device)."""
+        from jax.sharding import NamedSharding
+        V = arrays[0].shape[0]
+        Vp = ceil_to(V, self.ndev)
+        fills = (-1, INF_DIST, -1)
+        if Vp != V:
+            arrays = tuple(np.pad(a, ((0, Vp - V), (0, 0)),
+                                  constant_values=f)
+                           for a, f in zip(arrays, fills))
+            count = np.pad(count, (0, Vp - V))
+        sh2 = NamedSharding(self.mesh, self._P(self.batch_axes, None))
+        sh1 = NamedSharding(self.mesh, self._P(self.batch_axes))
+        return (tuple(jax.device_put(a, sh2) for a in arrays),
+                jax.device_put(count, sh1), Vp // self.ndev)
+
+    # -------------------------------------------------------------- queries
+    def query(self, s, t, w_level) -> jax.Array:
+        if self.layout == "csr":
+            return jnp.asarray(self.query_async(s, t, w_level).wait())
+        # dense path: hand back the (sharded) device array directly
+        res, n = self._dispatch_padded(s, t, w_level)
+        return res[:n]
+
+    def query_async(self, s, t, w_level) -> PendingResult:
+        s = np.asarray(s, np.int32)
+        t = np.asarray(t, np.int32)
+        w_level = np.asarray(w_level, np.int32)
+        if self.layout == "csr":
+            return self._query_csr_async(s, t, w_level)
+        res, n = self._dispatch_padded(s, t, w_level)
+        return PendingResult(lambda: np.asarray(res)[:n])
+
+    def _batch_pad(self, n: int) -> int:
+        """Power-of-two batch padding, rounded up to a device multiple so
+        shard_map can split the batch axis evenly."""
+        return ceil_to(max(round_to_pow2(n), self.ndev), self.ndev)
+
+    def _put_queries(self, *arrays):
+        sh = (self._qreplicated if self.mode == "sharded_labels"
+              else self._qsharding)
+        return (jax.device_put(a, sh) for a in arrays)
+
+    # ---- padded layout
+    def _dispatch_padded(self, s, t, w_level):
+        """Dispatch one dense batch; returns (device result [npad], n)."""
+        s = np.asarray(s, np.int32)
+        t = np.asarray(t, np.int32)
+        w_level = np.asarray(w_level, np.int32)
+        n = len(s)
+        npad = self._batch_pad(n)
+        sp = np.zeros(npad, dtype=np.int32)
+        tp = np.zeros(npad, dtype=np.int32)
+        wp = np.full(npad, self.num_levels + 1, dtype=np.int32)  # infeasible
+        sp[:n], tp[:n], wp[:n] = s, t, w_level
+        fn = self._padded_fn()
+        return fn(self.hub, self.dist, self.wlev, self.count,
+                  *self._put_queries(sp, tp, wp)), n
+
+    def _padded_fn(self):
+        key = ("padded", self.mode)
+        if key in self._fns:
+            return self._fns[key]
+        P, q = self._P, self._qspec
+        if self.mode == "replicated":
+            use_pallas, interpret = self.use_pallas, self.interpret
+
+            def local(hub, dist, wlev, count, s, t, wq):
+                if use_pallas:
+                    from ..kernels import ops as kops
+                    return kops.wcsd_query(hub, dist, wlev, count, s, t, wq,
+                                           interpret=interpret)
+                return query_batch_jnp(hub, dist, wlev, count, s, t, wq)
+
+            in_specs = (P(None, None),) * 3 + (P(None),) + (q,) * 3
+        else:
+            axes, rows_per, ndev = self.batch_axes, self._rows_per, self.ndev
+
+            def local(hub, dist, wlev, count, s, t, wq):
+                # s/t/wq arrive REPLICATED: every shard scores the full
+                # row-id list against its row block and a reduce-scatter
+                # leaves each shard the gathered rows of its batch slice
+                from ..distributed.collectives import (
+                    axis_linear_index, row_gather_psum_scatter)
+                b_loc = s.shape[0] // ndev
+                wq_loc = jax.lax.dynamic_slice_in_dim(
+                    wq, axis_linear_index(axes) * b_loc, b_loc)
+
+                def side(v):
+                    h = row_gather_psum_scatter(hub, v, axes, rows_per)
+                    dd = row_gather_psum_scatter(dist, v, axes, rows_per)
+                    ww = row_gather_psum_scatter(wlev, v, axes, rows_per)
+                    cc = row_gather_psum_scatter(count, v, axes, rows_per)
+                    col = jnp.arange(h.shape[1])
+                    m = (col[None, :] < cc[:, None]) & (ww >= wq_loc[:, None])
+                    return h, jnp.where(m, jnp.minimum(dd, DEV_INF), DEV_INF)
+
+                hs, ds = side(s)
+                ht, dt = side(t)
+                eq = hs[:, :, None] == ht[:, None, :]
+                best = jnp.where(eq, ds[:, :, None] + dt[:, None, :],
+                                 DEV_INF).min(axis=(1, 2))
+                return jnp.where(best >= DEV_INF, INF_DIST,
+                                 best).astype(jnp.int32)
+
+            in_specs = (P(self.batch_axes, None),) * 3 \
+                + (P(self.batch_axes),) + (P(None),) * 3
+        fn = jax.jit(shard_map_compat(local, self.mesh, in_specs, q))
+        self._fns[key] = fn
+        return fn
+
+    # ---- csr layout
+    def _query_csr_async(self, s, t, w_level) -> PendingResult:
+        fn = self._segmented_fn()
+
+        def dispatch(sub, srow, trow, wq):
+            hs, ds, ws = self._tiles[sub.bucket_s]
+            ht, dt, wt = self._tiles[sub.bucket_t]
+            return fn(hs, ds, ws, ht, dt, wt,
+                      *self._put_queries(srow, trow, wq))
+
+        return self._plan_segmented(s, t, w_level, self._batch_pad, dispatch)
+
+    def _segmented_fn(self):
+        key = ("csr", self.mode)
+        if key in self._fns:
+            return self._fns[key]
+        P, q = self._P, self._qspec
+        if self.mode == "replicated":
+            use_pallas, interpret = self.use_pallas, self.interpret
+
+            def local(hs, ds, ws, ht, dt, wt, srow, trow, wq):
+                from ..kernels import ops as kops
+                return kops.wcsd_query_segmented(
+                    hs, ds, ws, ht, dt, wt, srow, trow, wq,
+                    interpret=interpret, use_kernel=use_pallas)
+
+            tile = P(None, None)
+        else:
+            axes, ndev = self.batch_axes, self.ndev
+
+            def local(hs, ds, ws, ht, dt, wt, srow, trow, wq):
+                # replicated row ids + reduce-scatter, as in the padded
+                # sharded-labels path; tiles are row-sharded per bucket
+                from ..distributed.collectives import (
+                    axis_linear_index, row_gather_psum_scatter)
+                b_loc = srow.shape[0] // ndev
+                wq_loc = jax.lax.dynamic_slice_in_dim(
+                    wq, axis_linear_index(axes) * b_loc, b_loc)
+
+                def side(h, d, w, rows):
+                    per = h.shape[0]  # local row-block height
+                    hg = row_gather_psum_scatter(h, rows, axes, per)
+                    dg = row_gather_psum_scatter(d, rows, axes, per)
+                    wg = row_gather_psum_scatter(w, rows, axes, per)
+                    # store pads carry wlev = -1: one compare masks both
+                    # out-of-row and infeasible entries
+                    return hg, jnp.where(wg >= wq_loc[:, None],
+                                         jnp.minimum(dg, DEV_INF), DEV_INF)
+
+                hs2, ds2 = side(hs, ds, ws, srow)
+                ht2, dt2 = side(ht, dt, wt, trow)
+                eq = hs2[:, :, None] == ht2[:, None, :]
+                best = jnp.where(eq, ds2[:, :, None] + dt2[:, None, :],
+                                 DEV_INF).min(axis=(1, 2))
+                return jnp.where(best >= DEV_INF, INF_DIST,
+                                 best).astype(jnp.int32)
+
+            tile = P(self.batch_axes, None)
+        in_specs = (tile,) * 6 + ((q,) * 3 if self.mode == "replicated"
+                                  else (P(None),) * 3)
+        fn = jax.jit(shard_map_compat(local, self.mesh, in_specs, q))
+        self._fns[key] = fn
+        return fn

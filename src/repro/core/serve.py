@@ -1,10 +1,28 @@
-"""WCSD serving engine: request batching over the device query engine.
+"""WCSD serving engine: request batching over the device query engines.
 
 Mirrors the paper's query-serving scenario (10k random queries, µs/query):
 requests accumulate into fixed-size (power-of-two) batches to avoid
 recompilation, are answered by one fused device call, and per-request
 results are handed back. A tiny LRU memo short-circuits repeated hot
-queries (social-network workloads are heavy-tailed)."""
+queries (social-network workloads are heavy-tailed).
+
+Production shape:
+
+  * pluggable engine backend — ``backend="device"`` (single-device
+    `DeviceQueryEngine`), ``backend="sharded"`` (`ShardedQueryEngine` over
+    a mesh), or a prebuilt engine object via ``engine=``; ``layout`` /
+    ``use_pallas`` / ``interpret`` are plumbed through, so serving can
+    reach the *compiled* kernels instead of being pinned to interpret mode.
+  * double-buffered async flush — an auto-flush (hitting ``max_batch``)
+    only *dispatches* the batch (`engine.query_async`); while the device
+    executes batch k, the host keeps accepting submissions and plans batch
+    k+1 (`plan_query_batch` for the CSR layout). At most one batch is in
+    flight; launching the next one (or any result()/flush()) drains it.
+  * read-once results — `result(rid)` pops the delivered answer, so a
+    long-running server's result dict stays bounded by what is queued or
+    in flight instead of growing one entry per request forever. Callers
+    needing an answer twice re-submit (the memo makes that free).
+"""
 from __future__ import annotations
 
 import collections
@@ -14,7 +32,7 @@ from typing import Optional
 
 import numpy as np
 
-from .query import DeviceQueryEngine
+from .query import DeviceQueryEngine, PendingResult, ShardedQueryEngine
 from .wc_index import PackedWCIndex, WCIndex, round_to_pow2
 
 
@@ -23,14 +41,18 @@ class ServeStats:
     requests: int = 0
     batches: int = 0
     memo_hits: int = 0
-    flush_time_s: float = 0.0
+    flush_time_s: float = 0.0   # host time in launch + drain
     max_batch: int = 0
 
 
 class WCSDServer:
-    def __init__(self, idx: WCIndex | PackedWCIndex, max_batch: int = 1024,
-                 use_pallas: bool = False, memo_capacity: int = 65536,
-                 layout: str = "padded", undirected: bool = True):
+    def __init__(self, idx: WCIndex | PackedWCIndex | None = None,
+                 max_batch: int = 1024, use_pallas: bool = False,
+                 memo_capacity: int = 65536, layout: str = "padded",
+                 undirected: bool = True, interpret: bool = True,
+                 backend: str = "device", engine=None, mesh=None,
+                 device_budget_bytes: int | None = None,
+                 multi_pod: bool = False):
         # layout="csr" serves from the CSR-packed bucket tiles: each flush
         # is planned by bucket pair and routed to the segmented kernel.
         # A PackedWCIndex (device-resident batched builder output) is served
@@ -38,8 +60,23 @@ class WCSDServer:
         # undirected=False disables the symmetric (s <= t) memo
         # canonicalization for indices over directed graphs, where
         # d(s, t) != d(t, s) and the swap would alias distinct answers.
-        self.engine = DeviceQueryEngine(idx, use_pallas=use_pallas,
-                                        layout=layout)
+        if engine is not None:
+            self.engine = engine
+        elif idx is None:
+            raise ValueError("WCSDServer needs an index (idx=) or a "
+                             "prebuilt engine (engine=)")
+        elif backend == "device":
+            self.engine = DeviceQueryEngine(idx, use_pallas=use_pallas,
+                                            interpret=interpret,
+                                            layout=layout)
+        elif backend == "sharded":
+            self.engine = ShardedQueryEngine(
+                idx, mesh=mesh, use_pallas=use_pallas, interpret=interpret,
+                layout=layout, device_budget_bytes=device_budget_bytes,
+                multi_pod=multi_pod)
+        else:
+            raise ValueError(f"unknown backend: {backend!r} "
+                             "(expected 'device' or 'sharded')")
         self.max_batch = int(max_batch)
         self.undirected = bool(undirected)
         self.memo: collections.OrderedDict[tuple, int] = collections.OrderedDict()
@@ -47,6 +84,11 @@ class WCSDServer:
         self.pending: list[tuple[int, int, int, int]] = []  # (rid, s, t, wl)
         self._pending_rids: set[int] = set()  # O(1) result() membership
         self.results: dict[int, int] = {}
+        # the (single) in-flight batch: (handle, rids, keys) or None
+        self._inflight: Optional[tuple[PendingResult, list, list]] = None
+        self._inflight_rids: set[int] = set()
+        self._inflight_pos: dict[tuple, int] = {}   # key -> batch position
+        self._inflight_extra: list[tuple[int, int]] = []  # (rid, position)
         self._next_rid = 0
         self.stats = ServeStats()
 
@@ -66,54 +108,108 @@ class WCSDServer:
             self.memo.move_to_end(key)
             self.results[rid] = self.memo[key]
             self.stats.memo_hits += 1
+        elif key in self._inflight_pos:
+            # the answer is already being computed in the in-flight batch:
+            # piggyback on it instead of re-queueing the hot key (counted
+            # as a memo hit — no extra device work happens)
+            self._inflight_extra.append((rid, self._inflight_pos[key]))
+            self._inflight_rids.add(rid)
+            self.stats.memo_hits += 1
         else:
             self.pending.append((rid, s, t, w_level))
             self._pending_rids.add(rid)
             if len(self.pending) >= self.max_batch:
-                self.flush()
+                # async: dispatch only — the device chews on this batch
+                # while the host accepts and plans the next one
+                self.flush_async()
         return rid
 
-    def flush(self) -> None:
+    def flush_async(self) -> None:
+        """Dispatch the pending batch without waiting for its results.
+
+        Double-buffered: at most one batch is in flight, so dispatching
+        batch k+1 first drains batch k (by then typically long finished).
+        """
         if not self.pending:
             return
+        self._drain()
         t0 = time.perf_counter()
         batch = self.pending
         self.pending = []
         self._pending_rids.clear()
         n = len(batch)
         # pad to the next power of two (bounded recompiles); the csr engine
-        # pads each planned sub-batch itself, so padding here would only add
-        # dummy queries that the segmented kernels compute and discard
-        padded = n if self.engine.layout == "csr" else round_to_pow2(n)
-        rid = np.array([b[0] for b in batch], dtype=np.int64)
+        # pads each planned sub-batch itself, and the sharded engine pads to
+        # its own device multiple, so padding here would only add dummy
+        # queries that the kernels compute and discard
+        pad_here = (getattr(self.engine, "layout", "padded") == "padded"
+                    and not isinstance(self.engine, ShardedQueryEngine))
+        padded = round_to_pow2(n) if pad_here else n
         s = np.zeros(padded, dtype=np.int32)
         t = np.zeros(padded, dtype=np.int32)
         wl = np.zeros(padded, dtype=np.int32)
         s[:n] = [b[1] for b in batch]
         t[:n] = [b[2] for b in batch]
         wl[:n] = [b[3] for b in batch]
-        out = np.asarray(self.engine.query(s, t, wl))[:n]
-        for r, (ss, tt, ww), d in zip(rid, [(b[1], b[2], b[3]) for b in batch],
-                                      out):
-            self.results[int(r)] = int(d)
-            key = self._memo_key(ss, tt, ww)
-            self.memo[key] = int(d)
-            if len(self.memo) > self.memo_capacity:
-                self.memo.popitem(last=False)
+        qa = getattr(self.engine, "query_async", None)
+        if qa is not None:
+            handle = qa(s, t, wl)
+        else:  # engine exposes only a blocking query (tests stub this)
+            res = self.engine.query(s, t, wl)
+            handle = PendingResult(lambda: res)
+        keys = [self._memo_key(b[1], b[2], b[3]) for b in batch]
+        self._inflight = (handle, [b[0] for b in batch], keys)
+        self._inflight_rids = {b[0] for b in batch}
+        self._inflight_pos = {k: i for i, k in enumerate(keys)}
+        self._inflight_extra = []
         self.stats.batches += 1
         self.stats.max_batch = max(self.stats.max_batch, n)
         self.stats.flush_time_s += time.perf_counter() - t0
 
+    def _drain(self) -> None:
+        """Materialize the in-flight batch into results + memo."""
+        if self._inflight is None:
+            return
+        t0 = time.perf_counter()
+        handle, rids, keys = self._inflight
+        extra = self._inflight_extra
+        self._inflight = None
+        self._inflight_rids = set()
+        self._inflight_pos = {}
+        self._inflight_extra = []
+        out = handle.wait()[:len(rids)]
+        for rid, key, d in zip(rids, keys, out):
+            self.results[rid] = int(d)
+            self.memo[key] = int(d)
+            if len(self.memo) > self.memo_capacity:
+                self.memo.popitem(last=False)
+        for rid, pos in extra:   # duplicates submitted while in flight
+            self.results[rid] = int(out[pos])
+        self.stats.flush_time_s += time.perf_counter() - t0
+
+    def flush(self) -> None:
+        """Synchronous flush: dispatch anything pending and drain."""
+        self.flush_async()
+        self._drain()
+
     def result(self, rid: int) -> Optional[int]:
-        # membership via the pending-rid set: O(1) per lookup instead of an
-        # O(pending) scan of the request list
-        if rid not in self.results and rid in self._pending_rids:
+        """Deliver (and evict) the answer for ``rid``.
+
+        Read-once contract: a delivered rid is popped from the result dict,
+        so per-request state cannot accumulate across a server's lifetime.
+        Unknown (or already-delivered) rids return None without disturbing
+        the pending queue."""
+        if rid in self.results:
+            return self.results.pop(rid)
+        if rid in self._inflight_rids:
+            self._drain()
+        elif rid in self._pending_rids:
             self.flush()
-        return self.results.get(rid)
+        return self.results.pop(rid, None)
 
     # convenience: synchronous bulk API
     def query_many(self, s, t, w_level) -> np.ndarray:
         rids = [self.submit(int(a), int(b), int(c))
                 for a, b, c in zip(s, t, w_level)]
         self.flush()
-        return np.array([self.results[r] for r in rids], dtype=np.int32)
+        return np.array([self.result(r) for r in rids], dtype=np.int32)

@@ -145,7 +145,13 @@ class WCIndex:
     # ------------------------------------------------------- device mirrors
     def padded_device_arrays(self, cap: int | None = None):
         """(hub_rank, dist, wlev, count) trimmed/padded to ``cap`` columns,
-        ready to ship to device for the Pallas query kernel."""
+        ready to ship to device for the Pallas query kernel.
+
+        Trimming keeps the first ``cap - 1`` (hub-sorted, lowest-rank = most
+        central) entries of an overlong row PLUS its trailing self entry
+        ``(rank[v], 0, inf)`` — dropping the self entry would answer every
+        ``s == t`` (and self-hub meet) query wrongly. The returned count is
+        clamped to ``cap`` to match the physical rows."""
         c = int(cap if cap is not None else max(int(self.count.max()), 1))
         V = self.num_nodes
         def fit(a, fill):
@@ -153,8 +159,15 @@ class WCIndex:
             k = min(c, a.shape[1])
             out[:, :k] = a[:, :k]
             return out
-        return (fit(self.hub_rank, -1), fit(self.dist, INF_DIST),
-                fit(self.wlev, -1), self.count.copy())
+        hub, dist, wlev = (fit(self.hub_rank, -1), fit(self.dist, INF_DIST),
+                           fit(self.wlev, -1))
+        over = np.flatnonzero(self.count > c)
+        if len(over):
+            last = self.count[over].astype(np.int64) - 1  # the self entry
+            hub[over, c - 1] = self.hub_rank[over, last]
+            dist[over, c - 1] = self.dist[over, last]
+            wlev[over, c - 1] = self.wlev[over, last]
+        return hub, dist, wlev, np.minimum(self.count, c).astype(np.int32)
 
 
 LANE = 128  # TPU lane width; bucket tile widths are multiples of this
@@ -171,6 +184,11 @@ def round_to_pow2(n: int) -> int:
     padded to powers of two so the count of compiled shapes stays
     logarithmic in the workload size."""
     return 1 << (max(int(n), 1) - 1).bit_length()
+
+
+def ceil_to(n: int, m: int) -> int:
+    """Smallest multiple of ``m`` >= ``n``."""
+    return -(-int(n) // m) * m
 
 
 @dataclasses.dataclass
@@ -304,7 +322,9 @@ class PackedLabels:
     def to_padded(self, cap: int | None = None):
         """Round-trip back to padded `[V, cap]` arrays (numpy reference
         path): returns (hub_rank, dist, wlev, count) with the same fill
-        values as `WCIndex.padded_device_arrays`."""
+        values and the same trim rule as `WCIndex.padded_device_arrays` —
+        a trimmed row keeps its first ``cap - 1`` entries plus the trailing
+        self entry, and count is clamped to ``cap``."""
         V = self.num_nodes
         count = (self.offsets[1:] - self.offsets[:-1]).astype(np.int32)
         c = int(cap if cap is not None else max(int(count.max()), 1))
@@ -318,7 +338,13 @@ class PackedLabels:
         hub[rows, cols] = self.hub_rank[flat]
         dist[rows, cols] = self.dist[flat]
         wlev[rows, cols] = self.wlev[flat]
-        return hub, dist, wlev, count
+        over = np.flatnonzero(count > c)
+        if len(over):
+            last = self.offsets[over + 1] - 1        # the self entry
+            hub[over, c - 1] = self.hub_rank[last]
+            dist[over, c - 1] = self.dist[last]
+            wlev[over, c - 1] = self.wlev[last]
+        return hub, dist, wlev, np.minimum(count, c).astype(np.int32)
 
 
 class PackedLabelsBuilder:

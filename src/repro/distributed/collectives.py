@@ -4,6 +4,12 @@ hierarchical_psum: two-phase reduction (pod-local psum, then cross-pod) —
 on a real fabric the second phase crosses DCN, so phasing keeps the slow
 hop payload at 1/pod_size of a flat all-reduce over the combined axis.
 
+axis_linear_index / row_gather_psum: the row-gather collective behind the
+vertex-sharded label store in `core.query.ShardedQueryEngine` — each shard
+owns a contiguous block of rows, contributes its owned rows (zeros
+elsewhere) and one psum assembles the gathered result, so per query only
+the touched label rows cross the interconnect instead of the whole store.
+
 distributed_lse_decode: decode attention against a KV cache sharded along
 the *sequence* axis without gathering it: each shard computes local
 (max, sum, weighted-V) statistics and merges them with two tiny psums —
@@ -19,6 +25,60 @@ def hierarchical_psum(x, pod_axis: str, inner_axis: str):
     """psum over (pod_axis x inner_axis) phased: inner first, then pods."""
     x = jax.lax.psum(x, inner_axis)
     return jax.lax.psum(x, pod_axis)
+
+
+def axis_linear_index(axes):
+    """Linear device index over one or more mesh axes, row-major in the
+    given order (works on every jax that has axis_index for a single
+    name, unlike the tuple form)."""
+    if isinstance(axes, str):
+        return jax.lax.axis_index(axes)
+    idx = jax.lax.axis_index(axes[0])
+    for ax in axes[1:]:
+        idx = idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+    return idx
+
+
+def _owned_contribution(shard, rows, axes, rows_per_shard: int):
+    """This shard's contribution to gathering global ``rows`` from an array
+    block-row-sharded over ``axes``: its owned rows, zeros elsewhere.
+    ``rows`` MUST be replicated — every shard scores the same row list, so
+    summing contributions over shards IS the gather (each row has exactly
+    one owner; out-of-range ids are nobody's and come back all-zero)."""
+    start = axis_linear_index(axes) * rows_per_shard
+    local = rows - start
+    owned = (local >= 0) & (local < rows_per_shard)
+    picked = shard[jnp.clip(local, 0, rows_per_shard - 1)]
+    owned = owned.reshape(owned.shape + (1,) * (picked.ndim - owned.ndim))
+    return jnp.where(owned, picked, 0)
+
+
+def row_gather_psum(shard, rows, axes, rows_per_shard: int):
+    """Gather global rows from a block-row-sharded array inside shard_map.
+
+    shard: the local [rows_per_shard, ...] block of an array whose leading
+    axis is sharded over ``axes`` in contiguous blocks (shard k owns rows
+    ``[k * rows_per_shard, (k + 1) * rows_per_shard)`` under the row-major
+    linear device order). rows: [B] int32 *global* row ids, replicated
+    (see `_owned_contribution` — sharded row ids would sum unrelated
+    queries). Returns the gathered [B, ...] rows replicated on every
+    shard, exact for any dtype psum supports.
+    """
+    return jax.lax.psum(_owned_contribution(shard, rows, axes,
+                                            rows_per_shard), axes)
+
+
+def row_gather_psum_scatter(shard, rows, axes, rows_per_shard: int):
+    """`row_gather_psum` fused with a batch split: contributions are
+    combined with one reduce-scatter over the leading (row-id) dim, so the
+    calling shard receives only its ``B / n_shards`` slice of the gathered
+    rows — the natural form when the query batch is itself sharded over
+    the same devices, at 1/n_shards the interconnect payload of the
+    all-reduce gather. ``rows`` must be replicated and its length divisible
+    by the total size of ``axes``."""
+    contrib = _owned_contribution(shard, rows, axes, rows_per_shard)
+    return jax.lax.psum_scatter(contrib, axes, scatter_dimension=0,
+                                tiled=True)
 
 
 def distributed_lse_decode(q, k_shard, v_shard, axis: str,

@@ -1,12 +1,16 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any other import (including repro.*):
-# jax locks the device count at first initialization.
+import sys
+
+# The XLA_FLAGS line MUST run before any other import (including repro.*):
+# jax locks the device count at first initialization. The compile matrix
+# wants the full 512-chip virtual topology; --serve actually EXECUTES the
+# sharded serving stack, so it runs on 8 virtual host devices instead.
+_N_DEV = "8" if "--serve" in sys.argv else "512"
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_N_DEV}"
 
 import argparse  # noqa: E402
 import json  # noqa: E402
 import subprocess  # noqa: E402
-import sys  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
 
@@ -20,6 +24,9 @@ Usage:
   python -m repro.launch.dryrun --all          # full 40-cell matrix x 2
                                                # meshes, one subprocess per
                                                # cell (bounds compile RAM)
+  python -m repro.launch.dryrun --serve        # run the sharded WCSD
+                                               # serving stack end-to-end
+                                               # on 8 virtual host devices
 """
 
 
@@ -70,6 +77,69 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str) -> dict:
     return rec
 
 
+def run_serve(quick: bool) -> None:
+    """Execute (not just compile) the sharded serving stack on the virtual
+    host devices: every engine mode vs the single-device engine, bit for
+    bit, on differential-harness-style instances, plus an async-flush
+    `WCSDServer` epoch over the sharded backend."""
+    import numpy as np
+    import jax
+    from repro.configs.wcsd_serve import smoke_serve_config
+    from repro.core.generators import erdos_renyi, random_queries
+    from repro.core.query import DeviceQueryEngine, ShardedQueryEngine
+    from repro.core.serve import WCSDServer
+    from repro.core.wc_index import build_wc_index
+    from repro.launch.mesh import make_serving_mesh
+
+    n_dev = len(jax.devices())
+    assert n_dev >= 8, f"expected >= 8 virtual devices, got {n_dev}"
+    cfg = smoke_serve_config()
+    instances = [(12, 3.5, 3, 5), (10, 2.5, 2, 11)] if quick else \
+        [(12, 3.5, 3, 5), (10, 2.5, 2, 11), (60, 4.0, 4, 7),
+         (120, 3.0, 5, 13)]
+    t0 = time.time()
+    for V, deg, W, seed in instances:
+        g = erdos_renyi(V, deg, num_levels=W, seed=seed)
+        idx = build_wc_index(g)
+        if V <= 16:  # full (s, t, w) grid on the tiny instances
+            s, t, wl = np.meshgrid(np.arange(V), np.arange(V),
+                                   np.arange(W + 1), indexing="ij")
+            s, t, wl = (a.ravel().astype(np.int32) for a in (s, t, wl))
+        else:
+            s, t, wl = random_queries(g, 512, seed=seed + 1)
+        for layout in ("csr", "padded"):   # every layout x placement combo
+            exp = np.asarray(DeviceQueryEngine(
+                idx, layout=layout, use_pallas=cfg.use_pallas,
+                interpret=cfg.interpret).query(s, t, wl))
+            for multi_pod in (False, True):
+                mesh = make_serving_mesh(multi_pod=multi_pod)
+                for budget in (None, 1):  # replicated / sharded_labels
+                    eng = ShardedQueryEngine(
+                        idx, mesh=mesh, layout=layout,
+                        use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+                        device_budget_bytes=budget)
+                    got = np.asarray(eng.query(s, t, wl))
+                    tag = (f"V={V} layout={layout} "
+                           f"mesh={'2x4' if multi_pod else '8'} "
+                           f"mode={eng.mode}")
+                    if not np.array_equal(got, exp):
+                        raise SystemExit(f"MISMATCH {tag}: "
+                                         f"{np.flatnonzero(got != exp)[:8]}")
+                    print(f"OK {tag}: {len(s)} queries bit-identical",
+                          flush=True)
+        # async double-buffered server over the sharded backend
+        srv = WCSDServer(idx, mesh=make_serving_mesh(),
+                         **{**cfg.server_kwargs(), "max_batch": 64})
+        got = srv.query_many(s, t, wl)
+        if not np.array_equal(got, exp):
+            raise SystemExit(f"MISMATCH async server V={V}")
+        assert not srv.results, "read-once delivery left results behind"
+        print(f"OK V={V} async server: {srv.stats.batches} batches, "
+              f"{srv.stats.memo_hits} memo hits", flush=True)
+    print(f"serve dryrun PASS on {n_dev} virtual devices "
+          f"({time.time() - t0:.1f}s)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -77,9 +147,15 @@ def main():
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="both")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--serve", action="store_true")
+    ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
+
+    if args.serve:
+        run_serve(quick=args.quick)
+        return
 
     if args.all:
         from repro.configs import ARCHS, get_arch

@@ -9,6 +9,7 @@ launch/dryrun.py sets xla_force_host_platform_device_count)."""
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,6 +23,28 @@ def make_production_mesh(*, multi_pod: bool = False):
 def batch_axes(multi_pod: bool):
     """Mesh axes that shard the global batch / edge / query dimension."""
     return ("pod", "data") if multi_pod else ("data",)
+
+
+def make_serving_mesh(devices=None, *, multi_pod: bool = False):
+    """Mesh for the sharded query-serving path, sized to whatever devices
+    are actually attached (TPU slice, or virtual host devices under
+    ``xla_force_host_platform_device_count``) rather than the fixed
+    production pod shapes above.
+
+    Single-pod: (n,) over ("data",). multi_pod=True splits off a leading
+    "pod" axis of 2 (requires an even device count) so the ("pod", "data")
+    batch-axis spelling is exercised end-to-end. Built via `jax.sharding.
+    Mesh` directly — works on every jax version the repo supports, unlike
+    `jax.make_mesh(..., axis_types=...)`."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n = len(devices)
+    if multi_pod:
+        if n % 2:
+            raise ValueError(f"multi_pod mesh needs an even device count, "
+                             f"got {n}")
+        return jax.sharding.Mesh(
+            np.array(devices).reshape(2, n // 2), ("pod", "data"))
+    return jax.sharding.Mesh(np.array(devices).reshape(n), ("data",))
 
 
 # TPU v5e hardware constants used by the roofline analysis (per chip).

@@ -38,6 +38,24 @@ def test_packed_round_trip(indices):
             assert np.array_equal(a[~m], b[~m])
 
 
+def test_to_padded_trim_matches_padded_device_arrays(indices):
+    """Regression: the trim rule (first cap-1 entries + the trailing self
+    entry, count clamped) is identical on both padding paths, for caps
+    small enough to actually drop entries."""
+    for idx in indices.values():
+        packed = idx.packed()
+        for cap in (1, 2, 3):
+            got = packed.to_padded(cap=cap)
+            exp = idx.padded_device_arrays(cap)
+            for a, b, name in zip(got, exp, ("hub", "dist", "wlev", "count")):
+                assert np.array_equal(a, b), (cap, name)
+            hub, dist, wlev, count = got
+            v = np.arange(idx.num_nodes)
+            last = np.maximum(count - 1, 0)
+            assert np.array_equal(hub[v, last], idx.rank), cap
+            assert np.all(dist[v, last] == 0), cap
+
+
 def test_packed_rows_match_labels(indices):
     idx = indices["social"]
     packed = idx.packed()

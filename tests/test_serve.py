@@ -77,9 +77,12 @@ def test_memo_hit_refreshes_lru_order(small_index, serve_layout):
 def test_flush_pads_to_power_of_two(small_index):
     srv = WCSDServer(small_index, max_batch=1024)
     seen = []
-    inner = srv.engine.query
+    inner = srv.engine.query_async   # bound class method, pre-stub
+    # stub out the async handle so the server takes the blocking-query
+    # fallback path through the instrumented lambda
+    srv.engine.query_async = None
     srv.engine.query = lambda s, t, w: (seen.append(len(np.asarray(s)))
-                                        or inner(s, t, w))
+                                        or inner(s, t, w).wait())
     key = 0
     for n, want in [(1, 1), (2, 2), (3, 4), (5, 8), (8, 8), (9, 16)]:
         for _ in range(n):             # fresh keys -> every submit a miss
@@ -145,6 +148,7 @@ def test_directed_mode_keeps_memo_keys_apart(small_index):
     d(s, t) != d(t, s) and the swap would alias distinct answers. The
     engine is stubbed with an asymmetric function to simulate that."""
     srv = WCSDServer(small_index, max_batch=1024, undirected=False)
+    srv.engine.query_async = None   # force the blocking-query fallback
     srv.engine.query = lambda s, t, w: np.asarray(s) * 1000 + np.asarray(t)
     a = srv.submit(2, 7, 0)
     srv.flush()
@@ -203,3 +207,150 @@ def random_queries_for(idx, n, seed):
     t = rng.integers(0, idx.num_nodes, n).astype(np.int32)
     wl = rng.integers(0, idx.num_levels, n).astype(np.int32)
     return s, t, wl
+
+
+# ------------------------------------------------------- result eviction
+def test_results_do_not_grow_across_epochs(small_index, serve_layout):
+    """Regression for the unbounded-results leak: delivered rids are popped
+    (read-once), so the dict stays empty after each query_many epoch
+    instead of accumulating one entry per request forever."""
+    srv = WCSDServer(small_index, max_batch=32, layout=serve_layout)
+    s, t, wl = random_queries_for(small_index, 100, seed=1)
+    for epoch in range(3):
+        srv.query_many(s, t, wl)
+        assert len(srv.results) == 0, epoch
+    assert srv.stats.requests == 300
+
+
+def test_result_is_read_once(small_index, serve_layout):
+    srv = WCSDServer(small_index, max_batch=64, layout=serve_layout)
+    rid = srv.submit(3, 9, 1)
+    first = srv.result(rid)
+    assert first is not None
+    assert srv.result(rid) is None         # delivered -> evicted
+    # the memo still answers a re-submission without device work
+    rid2 = srv.submit(3, 9, 1)
+    assert srv.stats.memo_hits == 1 and srv.result(rid2) == first
+
+
+# ----------------------------------------------------------- async flush
+def test_auto_flush_is_async_and_double_buffered(small_index, serve_layout):
+    """Hitting max_batch dispatches the batch (batches increments, pending
+    clears) but does NOT materialize results; the host keeps queueing the
+    next batch while one is in flight, and at most one is in flight."""
+    srv = WCSDServer(small_index, max_batch=4, layout=serve_layout)
+    rids = [srv.submit(i, i + 30, 0) for i in range(4)]
+    assert srv.stats.batches == 1
+    assert srv._inflight is not None       # dispatched, not drained
+    assert len(srv.results) == 0           # nothing materialized yet
+    more = [srv.submit(i + 10, i + 60, 0) for i in range(4)]  # batch k+1
+    assert srv.stats.batches == 2          # launching k+1 drained k
+    assert all(r in srv.results for r in rids)
+    out = [srv.result(r) for r in rids + more]   # drains batch k+1
+    assert all(o is not None for o in out)
+    assert srv._inflight is None and len(srv.results) == 0
+
+
+def test_duplicate_submitted_while_in_flight_hits_memo(small_index,
+                                                       serve_layout):
+    """A hot key re-submitted while its batch is still in flight must
+    piggyback on the in-flight computation (a memo hit), not queue a
+    second device batch — the heavy-tailed workload the memo exists for."""
+    srv = WCSDServer(small_index, max_batch=2, layout=serve_layout)
+    r1 = srv.submit(3, 9, 1)
+    srv.submit(5, 11, 0)               # hits max_batch -> async dispatch
+    assert srv._inflight is not None and srv.stats.batches == 1
+    r3 = srv.submit(3, 9, 1)           # duplicate of in-flight r1
+    assert srv.stats.memo_hits == 1
+    assert srv.pending == []           # piggybacked, not re-queued
+    got3 = srv.result(r3)              # drains the in-flight batch
+    assert got3 is not None and got3 == srv.result(r1)
+    assert srv.stats.batches == 1      # no second device batch
+
+
+def test_async_results_match_sync(small_index, serve_layout):
+    s, t, wl = random_queries_for(small_index, 200, seed=3)
+    srv = WCSDServer(small_index, max_batch=16, layout=serve_layout)
+    got = srv.query_many(s, t, wl)           # many async auto-flushes
+    exp = small_index.query_batch(s, t, wl)
+    assert np.array_equal(got, exp)
+
+
+# ------------------------------------------------------- engine plumbing
+def test_interpret_and_backend_plumbing(small_index):
+    """Regression: serving must be able to reach the compiled kernel path —
+    use_pallas / interpret / layout flow through to the engine instead of
+    being hardwired."""
+    srv = WCSDServer(small_index, layout="csr", use_pallas=True,
+                     interpret=False)
+    assert srv.engine.use_pallas and srv.engine.interpret is False
+    assert srv.engine.layout == "csr"
+    srv2 = WCSDServer(small_index, interpret=True)
+    assert srv2.engine.interpret is True
+    from repro.core.query import DeviceQueryEngine, ShardedQueryEngine
+    from repro.launch.mesh import make_serving_mesh
+    assert isinstance(srv.engine, DeviceQueryEngine)
+    srv3 = WCSDServer(small_index, backend="sharded", layout="csr",
+                      interpret=False, mesh=make_serving_mesh())
+    assert isinstance(srv3.engine, ShardedQueryEngine)
+    assert srv3.engine.interpret is False
+    with pytest.raises(ValueError):
+        WCSDServer(small_index, backend="nope")
+
+
+def test_prebuilt_engine_injection(small_index):
+    from repro.core.query import DeviceQueryEngine
+    eng = DeviceQueryEngine(small_index, layout="csr")
+    srv = WCSDServer(engine=eng, max_batch=32)
+    assert srv.engine is eng
+    s, t, wl = random_queries_for(small_index, 50, seed=6)
+    assert np.array_equal(srv.query_many(s, t, wl),
+                          small_index.query_batch(s, t, wl))
+
+
+# ------------------------------------------------------------ edge cases
+def test_empty_batch_paths(small_index, serve_layout):
+    """Empty pending through flush()/flush_async(), and an empty
+    query_many, must be no-ops."""
+    srv = WCSDServer(small_index, max_batch=8, layout=serve_layout)
+    srv.flush()
+    srv.flush_async()
+    assert srv.stats.batches == 0
+    out = srv.query_many(np.array([], np.int32), np.array([], np.int32),
+                         np.array([], np.int32))
+    assert out.shape == (0,) and srv.stats.batches == 0
+
+
+def test_plan_query_batch_empty():
+    from repro.core.query import plan_query_batch
+    bucket_of = np.zeros(10, np.int32)
+    assert plan_query_batch(bucket_of, np.array([], np.int32),
+                            np.array([], np.int32)) == []
+
+
+def test_single_bucket_store_serves(small_index):
+    """A store whose every label row fits one bucket exercises the planner's
+    single-sub-batch path end to end."""
+    packed = small_index.packed()
+    assert packed.num_buckets == 1   # 120-vertex index: all rows < 128
+    srv = WCSDServer(small_index, max_batch=32, layout="csr")
+    s, t, wl = random_queries_for(small_index, 80, seed=2)
+    assert np.array_equal(srv.query_many(s, t, wl),
+                          small_index.query_batch(s, t, wl))
+
+
+def test_duplicate_keys_both_orientations_one_flush(small_index):
+    """undirected=True: both orientations of (s, t) plus exact duplicates
+    inside ONE flush canonicalize to a single memo entry and all get the
+    same (correct) answer."""
+    srv = WCSDServer(small_index, max_batch=1024, undirected=True)
+    exp = int(small_index.query_batch(np.array([7]), np.array([2]),
+                                      np.array([0]))[0])
+    rids = [srv.submit(7, 2, 0), srv.submit(2, 7, 0),
+            srv.submit(7, 2, 0), srv.submit(2, 7, 0)]
+    assert srv.stats.memo_hits == 0          # nothing flushed yet
+    srv.flush()                              # one batch answers all four
+    assert srv.stats.batches == 1
+    assert [srv.result(r) for r in rids] == [exp] * 4
+    assert (2, 7, 0) in srv.memo and (7, 2, 0) not in srv.memo
+    assert len([k for k in srv.memo if k[2] == 0]) == 1

@@ -42,6 +42,64 @@ def test_oracle_equivalence_fuzz(n, levels, seed):
     assert np.array_equal(idx.query_batch(s, t, wl), exp)
 
 
+# ---------------------------------------------------------- cap trimming
+def test_cap_trim_keeps_self_entry():
+    """Regression: trimming to ``cap`` columns must retain each row's
+    trailing self entry (rank[v], 0, inf) — dropping it answered every
+    s == t (and self-hub meet) query wrongly."""
+    g = scale_free(150, 3, num_levels=4, seed=2)
+    idx = build_wc_index(g)
+    assert int(idx.count.max()) > 2  # the trim is actually exercised
+    for cap in (1, 2, 3, int(idx.count.max())):
+        hub, dist, wlev, count = idx.padded_device_arrays(cap)
+        assert count.max() <= cap
+        last = np.maximum(count - 1, 0)
+        v = np.arange(idx.num_nodes)
+        assert np.array_equal(hub[v, last], idx.rank), cap
+        assert np.all(dist[v, last] == 0), cap
+        assert np.all(wlev[v, last] == idx.num_levels), cap
+        # rows stay hub-sorted (non-decreasing: one hub spans several
+        # quality tiers) and the self entry's rank exceeds all kept hubs
+        for row, c in zip(hub, count):
+            kept = row[:c]
+            assert np.all(np.diff(kept) >= 0), (cap, kept)
+            if c > 1:
+                assert kept[-1] > kept[-2], (cap, kept)
+
+
+@pytest.mark.parametrize("cap", [1, 2, 4])
+def test_trimmed_engine_answers_self_queries(cap):
+    """Acceptance: DeviceQueryEngine(idx, cap=k) answers every s == t query
+    with 0 for all k >= 1."""
+    from repro.core.query import DeviceQueryEngine
+
+    g = scale_free(120, 3, num_levels=4, seed=9)
+    idx = build_wc_index(g)
+    eng = DeviceQueryEngine(idx, cap=cap)
+    v = np.arange(g.num_nodes, dtype=np.int32)
+    for wl in (0, idx.num_levels):  # any level: self entries are inf-quality
+        got = np.asarray(eng.query(v, v, np.full(len(v), wl, np.int32)))
+        assert np.all(got == 0), (cap, wl)
+
+
+def test_trimmed_engine_keeps_central_hubs():
+    """A trimmed store keeps the lowest-rank (most central) hubs plus the
+    self entry, so s != t pairs meeting through a top hub stay answerable."""
+    from repro.core.query import DeviceQueryEngine
+
+    g = scale_free(120, 3, num_levels=3, seed=4)
+    idx = build_wc_index(g)
+    cap = max(2, int(idx.count.max()) // 2)
+    eng = DeviceQueryEngine(idx, cap=cap)
+    s, t, wl = random_queries(g, 200, seed=8)
+    got = np.asarray(eng.query(s, t, wl))
+    exp = idx.query_batch(s, t, wl)
+    # trimming may only LOSE meets (overestimate), never invent shorter ones
+    assert np.all(got >= exp)
+    # and on this graph the top-hub meets survive: most answers unchanged
+    assert (got == exp).mean() > 0.5
+
+
 def test_unreachable_and_identity():
     # two disconnected components
     g = Graph.from_edges(6, np.array([0, 1, 3, 4]), np.array([1, 2, 4, 5]),
