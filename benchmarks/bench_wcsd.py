@@ -233,21 +233,28 @@ def bench_label_store(dataset="SO(s)", n_queries=2048):
     return rows
 
 
-def bench_serving(batch=4096):
+def bench_serving(batch=4096, n_nodes=3000):
     """Throughput of the serving engine: the single-device batched path vs
     the sharded engine (batch sharded over every attached device, labels
     replicated) — the µs/query comparison CI archives as BENCH_serving.json.
     Run under ``--xla_force_host_platform_device_count=N`` (benchmarks/
     run.py sets it for this suite) to exercise a real multi-device mesh;
     wall-clock on virtual CPU devices measures dispatch overhead, not TPU
-    speedup, so the trend under test is correctness of the scaling path."""
+    speedup, so the trend under test is correctness of the scaling path.
+
+    Also here: the profile (staircase) workload — every constraint level
+    of a pair in ONE label sweep (`query_profile`) vs the L-call
+    per-level `query` loop it replaces. The two are asserted bit-identical
+    before timing; the acceptance trend is profile_speedup >= 2 at
+    L >= 4 levels."""
     import jax
 
-    from repro.core.query import ShardedQueryEngine
+    from repro.core.query import ShardedQueryEngine  # noqa: F401 (doc link)
     from repro.launch.mesh import make_serving_mesh
 
     rows = []
-    g = scale_free(3000, 4, num_levels=5, seed=13)
+    name = f"BA{n_nodes}"
+    g = scale_free(n_nodes, 4, num_levels=5, seed=13)
     idx = build_wc_index(g, ordering="degree")
     s, t, wl = random_queries(g, batch * 4, seed=5)
 
@@ -265,16 +272,47 @@ def bench_serving(batch=4096):
     assert np.array_equal(out_single, out_shard), \
         "sharded serving diverged from single-device"
     for algo, dt in [("qps", dt_single), ("qps_sharded", dt_shard)]:
-        rows.append(dict(table="serving", dataset="BA3000", algo=algo,
+        rows.append(dict(table="serving", dataset=name, algo=algo,
                          value=len(s) / dt))
     rows += [
-        dict(table="serving", dataset="BA3000", algo="us_per_query",
+        dict(table="serving", dataset=name, algo="us_per_query",
              value=dt_single / len(s) * 1e6),
-        dict(table="serving", dataset="BA3000", algo="us_per_query_sharded",
+        dict(table="serving", dataset=name, algo="us_per_query_sharded",
              value=dt_shard / len(s) * 1e6),
-        dict(table="serving", dataset="BA3000", algo="sharded_devices",
+        dict(table="serving", dataset=name, algo="sharded_devices",
              value=n_dev),
-        dict(table="serving", dataset="BA3000", algo="sharded_speedup",
+        dict(table="serving", dataset=name, algo="sharded_speedup",
              value=dt_single / dt_shard),
     ]
+    rows += _bench_profile_vs_loop(idx, s[:batch], t[:batch], name)
     return rows
+
+
+def _bench_profile_vs_loop(idx, s, t, name):
+    """Profile staircases one-pass vs the per-level query loop, on the CSR
+    engine (the layout the one-pass kernel exists for)."""
+    eng = DeviceQueryEngine(idx, layout="csr")
+    n_levels = idx.num_levels + 1        # staircase covers 0..W inclusive
+
+    def loop_all_levels():
+        return np.stack(
+            [np.asarray(eng.query(s, t, np.full(len(s), w, np.int32)))
+             for w in range(n_levels)], axis=1)
+
+    np.asarray(eng.query_profile(s, t))              # warmup compiles
+    loop_all_levels()                                # (full batch shapes)
+    t_prof, prof = _time(lambda: np.asarray(eng.query_profile(s, t)),
+                         repeat=3)
+    t_loop, loop = _time(loop_all_levels, repeat=3)
+    assert np.array_equal(prof, loop), \
+        "profile diverged from the per-level query loop"
+    return [
+        dict(table="serving", dataset=name, algo="profile_levels",
+             value=n_levels),
+        dict(table="serving", dataset=name, algo="profile_us_per_query",
+             value=t_prof / len(s) * 1e6),
+        dict(table="serving", dataset=name, algo="profile_loop_us_per_query",
+             value=t_loop / len(s) * 1e6),
+        dict(table="serving", dataset=name, algo="profile_speedup",
+             value=t_loop / t_prof),
+    ]

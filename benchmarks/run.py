@@ -15,6 +15,52 @@ import tempfile
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# ---------------------------------------------------------------- schema
+# The --json artifacts (BENCH_serving.json / BENCH_kernels.json) are CI's
+# perf trajectory; this schema gate keeps them from silently drifting —
+# a suite that stops emitting a tracked metric fails the run instead of
+# producing a quietly thinner artifact (tests/test_bench_schema.py holds
+# the same gate against a tiny in-process run).
+ROW_KEYS = ("table", "dataset", "algo", "value")
+
+# per-suite metrics that must be present in every artifact (subset — new
+# rows may always be added; removing one of these is a schema break)
+REQUIRED_ALGOS = {
+    "serving": {"qps", "qps_sharded", "us_per_query", "us_per_query_sharded",
+                "sharded_speedup", "profile_levels", "profile_us_per_query",
+                "profile_loop_us_per_query", "profile_speedup"},
+    "label_store": {"entries", "padded_bytes", "csr_bytes",
+                    "dense_us_per_query", "seg_us_per_query"},
+}
+
+
+def validate_rows(suite: str, rows) -> None:
+    """Raise ValueError unless ``rows`` conforms to the artifact schema:
+    a non-empty list of {table, dataset, algo, value} with string labels
+    and real-number values, carrying every required metric of ``suite``."""
+    if not isinstance(rows, list) or not rows:
+        raise ValueError(f"suite {suite!r}: expected a non-empty row list, "
+                         f"got {type(rows).__name__}")
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            raise ValueError(f"suite {suite!r} row {i}: not a dict")
+        missing = [k for k in ROW_KEYS if k not in row]
+        if missing:
+            raise ValueError(f"suite {suite!r} row {i}: missing {missing}")
+        for k in ("table", "dataset", "algo"):
+            if not isinstance(row[k], str) or not row[k]:
+                raise ValueError(f"suite {suite!r} row {i}: {k!r} must be a "
+                                 f"non-empty string, got {row[k]!r}")
+        if isinstance(row["value"], bool) or \
+                not isinstance(row["value"], (int, float)):
+            raise ValueError(f"suite {suite!r} row {i}: value must be a "
+                             f"number, got {row['value']!r}")
+    have = {r["algo"] for r in rows}
+    lost = REQUIRED_ALGOS.get(suite, set()) - have
+    if lost:
+        raise ValueError(f"suite {suite!r} artifact dropped tracked "
+                         f"metrics: {sorted(lost)}")
+
 
 def _serving_in_subprocess(args) -> list:
     """Run the serving suite in a child process so its virtual-device
@@ -99,6 +145,7 @@ def main() -> None:
     print("table,dataset,algo,value")
     for name, fn in suites.items():
         rows = fn()
+        validate_rows(name, rows)
         results[name] = rows
         for row in rows:
             print(f"{row['table']},{row['dataset']},{row['algo']},"

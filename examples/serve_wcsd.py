@@ -45,6 +45,33 @@ def main():
         assert out[i] == wcsd_bfs(g, int(s[i]), int(t[i]), int(wl[i]))
     print("spot checks vs BFS oracle pass")
 
+    # profile (staircase) queries: every constraint level of a pair in ONE
+    # label sweep — the constraint-exploration workload that would
+    # otherwise cost num_levels+1 independent queries per pair (see
+    # docs/profile-queries.md)
+    srv = WCSDServer(idx, max_batch=512, layout="csr")
+    n_prof = 2_000
+    t0 = time.perf_counter()
+    profs = srv.query_profile_many(s[:n_prof], t[:n_prof])
+    dt = time.perf_counter() - t0
+    levels = profs.shape[1]
+    print(f"[profile] {n_prof:,} staircases x {levels} levels in {dt:.2f}s "
+          f"-> {n_prof * levels / dt:,.0f} level-answers/s")
+    # a cached profile answers any single level without device work
+    batches = srv.stats.batches
+    for w in range(levels):
+        rid = srv.submit(int(s[0]), int(t[0]), w)
+        assert srv.result(rid) == profs[0, w]
+    assert srv.stats.batches == batches, "memo should have served these"
+    print(f"[profile] single-level queries served from the cached "
+          f"staircase ({srv.stats.memo_hits} memo hits, 0 extra batches)")
+    # staircases are monotone: relaxing the constraint never lengthens
+    assert np.all(profs[:, :-1] <= profs[:, 1:])
+    for i in range(0, n_prof, 251):   # spot check vs the scalar epoch path
+        for w in range(levels - 1):
+            assert profs[i, w] == wcsd_bfs(g, int(s[i]), int(t[i]), w)
+    print("profile spot checks vs BFS oracle pass")
+
 
 if __name__ == "__main__":
     main()

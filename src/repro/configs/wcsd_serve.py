@@ -12,10 +12,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..core.query import query_batch_jnp
+from ..core.query import profile_batch_jnp, query_batch_jnp
 from .cell import Cell
 
-SHAPES = ["serve_1m"]
+SHAPES = ["serve_1m", "profile_1m"]
 
 
 @dataclasses.dataclass
@@ -27,7 +27,9 @@ class ServeConfig:
     vertex-sharded labels + row-gather reduce-scatter once the store
     exceeds ``device_budget_bytes``). ``use_pallas``/``interpret`` select
     the kernel path: compiled Pallas on TPU is ``use_pallas=True,
-    interpret=False`` — serving is NOT pinned to interpret mode."""
+    interpret=False`` — serving is NOT pinned to interpret mode. The same
+    stack serves profile (staircase) queries — `WCSDServer.submit_profile`
+    needs no extra configuration; its level count comes from the index."""
 
     backend: str = "sharded"          # "device" | "sharded"
     layout: str = "csr"               # "padded" | "csr"
@@ -71,18 +73,42 @@ def smoke_config():
     return {"V": 256, "L": 16, "B": 64}
 
 
+_W = 8                # quality levels of the profile serving cell
+_BP = 1 << 17         # profile queries per step (each answers _W+1 levels)
+
+
 def make_cell(shape: str = "serve_1m", multi_pod: bool = False) -> Cell:
     bd = ("pod", "data") if multi_pod else "data"
-    args = (
+    lspec = P(None, None)   # labels replicated (3 GiB total, fits HBM)
+    label_args = (
         jax.ShapeDtypeStruct((_V, _L), jnp.int32),   # hub
         jax.ShapeDtypeStruct((_V, _L), jnp.int32),   # dist
         jax.ShapeDtypeStruct((_V, _L), jnp.int32),   # wlev
         jax.ShapeDtypeStruct((_V,), jnp.int32),      # count
+    )
+    if shape == "profile_1m":
+        # constraint-exploration workload: every query returns the full
+        # (W + 1)-level staircase from ONE label sweep — the L-call loop
+        # this replaces would multiply the gather volume by W + 1
+        import functools
+        args = label_args + (
+            jax.ShapeDtypeStruct((_BP,), jnp.int32),  # s
+            jax.ShapeDtypeStruct((_BP,), jnp.int32),  # t
+        )
+        in_sh = (lspec,) * 3 + (P(None), P(bd), P(bd))
+        meta = {"family": "wcsd", "scan_trips": 1,
+                # per query: L*L join + (W+1) bucketed min passes
+                "model_flops": 2.0 * _BP * _L * _L * (_W + 1),
+                "note": "one-pass profile serving cell (staircase per "
+                        "query; see docs/profile-queries.md)"}
+        fn = functools.partial(profile_batch_jnp, num_levels=_W)
+        return Cell("wcsd-serve", shape, "serve", fn, args, in_sh,
+                    P(bd), (), meta)
+    args = label_args + (
         jax.ShapeDtypeStruct((_B,), jnp.int32),      # s
         jax.ShapeDtypeStruct((_B,), jnp.int32),      # t
         jax.ShapeDtypeStruct((_B,), jnp.int32),      # w
     )
-    lspec = P(None, None)   # labels replicated (3 GiB total, fits HBM)
     in_sh = (lspec, lspec, lspec, P(None), P(bd), P(bd), P(bd))
     meta = {"family": "wcsd", "scan_trips": 1,
             # per query: L*L compares + L*L adds (VPU op count proxy)

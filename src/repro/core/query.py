@@ -15,6 +15,12 @@ budget, fall back to sharding the *vertex* (tile-row) axis of the label
 arrays over the same devices and gather the two label rows per query with
 the `row_gather_psum` collective — per query only the touched rows cross
 the interconnect.
+
+Profiles (`query_profile` on both engines): the full ``dist(s, t, w)``
+staircase for every level from ONE sweep of the two label rows —
+`_staircase_from_rows` is the shared min-scan core, docs/profile-queries.md
+the spec. Same planner, same placements, L× fewer row gathers than the
+per-level loop it replaces.
 """
 from __future__ import annotations
 
@@ -62,6 +68,43 @@ def query_batch_jnp(hub, dist, wlev, count, s, t, w_level):
     dsum = ds[:, :, None] + dt[:, None, :]
     best = jnp.where(eq, dsum, DEV_INF).min(axis=(1, 2))
     return jnp.where(best >= DEV_INF, INF_DIST, best).astype(jnp.int32)
+
+
+def _staircase_from_rows(hs, ds, ws, ht, dt, wt, num_levels: int):
+    """[B, *] masked label rows -> [B, W + 1] profile staircase.
+
+    The shared min-scan core of every profile path: a hub meet (i, j) is
+    feasible at exactly the levels <= min(ws[i], wt[j]), so its distance
+    sum lands in one pair-level bucket and the suffix min over buckets is
+    the full staircase ``dist(s, t, w)`` for w = 0..W. ds/dt must already
+    be clamped to DEV_INF (pads included); ws/wt pads must be -1 so they
+    fall below every bucket. Widths of the two sides may differ."""
+    eq = hs[:, :, None] == ht[:, None, :]
+    dsum = jnp.where(eq, ds[:, :, None] + dt[:, None, :], DEV_INF)
+    mw = jnp.minimum(ws[:, :, None], wt[:, None, :])
+    bucket = jnp.stack([jnp.where(mw == lev, dsum, DEV_INF).min(axis=(1, 2))
+                        for lev in range(num_levels + 1)], axis=1)
+    prof = jax.lax.cummin(bucket, axis=1, reverse=True)
+    return jnp.where(prof >= DEV_INF, INF_DIST, prof).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_levels",))
+def profile_batch_jnp(hub, dist, wlev, count, s, t, *, num_levels: int):
+    """[B, W + 1] staircases via ONE masked outer join over padded labels.
+
+    The profile analogue of `query_batch_jnp`: both label rows are
+    gathered once and every constraint level 0..W is answered from that
+    single sweep — ``out[:, w] == query_batch_jnp(..., w)`` pointwise."""
+    L = hub.shape[1]
+    col = jnp.arange(L)
+
+    def side(v):
+        m = col[None, :] < count[v, None]
+        d = jnp.where(m, jnp.minimum(dist[v], DEV_INF), DEV_INF)
+        w = jnp.where(m, wlev[v], -1)
+        return hub[v], d, w
+
+    return _staircase_from_rows(*side(s), *side(t), num_levels)
 
 
 @jax.jit
@@ -212,6 +255,31 @@ class _QueryEngineBase:
             return out
         return PendingResult(assemble)
 
+    def _plan_profile(self, s, t, pad_len, dispatch) -> PendingResult:
+        """Profile variant of `_plan_segmented`: no per-query level — every
+        level is answered by the one sweep — so sub-batches carry only row
+        ids (pads point at slot 0 and are sliced off on assembly) and
+        assembly scatters [n, W + 1] staircases into the batch order."""
+        s = np.asarray(s, np.int32)
+        t = np.asarray(t, np.int32)
+        parts = []
+        for sub in plan_query_batch(self._bucket_of, s, t):
+            pos = sub.positions
+            n = len(pos)
+            srow = np.zeros(pad_len(n), dtype=np.int32)
+            trow = np.zeros(pad_len(n), dtype=np.int32)
+            srow[:n] = self._slot_of[s[pos]]
+            trow[:n] = self._slot_of[t[pos]]
+            parts.append((pos, dispatch(sub, srow, trow)))
+
+        def assemble():
+            out = np.full((len(s), self.num_levels + 1), INF_DIST,
+                          dtype=np.int32)
+            for pos, res in parts:
+                out[pos] = np.asarray(res)[:len(pos)]
+            return out
+        return PendingResult(assemble)
+
     def query_from_quality(self, s, t, w: np.ndarray, levels: np.ndarray):
         """Real-valued thresholds -> levels (exact canonicalization)."""
         wl = np.searchsorted(levels, np.asarray(w), side="left")
@@ -300,6 +368,43 @@ class DeviceQueryEngine(_QueryEngineBase):
         # pad sub-batches to the next power of two: the compiled kernel
         # count stays O(buckets^2 * log B) instead of one per batch size
         return self._plan_segmented(s, t, w_level, round_to_pow2, dispatch)
+
+    # ------------------------------------------------------------- profiles
+    def query_profile(self, s, t) -> np.ndarray:
+        """[B, W + 1] staircases: ``out[b, w] == query(s, t, w)[b]`` for
+        every level in one label sweep (see `_staircase_from_rows`)."""
+        if self.layout == "csr":
+            return self.query_profile_async(s, t).wait()
+        return np.asarray(self._profile_dense(s, t))
+
+    def query_profile_async(self, s, t) -> PendingResult:
+        if self.layout == "csr":
+            return self._profile_segmented_async(s, t)
+        res = self._profile_dense(s, t)
+        return PendingResult(lambda: res)
+
+    def _profile_dense(self, s, t) -> jax.Array:
+        # the padded layout profiles on the XLA path for either kernel
+        # setting: the one-sweep win is the single gather + fused min-scan,
+        # which XLA already gives the dense store
+        s = jnp.asarray(s, jnp.int32)
+        t = jnp.asarray(t, jnp.int32)
+        return profile_batch_jnp(self.hub, self.dist, self.wlev, self.count,
+                                 s, t, num_levels=self.num_levels)
+
+    def _profile_segmented_async(self, s, t) -> PendingResult:
+        from ..kernels import ops as kops
+
+        def dispatch(sub, srow, trow):
+            hs, ds, ws = self._tiles[sub.bucket_s]
+            ht, dt, wt = self._tiles[sub.bucket_t]
+            return kops.wcsd_profile_segmented(
+                hs, ds, ws, ht, dt, wt,
+                jnp.asarray(srow), jnp.asarray(trow),
+                num_levels=self.num_levels,
+                interpret=self.interpret, use_kernel=self.use_pallas)
+
+        return self._plan_profile(s, t, round_to_pow2, dispatch)
 
 
 class ShardedQueryEngine(_QueryEngineBase):
@@ -591,6 +696,120 @@ class ShardedQueryEngine(_QueryEngineBase):
             tile = P(self.batch_axes, None)
         in_specs = (tile,) * 6 + ((q,) * 3 if self.mode == "replicated"
                                   else (P(None),) * 3)
+        fn = jax.jit(shard_map_compat(local, self.mesh, in_specs, q))
+        self._fns[key] = fn
+        return fn
+
+    # ------------------------------------------------------------- profiles
+    def query_profile(self, s, t) -> np.ndarray:
+        """[B, W + 1] staircases, bit-identical to `DeviceQueryEngine.
+        query_profile` on the same index (same per-query integer min-scan,
+        only the batch placement differs)."""
+        return self.query_profile_async(s, t).wait()
+
+    def query_profile_async(self, s, t) -> PendingResult:
+        s = np.asarray(s, np.int32)
+        t = np.asarray(t, np.int32)
+        if self.layout == "csr":
+            fn = self._profile_segmented_fn()
+
+            def dispatch(sub, srow, trow):
+                hs, ds, ws = self._tiles[sub.bucket_s]
+                ht, dt, wt = self._tiles[sub.bucket_t]
+                return fn(hs, ds, ws, ht, dt, wt,
+                          *self._put_queries(srow, trow))
+
+            return self._plan_profile(s, t, self._batch_pad, dispatch)
+        res, n = self._dispatch_padded_profile(s, t)
+        return PendingResult(lambda: np.asarray(res)[:n])
+
+    def _dispatch_padded_profile(self, s, t):
+        n = len(s)
+        npad = self._batch_pad(n)
+        sp = np.zeros(npad, dtype=np.int32)
+        tp = np.zeros(npad, dtype=np.int32)
+        sp[:n], tp[:n] = s, t
+        fn = self._padded_profile_fn()
+        return fn(self.hub, self.dist, self.wlev, self.count,
+                  *self._put_queries(sp, tp)), n
+
+    def _padded_profile_fn(self):
+        key = ("padded-profile", self.mode)
+        if key in self._fns:
+            return self._fns[key]
+        P, q = self._P, self._qspec
+        W = self.num_levels
+        if self.mode == "replicated":
+            def local(hub, dist, wlev, count, s, t):
+                return profile_batch_jnp(hub, dist, wlev, count, s, t,
+                                         num_levels=W)
+
+            in_specs = (P(None, None),) * 3 + (P(None),) + (q,) * 2
+        else:
+            axes, rows_per = self.batch_axes, self._rows_per
+
+            def local(hub, dist, wlev, count, s, t):
+                # replicated row ids, as in the single-level fallback, but
+                # ONE fused reduce-scatter per side carries (hub, dist,
+                # wlev, count) together — the profile gathers a row exactly
+                # once, so the collective launch is paid once too
+                from ..distributed.collectives import (
+                    multi_row_gather_psum_scatter)
+
+                def side(v):
+                    h, dd, ww, cc = multi_row_gather_psum_scatter(
+                        (hub, dist, wlev, count[:, None]), v, axes, rows_per)
+                    col = jnp.arange(h.shape[1])
+                    m = col[None, :] < cc[:, 0][:, None]
+                    d = jnp.where(m, jnp.minimum(dd, DEV_INF), DEV_INF)
+                    w = jnp.where(m, ww, -1)
+                    return h, d, w
+
+                return _staircase_from_rows(*side(s), *side(t), W)
+
+            in_specs = (P(self.batch_axes, None),) * 3 \
+                + (P(self.batch_axes),) + (P(None),) * 2
+        fn = jax.jit(shard_map_compat(local, self.mesh, in_specs, q))
+        self._fns[key] = fn
+        return fn
+
+    def _profile_segmented_fn(self):
+        key = ("csr-profile", self.mode)
+        if key in self._fns:
+            return self._fns[key]
+        P, q = self._P, self._qspec
+        W = self.num_levels
+        if self.mode == "replicated":
+            use_pallas, interpret = self.use_pallas, self.interpret
+
+            def local(hs, ds, ws, ht, dt, wt, srow, trow):
+                from ..kernels import ops as kops
+                return kops.wcsd_profile_segmented(
+                    hs, ds, ws, ht, dt, wt, srow, trow, num_levels=W,
+                    interpret=interpret, use_kernel=use_pallas)
+
+            tile = P(None, None)
+        else:
+            axes = self.batch_axes
+
+            def local(hs, ds, ws, ht, dt, wt, srow, trow):
+                # row-sharded bucket tiles: one fused reduce-scatter per
+                # side gathers (hub, dist, wlev) rows; store pads carry
+                # wlev = -1 and fall below every staircase bucket
+                from ..distributed.collectives import (
+                    multi_row_gather_psum_scatter)
+
+                def side(h, d, w, rows):
+                    hg, dg, wg = multi_row_gather_psum_scatter(
+                        (h, d, w), rows, axes, h.shape[0])
+                    return hg, jnp.minimum(dg, DEV_INF), wg
+
+                return _staircase_from_rows(*side(hs, ds, ws, srow),
+                                            *side(ht, dt, wt, trow), W)
+
+            tile = P(self.batch_axes, None)
+        in_specs = (tile,) * 6 + ((q,) * 2 if self.mode == "replicated"
+                                  else (P(None),) * 2)
         fn = jax.jit(shard_map_compat(local, self.mesh, in_specs, q))
         self._fns[key] = fn
         return fn

@@ -22,6 +22,11 @@ Production shape:
     long-running server's result dict stays bounded by what is queued or
     in flight instead of growing one entry per request forever. Callers
     needing an answer twice re-submit (the memo makes that free).
+  * profile (staircase) queries — `submit_profile(s, t)` /
+    `query_profile_many` answer EVERY constraint level of a pair in one
+    label sweep (`engine.query_profile`), riding the same double-buffered
+    flush; a cached profile also short-circuits any single-level submit
+    of its pair (see docs/profile-queries.md).
 """
 from __future__ import annotations
 
@@ -39,6 +44,7 @@ from .wc_index import PackedWCIndex, WCIndex, round_to_pow2
 @dataclasses.dataclass
 class ServeStats:
     requests: int = 0
+    profile_requests: int = 0
     batches: int = 0
     memo_hits: int = 0
     flush_time_s: float = 0.0   # host time in launch + drain
@@ -89,6 +95,18 @@ class WCSDServer:
         self._inflight_rids: set[int] = set()
         self._inflight_pos: dict[tuple, int] = {}   # key -> batch position
         self._inflight_extra: list[tuple[int, int]] = []  # (rid, position)
+        # profile (staircase) requests ride the same double-buffered flush:
+        # a flush dispatches one scalar batch AND one profile batch, the
+        # pair forming the single in-flight slot
+        self.profile_memo: collections.OrderedDict[tuple, np.ndarray] = \
+            collections.OrderedDict()
+        self.pending_profiles: list[tuple[int, int, int]] = []  # (rid, s, t)
+        self._pending_prof_rids: set[int] = set()
+        self.profile_results: dict[int, np.ndarray] = {}
+        self._inflight_prof: Optional[tuple[PendingResult, list, list]] = None
+        self._inflight_prof_rids: set[int] = set()
+        self._inflight_prof_pos: dict[tuple, int] = {}
+        self._inflight_prof_extra: list[tuple[int, int]] = []
         self._next_rid = 0
         self.stats = ServeStats()
 
@@ -97,16 +115,33 @@ class WCSDServer:
             return (t, s, w_level)
         return (s, t, w_level)
 
+    def _profile_key(self, s: int, t: int) -> tuple:
+        # per-level distances are symmetric exactly when single-level ones
+        # are, so the profile key follows the same directed gate
+        if self.undirected and s > t:
+            return (t, s)
+        return (s, t)
+
     # ------------------------------------------------------------- requests
     def submit(self, s: int, t: int, w_level: int) -> int:
         """Queue one request; returns a request id."""
         rid = self._next_rid
         self._next_rid += 1
         key = self._memo_key(s, t, w_level)
+        pkey = self._profile_key(s, t)
         self.stats.requests += 1
         if key in self.memo:
             self.memo.move_to_end(key)
             self.results[rid] = self.memo[key]
+            self.stats.memo_hits += 1
+        elif (pkey in self.profile_memo
+              and 0 <= w_level <= getattr(self.engine, "num_levels", -1)):
+            # a cached profile answers EVERY level of its pair: read the
+            # staircase instead of queueing device work, and promote the
+            # level into the scalar memo so exact repeats stay O(1)
+            self.profile_memo.move_to_end(pkey)
+            self.results[rid] = int(self.profile_memo[pkey][w_level])
+            self._memo_put(key, self.results[rid])
             self.stats.memo_hits += 1
         elif key in self._inflight_pos:
             # the answer is already being computed in the in-flight batch:
@@ -118,73 +153,149 @@ class WCSDServer:
         else:
             self.pending.append((rid, s, t, w_level))
             self._pending_rids.add(rid)
-            if len(self.pending) >= self.max_batch:
+            if len(self.pending) + len(self.pending_profiles) \
+                    >= self.max_batch:
                 # async: dispatch only — the device chews on this batch
                 # while the host accepts and plans the next one
                 self.flush_async()
         return rid
+
+    def submit_profile(self, s: int, t: int) -> int:
+        """Queue one profile request — the full ``dist(s, t, w)`` staircase
+        for every level 0..num_levels, answered by ONE label sweep (see
+        `DeviceQueryEngine.query_profile`). Returns a request id for
+        `profile_result`."""
+        rid = self._next_rid
+        self._next_rid += 1
+        key = self._profile_key(s, t)
+        self.stats.profile_requests += 1
+        if key in self.profile_memo:
+            self.profile_memo.move_to_end(key)
+            self.profile_results[rid] = self.profile_memo[key].copy()
+            self.stats.memo_hits += 1
+        elif key in self._inflight_prof_pos:
+            self._inflight_prof_extra.append(
+                (rid, self._inflight_prof_pos[key]))
+            self._inflight_prof_rids.add(rid)
+            self.stats.memo_hits += 1
+        else:
+            self.pending_profiles.append((rid, s, t))
+            self._pending_prof_rids.add(rid)
+            if len(self.pending) + len(self.pending_profiles) \
+                    >= self.max_batch:
+                self.flush_async()
+        return rid
+
+    def _memo_put(self, key: tuple, value: int) -> None:
+        self.memo[key] = value
+        if len(self.memo) > self.memo_capacity:
+            self.memo.popitem(last=False)
 
     def flush_async(self) -> None:
         """Dispatch the pending batch without waiting for its results.
 
         Double-buffered: at most one batch is in flight, so dispatching
         batch k+1 first drains batch k (by then typically long finished).
+        A flush dispatches the pending scalar batch AND the pending profile
+        batch (either may be empty); together they form the in-flight slot.
         """
-        if not self.pending:
+        if not self.pending and not self.pending_profiles:
             return
         self._drain()
         t0 = time.perf_counter()
-        batch = self.pending
-        self.pending = []
-        self._pending_rids.clear()
-        n = len(batch)
         # pad to the next power of two (bounded recompiles); the csr engine
         # pads each planned sub-batch itself, and the sharded engine pads to
         # its own device multiple, so padding here would only add dummy
         # queries that the kernels compute and discard
         pad_here = (getattr(self.engine, "layout", "padded") == "padded"
                     and not isinstance(self.engine, ShardedQueryEngine))
-        padded = round_to_pow2(n) if pad_here else n
-        s = np.zeros(padded, dtype=np.int32)
-        t = np.zeros(padded, dtype=np.int32)
-        wl = np.zeros(padded, dtype=np.int32)
-        s[:n] = [b[1] for b in batch]
-        t[:n] = [b[2] for b in batch]
-        wl[:n] = [b[3] for b in batch]
-        qa = getattr(self.engine, "query_async", None)
-        if qa is not None:
-            handle = qa(s, t, wl)
-        else:  # engine exposes only a blocking query (tests stub this)
-            res = self.engine.query(s, t, wl)
-            handle = PendingResult(lambda: res)
-        keys = [self._memo_key(b[1], b[2], b[3]) for b in batch]
-        self._inflight = (handle, [b[0] for b in batch], keys)
-        self._inflight_rids = {b[0] for b in batch}
-        self._inflight_pos = {k: i for i, k in enumerate(keys)}
-        self._inflight_extra = []
+        if self.pending:
+            batch = self.pending
+            self.pending = []
+            self._pending_rids.clear()
+            n = len(batch)
+            padded = round_to_pow2(n) if pad_here else n
+            s = np.zeros(padded, dtype=np.int32)
+            t = np.zeros(padded, dtype=np.int32)
+            wl = np.zeros(padded, dtype=np.int32)
+            s[:n] = [b[1] for b in batch]
+            t[:n] = [b[2] for b in batch]
+            wl[:n] = [b[3] for b in batch]
+            qa = getattr(self.engine, "query_async", None)
+            if qa is not None:
+                handle = qa(s, t, wl)
+            else:  # engine exposes only a blocking query (tests stub this)
+                res = self.engine.query(s, t, wl)
+                handle = PendingResult(lambda: res)
+            keys = [self._memo_key(b[1], b[2], b[3]) for b in batch]
+            self._inflight = (handle, [b[0] for b in batch], keys)
+            self._inflight_rids = {b[0] for b in batch}
+            self._inflight_pos = {k: i for i, k in enumerate(keys)}
+            self._inflight_extra = []
+            self.stats.max_batch = max(self.stats.max_batch, n)
+        if self.pending_profiles:
+            batch = self.pending_profiles
+            self.pending_profiles = []
+            self._pending_prof_rids.clear()
+            n = len(batch)
+            padded = round_to_pow2(n) if pad_here else n
+            s = np.zeros(padded, dtype=np.int32)
+            t = np.zeros(padded, dtype=np.int32)
+            s[:n] = [b[1] for b in batch]
+            t[:n] = [b[2] for b in batch]
+            qa = getattr(self.engine, "query_profile_async", None)
+            if qa is not None:
+                handle = qa(s, t)
+            else:
+                res = self.engine.query_profile(s, t)
+                handle = PendingResult(lambda: res)
+            keys = [self._profile_key(b[1], b[2]) for b in batch]
+            self._inflight_prof = (handle, [b[0] for b in batch], keys)
+            self._inflight_prof_rids = {b[0] for b in batch}
+            self._inflight_prof_pos = {k: i for i, k in enumerate(keys)}
+            self._inflight_prof_extra = []
+            self.stats.max_batch = max(self.stats.max_batch, n)
         self.stats.batches += 1
-        self.stats.max_batch = max(self.stats.max_batch, n)
         self.stats.flush_time_s += time.perf_counter() - t0
 
     def _drain(self) -> None:
-        """Materialize the in-flight batch into results + memo."""
-        if self._inflight is None:
+        """Materialize the in-flight batch into results + memos."""
+        if self._inflight is None and self._inflight_prof is None:
             return
         t0 = time.perf_counter()
-        handle, rids, keys = self._inflight
-        extra = self._inflight_extra
-        self._inflight = None
-        self._inflight_rids = set()
-        self._inflight_pos = {}
-        self._inflight_extra = []
-        out = handle.wait()[:len(rids)]
-        for rid, key, d in zip(rids, keys, out):
-            self.results[rid] = int(d)
-            self.memo[key] = int(d)
-            if len(self.memo) > self.memo_capacity:
-                self.memo.popitem(last=False)
-        for rid, pos in extra:   # duplicates submitted while in flight
-            self.results[rid] = int(out[pos])
+        if self._inflight is not None:
+            handle, rids, keys = self._inflight
+            extra = self._inflight_extra
+            self._inflight = None
+            self._inflight_rids = set()
+            self._inflight_pos = {}
+            self._inflight_extra = []
+            out = handle.wait()[:len(rids)]
+            for rid, key, d in zip(rids, keys, out):
+                self.results[rid] = int(d)
+                self._memo_put(key, int(d))
+            for rid, pos in extra:   # duplicates submitted while in flight
+                self.results[rid] = int(out[pos])
+        if self._inflight_prof is not None:
+            handle, rids, keys = self._inflight_prof
+            extra = self._inflight_prof_extra
+            self._inflight_prof = None
+            self._inflight_prof_rids = set()
+            self._inflight_prof_pos = {}
+            self._inflight_prof_extra = []
+            out = np.asarray(handle.wait())[:len(rids)]
+            for rid, key, prof in zip(rids, keys, out):
+                # np.array COPIES: the memo must own its staircase, not a
+                # row view pinning the whole flushed batch buffer (and
+                # aliasing what profile_result hands out as caller-owned)
+                arr = np.array(prof, dtype=np.int32)
+                self.profile_results[rid] = arr.copy()
+                self.profile_memo[key] = arr
+                if len(self.profile_memo) > self.memo_capacity:
+                    self.profile_memo.popitem(last=False)
+            for rid, pos in extra:
+                self.profile_results[rid] = np.array(out[pos],
+                                                     dtype=np.int32)
         self.stats.flush_time_s += time.perf_counter() - t0
 
     def flush(self) -> None:
@@ -207,9 +318,36 @@ class WCSDServer:
             self.flush()
         return self.results.pop(rid, None)
 
-    # convenience: synchronous bulk API
+    def profile_result(self, rid: int) -> Optional[np.ndarray]:
+        """Deliver (and evict) the ``[num_levels + 1]`` staircase for a
+        `submit_profile` rid — the same read-once contract as `result`.
+        The delivered array is the caller's to keep (the memo holds its
+        own copy)."""
+        if rid in self.profile_results:
+            return self.profile_results.pop(rid)
+        if rid in self._inflight_prof_rids:
+            self._drain()
+        elif rid in self._pending_prof_rids:
+            self.flush()
+        return self.profile_results.pop(rid, None)
+
+    # convenience: synchronous bulk APIs
     def query_many(self, s, t, w_level) -> np.ndarray:
         rids = [self.submit(int(a), int(b), int(c))
                 for a, b, c in zip(s, t, w_level)]
         self.flush()
         return np.array([self.result(r) for r in rids], dtype=np.int32)
+
+    def query_profile_many(self, s, t) -> np.ndarray:
+        """[n, num_levels + 1] staircases for n (s, t) pairs."""
+        rids = [self.submit_profile(int(a), int(b)) for a, b in zip(s, t)]
+        self.flush()
+        out = [self.profile_result(r) for r in rids]
+        W1 = self.engine.num_levels + 1
+        if not out:
+            return np.zeros((0, W1), dtype=np.int32)
+        return np.stack(out).astype(np.int32)
+
+    def query_profile(self, s: int, t: int) -> np.ndarray:
+        """Synchronous single-pair staircase."""
+        return self.query_profile_many([s], [t])[0]

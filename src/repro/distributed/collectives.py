@@ -17,6 +17,8 @@ the log-sum-exp trick. Used by the §Perf decode hillclimb.
 """
 from __future__ import annotations
 
+import itertools
+
 import jax
 import jax.numpy as jnp
 
@@ -79,6 +81,24 @@ def row_gather_psum_scatter(shard, rows, axes, rows_per_shard: int):
     contrib = _owned_contribution(shard, rows, axes, rows_per_shard)
     return jax.lax.psum_scatter(contrib, axes, scatter_dimension=0,
                                 tiled=True)
+
+
+def multi_row_gather_psum_scatter(shards, rows, axes, rows_per_shard: int):
+    """`row_gather_psum_scatter` over several same-sharded arrays with ONE
+    collective: per-array contributions are concatenated on the trailing
+    axis, reduce-scattered together, and split back out — one launch and
+    one fabric transfer instead of ``len(shards)`` (the hub/dist/wlev
+    triplet of a label row always travels together, so the profile query
+    path pays the collective latency once per side). Every array must be
+    2-D `[rows_per_shard, *]` (same dtype; pass 1-D data as a ``[V, 1]``
+    column) and ``rows`` replicated, as for the single-array form."""
+    contribs = [_owned_contribution(sh, rows, axes, rows_per_shard)
+                for sh in shards]
+    widths = [c.shape[-1] for c in contribs]
+    out = jax.lax.psum_scatter(jnp.concatenate(contribs, axis=-1), axes,
+                               scatter_dimension=0, tiled=True)
+    bounds = list(itertools.accumulate(widths[:-1]))
+    return tuple(jnp.split(out, bounds, axis=-1)) if bounds else (out,)
 
 
 def distributed_lse_decode(q, k_shard, v_shard, axis: str,

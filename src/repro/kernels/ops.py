@@ -78,6 +78,35 @@ def wcsd_query_segmented(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
     return jnp.where(best >= DEV_INF, INF_DIST, best).astype(jnp.int32)
 
 
+@functools.partial(jax.jit, static_argnames=("num_levels", "interpret",
+                                             "use_kernel"))
+def wcsd_profile_segmented(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
+                           srow, trow, *, num_levels: int,
+                           interpret: bool = True, use_kernel: bool = True):
+    """One bucket-pair sub-batch of the one-pass PROFILE query path.
+
+    Same tile/row-id contract as `wcsd_query_segmented`, minus the
+    per-query level: both label rows are gathered once and every
+    constraint level is answered from that single sweep. The kernel (or
+    its jnp oracle) emits per-pair-level bucket minima; the suffix
+    min-scan over the level axis applied here turns them into the
+    staircase. Returns [B, num_levels + 1] int32 distances —
+    ``out[b, w] == wcsd_query_segmented(..., w)[b]`` pointwise, with
+    INF_DIST where no feasible path exists."""
+    if use_kernel:
+        bucket = _wq.wcsd_profile_segmented(hub_s, dist_s, wlev_s,
+                                            hub_t, dist_t, wlev_t,
+                                            srow, trow,
+                                            num_levels=num_levels,
+                                            interpret=interpret)
+    else:
+        bucket = _ref.wcsd_profile_segmented_ref(hub_s, dist_s, wlev_s,
+                                                 hub_t, dist_t, wlev_t,
+                                                 srow, trow, num_levels)
+    prof = jax.lax.cummin(bucket, axis=1, reverse=True)
+    return jnp.where(prof >= DEV_INF, INF_DIST, prof).astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
 def frontier_relax(nbr_pad, lvl_pad, Fw, R, *, interpret: bool = True,
                    use_kernel: bool = True):

@@ -36,6 +36,22 @@ def wcsd_query_segmented_ref(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
         axis=(1, 2))
 
 
+def wcsd_profile_segmented_ref(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
+                               srow, trow, num_levels: int):
+    """Profile-path oracle, mirroring the kernel's bucket-minima contract:
+    gather both rows once, bin each hub meet's distance sum by its pair
+    level ``min(wlev_s, wlev_t)``, return [B, num_levels + 1] bucket
+    minima (suffix min-scan into the staircase happens in ops). Pad cells
+    carry wlev = -1 and fall below every bucket."""
+    hs, ds, ws = hub_s[srow], jnp.minimum(dist_s[srow], DEV_INF), wlev_s[srow]
+    ht, dt, wt = hub_t[trow], jnp.minimum(dist_t[trow], DEV_INF), wlev_t[trow]
+    eq = hs[:, :, None] == ht[:, None, :]
+    dsum = jnp.where(eq, ds[:, :, None] + dt[:, None, :], DEV_INF)
+    mw = jnp.minimum(ws[:, :, None], wt[:, None, :])
+    return jnp.stack([jnp.where(mw == lev, dsum, DEV_INF).min(axis=(1, 2))
+                      for lev in range(num_levels + 1)], axis=1)
+
+
 def wc_prune_emit_batched_ref(F, T, hub, dist, wlev, d):
     """Batched prune+emit oracle (the `_batched_round` jnp gather soup):
     F [B, V], T [B, V, W+1], hub/dist/wlev [V, cap], d scalar round."""

@@ -148,3 +148,80 @@ def wcsd_query_segmented(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
         interpret=interpret,
     )(srow, trow, w_level, hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t)
     return out[:, 0]
+
+
+# ----------------------------------------------------------------- profile
+def _profile_kernel(srow_ref, trow_ref,
+                    hs_ref, ds_ref, ws_ref, ht_ref, dt_ref, wt_ref,
+                    out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, DEV_INF)
+
+    # one gather of each side per query, every level answered from it: a
+    # meeting pair (i, j) is feasible at every level <= min(ws[i], wt[j]),
+    # so the pair contributes its distance sum to exactly one wlev BUCKET
+    # (its pair level); the suffix min-scan over buckets -> staircase runs
+    # in the wrapper, after all t-tiles have accumulated. Store pads carry
+    # wlev = -1, below every bucket, so they never contribute.
+    hs = hs_ref[...]                                        # [1, Ws]
+    ds = jnp.minimum(ds_ref[...], DEV_INF)
+    ht = ht_ref[...]                                        # [1, bLt]
+    dt = jnp.minimum(dt_ref[...], DEV_INF)
+    eq = hs[0, :, None] == ht[0, None, :]                   # [Ws, bLt]
+    dsum = jnp.where(eq, ds[0, :, None] + dt[0, None, :], DEV_INF)
+    mw = jnp.minimum(ws_ref[...][0, :, None], wt_ref[...][0, None, :])
+    for lev in range(out_ref.shape[1]):   # static unroll: W + 1 is tiny
+        best = jnp.where(mw == lev, dsum, DEV_INF).min()
+        out_ref[0, lev] = jnp.minimum(out_ref[0, lev], best)
+
+
+@functools.partial(jax.jit, static_argnames=("num_levels", "block_lt",
+                                             "interpret"))
+def wcsd_profile_segmented(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
+                           srow, trow, *, num_levels: int,
+                           block_lt: int = 128, interpret: bool = True):
+    """One-pass profile queries: per-(vertex-pair) wlev-bucket minima.
+
+    Same store layout and scalar-prefetch gather as `wcsd_query_segmented`,
+    but no per-query level: each query reads its two label rows ONCE and
+    bins every hub meet's distance sum by its pair level
+    ``min(wlev_s, wlev_t)``. Returns [B, num_levels + 1] int32 bucket
+    minima — ``out[b, l]`` is the best sum among pairs whose pair level
+    (the tightest constraint they satisfy) is exactly ``l``
+    (>= DEV_INF: none). The full
+    staircase ``dist(s, t, w)`` for every ``w`` is the suffix min-scan over
+    the level axis (`ops.wcsd_profile_segmented` applies it), making the
+    L-level workload one label sweep instead of L.
+
+    The [B, num_levels + 1] output block is narrow (not lane-aligned);
+    that is fine — it is DEV_INF-initialized per query and scalar-
+    accumulated, exactly like the [B, 1] block of the single-level kernel.
+    """
+    B = srow.shape[0]
+    Ws, Wt = hub_s.shape[1], hub_t.shape[1]
+    Lp = int(num_levels) + 1
+    grid = (B, Wt // block_lt)
+
+    def s_spec():
+        return pl.BlockSpec((1, Ws), lambda i, j, srow, trow: (srow[i], 0))
+
+    def t_spec():
+        return pl.BlockSpec((1, block_lt),
+                            lambda i, j, srow, trow: (trow[i], j))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[s_spec(), s_spec(), s_spec(),
+                  t_spec(), t_spec(), t_spec()],
+        out_specs=pl.BlockSpec((1, Lp), lambda i, j, srow, trow: (i, 0)),
+    )
+    return pl.pallas_call(
+        _profile_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Lp), jnp.int32),
+        interpret=interpret,
+    )(srow, trow, hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t)

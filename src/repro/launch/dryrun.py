@@ -108,9 +108,19 @@ def run_serve(quick: bool) -> None:
         else:
             s, t, wl = random_queries(g, 512, seed=seed + 1)
         for layout in ("csr", "padded"):   # every layout x placement combo
-            exp = np.asarray(DeviceQueryEngine(
+            dev_eng = DeviceQueryEngine(
                 idx, layout=layout, use_pallas=cfg.use_pallas,
-                interpret=cfg.interpret).query(s, t, wl))
+                interpret=cfg.interpret)
+            exp = np.asarray(dev_eng.query(s, t, wl))
+            # profile expectation: the per-level loop the one-pass replaces
+            exp_prof = np.stack(
+                [np.asarray(dev_eng.query(
+                    s, t, np.full(len(s), w, np.int32)))
+                 for w in range(W + 1)], axis=1)
+            if not np.array_equal(np.asarray(dev_eng.query_profile(s, t)),
+                                  exp_prof):
+                raise SystemExit(f"MISMATCH V={V} layout={layout} "
+                                 "device profile vs per-level loop")
             for multi_pod in (False, True):
                 mesh = make_serving_mesh(multi_pod=multi_pod)
                 for budget in (None, 1):  # replicated / sharded_labels
@@ -125,8 +135,11 @@ def run_serve(quick: bool) -> None:
                     if not np.array_equal(got, exp):
                         raise SystemExit(f"MISMATCH {tag}: "
                                          f"{np.flatnonzero(got != exp)[:8]}")
-                    print(f"OK {tag}: {len(s)} queries bit-identical",
-                          flush=True)
+                    got_prof = np.asarray(eng.query_profile(s, t))
+                    if not np.array_equal(got_prof, exp_prof):
+                        raise SystemExit(f"MISMATCH profile {tag}")
+                    print(f"OK {tag}: {len(s)} queries + profiles "
+                          "bit-identical", flush=True)
         # async double-buffered server over the sharded backend
         srv = WCSDServer(idx, mesh=make_serving_mesh(),
                          **{**cfg.server_kwargs(), "max_batch": 64})
@@ -134,8 +147,11 @@ def run_serve(quick: bool) -> None:
         if not np.array_equal(got, exp):
             raise SystemExit(f"MISMATCH async server V={V}")
         assert not srv.results, "read-once delivery left results behind"
-        print(f"OK V={V} async server: {srv.stats.batches} batches, "
-              f"{srv.stats.memo_hits} memo hits", flush=True)
+        if not np.array_equal(srv.query_profile_many(s, t), exp_prof):
+            raise SystemExit(f"MISMATCH async server profiles V={V}")
+        assert not srv.profile_results, "profile read-once left results"
+        print(f"OK V={V} async server (+profiles): {srv.stats.batches} "
+              f"batches, {srv.stats.memo_hits} memo hits", flush=True)
     print(f"serve dryrun PASS on {n_dev} virtual devices "
           f"({time.time() - t0:.1f}s)")
 

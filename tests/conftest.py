@@ -9,6 +9,27 @@ sys.path.insert(0, os.path.dirname(__file__))
 
 
 @pytest.fixture(scope="session")
+def built_indices():
+    """Session-cached index construction for parametrized serving/profile
+    tests: every case that needs "a built index over graph X" shares one
+    construction per distinct (generator, kwargs) key instead of paying
+    the build per parametrization — the profile suite runs its whole
+    layout x kernel matrix against two builds, not a dozen."""
+    cache = {}
+
+    def get(family: str, **kwargs):
+        from repro.core import generators
+        from repro.core.wc_index import build_wc_index
+        key = (family, tuple(sorted(kwargs.items())))
+        if key not in cache:
+            g = getattr(generators, family)(**kwargs)
+            cache[key] = (g, build_wc_index(g, ordering="degree"))
+        return cache[key]
+
+    return get
+
+
+@pytest.fixture(scope="session")
 def serve_layout():
     """Label-store layout for layout-agnostic serving tests.
 

@@ -1,0 +1,69 @@
+"""Schema gate for the benchmark JSON artifacts (BENCH_*.json).
+
+CI archives ``benchmarks/run.py --json`` output as the repo's perf
+trajectory; these tests hold the same `validate_rows` gate the harness
+applies before writing, against (a) a real tiny serving-suite run — so
+the profile-vs-loop rows physically exist, not just pass review — and
+(b) synthetic malformed rows, so the gate itself cannot rot.
+
+Run from the repo root (CI and the tier-1 command both do), where the
+``benchmarks`` namespace package is importable.
+"""
+import numpy as np
+import pytest
+
+from benchmarks import bench_wcsd
+from benchmarks.run import REQUIRED_ALGOS, ROW_KEYS, validate_rows
+
+
+@pytest.fixture(scope="module")
+def serving_rows():
+    # tiny config: the schema (which rows exist), not the numbers, is
+    # what is under test here
+    return bench_wcsd.bench_serving(batch=64, n_nodes=200)
+
+
+def test_serving_suite_conforms_and_carries_profile_rows(serving_rows):
+    validate_rows("serving", serving_rows)
+    algos = {r["algo"] for r in serving_rows}
+    assert {"profile_us_per_query", "profile_loop_us_per_query",
+            "profile_speedup", "profile_levels"} <= algos
+    by_algo = {r["algo"]: r["value"] for r in serving_rows}
+    # the acceptance trend is asserted on the real bench graphs in CI;
+    # here only sanity: L >= 4 levels and strictly positive timings
+    assert by_algo["profile_levels"] >= 4
+    assert by_algo["profile_us_per_query"] > 0
+    assert by_algo["profile_loop_us_per_query"] > 0
+    assert by_algo["profile_speedup"] == pytest.approx(
+        by_algo["profile_loop_us_per_query"]
+        / by_algo["profile_us_per_query"], rel=1e-6)
+
+
+def test_row_keys_are_the_csv_header():
+    assert ROW_KEYS == ("table", "dataset", "algo", "value")
+
+
+def test_validate_rows_rejects_drift():
+    good = [dict(table="serving", dataset="X", algo=a, value=1.0)
+            for a in REQUIRED_ALGOS["serving"]]
+    validate_rows("serving", good)                      # passes
+    with pytest.raises(ValueError, match="non-empty row list"):
+        validate_rows("serving", [])
+    with pytest.raises(ValueError, match="missing"):
+        validate_rows("x", [dict(table="t", dataset="d", algo="a")])
+    with pytest.raises(ValueError, match="must be a number"):
+        validate_rows("x", [dict(table="t", dataset="d", algo="a",
+                                 value="fast")])
+    with pytest.raises(ValueError, match="must be a number"):
+        validate_rows("x", [dict(table="t", dataset="d", algo="a",
+                                 value=True)])
+    with pytest.raises(ValueError, match="non-empty string"):
+        validate_rows("x", [dict(table="", dataset="d", algo="a",
+                                 value=0.5)])
+    # dropping a tracked serving metric is a schema break
+    with pytest.raises(ValueError, match="dropped tracked"):
+        validate_rows("serving", good[:-1] if good[-1]["algo"] != "qps"
+                      else good[1:])
+    # numpy scalars (what _time / len arithmetic can produce) are numbers
+    validate_rows("x", [dict(table="t", dataset="d", algo="a",
+                             value=float(np.float64(1.5)))])

@@ -23,7 +23,10 @@ instance.
 
 Also here: property tests for the index invariants (Thm. 3 monotonicity,
 post-pass minimality, sequential-vs-batched label-set equivalence) covering
-the padded batched builder AND the device-resident CSR-emitting builder.
+the padded batched builder AND the device-resident CSR-emitting builder,
+and the PROFILE differential harness (4 blocks x 25 examples = 100 more
+instances): the one-pass staircase path vs the per-level query loop vs the
+BFS sweep, on every layout/kernel mode and both serving memo modes.
 """
 import numpy as np
 import pytest
@@ -35,8 +38,9 @@ from repro.core.baselines import constrained_distance_grid, dijkstra_query
 from repro.core.dominance import pareto_filter_grouped
 from repro.core.generators import erdos_renyi
 from repro.core.graph import INF_DIST
-from repro.core.query import (DeviceQueryEngine, query_batch_jnp,
-                              query_batch_sorted_jnp)
+from repro.core.query import (DeviceQueryEngine, profile_batch_jnp,
+                              query_batch_jnp, query_batch_sorted_jnp)
+from repro.core.serve import WCSDServer
 from repro.core.wc_index import build_wc_index
 from repro.core.wc_index_batched import (build_wc_index_batched,
                                          build_wc_index_batched_packed,
@@ -112,6 +116,72 @@ def test_five_paths_agree_on_full_grid(block, n, deg, levels, seed):
     np.testing.assert_array_equal(got5, exp)
 
     _instances_run[0] += 1
+
+
+# ----------------------------------------------------- profile staircases
+N_PROFILE_BLOCKS = 4   # x EXAMPLES_PER_BLOCK = 100 generated instances
+_profile_instances_run = [0]
+
+
+@pytest.mark.parametrize("block", range(N_PROFILE_BLOCKS))
+@given(st.sampled_from([8, 10, 12]), st.sampled_from([2.5, 3.5, 4.5]),
+       st.sampled_from([2, 3]), st.integers(0, 100_000))
+@settings(max_examples=EXAMPLES_PER_BLOCK, deadline=None, derandomize=True)
+def test_profile_paths_agree_on_full_grid(block, n, deg, levels, seed):
+    """One-pass profile == the per-level `wcsd_query` loop == BFS sweep on
+    the full (s, t) pair grid, at every constraint level at once.
+
+    Paths under test: the padded jnp path (`profile_batch_jnp`, the XLA-
+    compiled mode), the segmented CSR path in interpret-kernel AND jnp
+    modes, and the serving surface under both directed and undirected memo
+    canonicalization."""
+    g = erdos_renyi(n, deg, num_levels=levels, seed=seed + 104729 * block)
+    V, W = g.num_nodes, g.num_levels
+    idx = build_wc_index(g)
+    assert int(idx.count.max()) <= FIXED_CAP
+
+    D = constrained_distance_grid(g)
+    s, t = np.meshgrid(np.arange(V), np.arange(V), indexing="ij")
+    s = s.ravel().astype(np.int32)
+    t = t.ravel().astype(np.int32)
+    exp = D[s, t, :]                                     # [V*V, W+1]
+
+    # padded jnp path (fixed shapes -> a handful of compiles)
+    hub, dist, wlev, count = idx.padded_device_arrays(cap=FIXED_CAP)
+    dev = tuple(jnp.asarray(a) for a in (hub, dist, wlev, count))
+    sp, tp, _, nq = _pad_queries(s, t, np.zeros_like(s))
+    got = np.asarray(profile_batch_jnp(*dev, jnp.asarray(sp),
+                                       jnp.asarray(tp), num_levels=W))[:nq]
+    np.testing.assert_array_equal(got, exp)
+
+    # segmented CSR path: interpret-mode Pallas kernel and jnp oracle
+    eng_k = DeviceQueryEngine(idx, layout="csr", use_pallas=True)
+    prof_k = np.asarray(eng_k.query_profile(s, t))
+    np.testing.assert_array_equal(prof_k, exp)
+    eng_j = DeviceQueryEngine(idx, layout="csr", use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(eng_j.query_profile(s, t)), exp)
+
+    # pointwise: profile[:, w] == the per-level query loop it replaces
+    loop = np.stack(
+        [np.asarray(eng_k.query(s, t, np.full(len(s), w, np.int32)))
+         for w in range(W + 1)], axis=1)
+    np.testing.assert_array_equal(prof_k, loop)
+
+    # serving surface, both memo-canonicalization modes
+    for undirected in (True, False):
+        srv = WCSDServer(engine=eng_k, max_batch=64, undirected=undirected)
+        np.testing.assert_array_equal(srv.query_profile_many(s, t), exp)
+
+    _profile_instances_run[0] += 1
+
+
+def test_profile_differential_coverage_target():
+    """Acceptance: the profile harness is configured for >= 100 generated
+    instances; when blocks ran in this session, each produced exactly its
+    example count (no silent early exits)."""
+    assert N_PROFILE_BLOCKS * EXAMPLES_PER_BLOCK >= 100
+    if _profile_instances_run[0]:
+        assert _profile_instances_run[0] % EXAMPLES_PER_BLOCK == 0
 
 
 # ------------------------------------------------------- index invariants

@@ -1,0 +1,301 @@
+"""Profile (staircase) query subsystem: kernel, engine and serving
+properties beyond the differential harness.
+
+Satellite invariants of the one-pass profile path:
+
+  * every staircase is monotone non-increasing as the constraint relaxes,
+    on every engine/layout/kernel mode;
+  * ``profile[:, w] == query(s, t, w)`` pointwise (the L-call loop the
+    profile replaces);
+  * ``s == t`` yields an all-zeros profile at EVERY padded cap — the PR 3
+    cap-trim regression (the trailing self entry survives trimming)
+    extended to the profile path;
+  * a hypothesis round-trip `PackedLabelsBuilder` -> `PackedLabels` ->
+    profile kernel on adversarial level distributions (all levels equal,
+    one level empty, singleton rows), via `_hypo_shim`;
+  * `WCSDServer` profile semantics: profile memo + single-level serving
+    from a cached profile, in-flight piggyback, read-once delivery,
+    directed-mode key separation, mixed scalar+profile flushes.
+
+Parametrized cases share session-built indices (`built_indices` in
+conftest) so the matrix adds cases, not index constructions.
+"""
+import numpy as np
+import pytest
+from _hypo_shim import given, settings, st  # hypothesis or fallback
+
+from repro.core.graph import INF_DIST
+from repro.core.query import DeviceQueryEngine, ShardedQueryEngine
+from repro.core.serve import WCSDServer
+from repro.core.wc_index import PackedLabelsBuilder, PackedWCIndex
+
+SOCIAL = dict(family="scale_free", num_nodes=150, m=3, num_levels=4, seed=12)
+ROAD = dict(family="road_grid", rows=9, cols=9, num_levels=3, seed=2)
+
+
+def _queries(idx, n, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, idx.num_nodes, n).astype(np.int32),
+            rng.integers(0, idx.num_nodes, n).astype(np.int32))
+
+
+# ------------------------------------------------------ engine properties
+@pytest.mark.parametrize("layout,use_pallas", [
+    ("padded", False), ("csr", False), ("csr", True)])
+@pytest.mark.parametrize("cfg", [SOCIAL, ROAD], ids=["social", "road"])
+def test_staircase_monotone_and_pointwise(built_indices, cfg, layout,
+                                          use_pallas):
+    _, idx = built_indices(**cfg)
+    eng = DeviceQueryEngine(idx, layout=layout, use_pallas=use_pallas)
+    s, t = _queries(idx, 200, seed=3)
+    prof = np.asarray(eng.query_profile(s, t))
+    assert prof.shape == (200, idx.num_levels + 1)
+    # relaxing the constraint (smaller w) never lengthens the path
+    assert np.all(prof[:, :-1] <= prof[:, 1:])
+    # the top level is feasible only for s == t (self entries)
+    assert np.array_equal(prof[:, -1] == 0, s == t)
+    for w in range(idx.num_levels + 1):
+        one = np.asarray(eng.query(s, t, np.full(200, w, np.int32)))
+        np.testing.assert_array_equal(prof[:, w], one, err_msg=f"w={w}")
+
+
+@pytest.mark.parametrize("cap", [1, 2, 3, None])
+def test_self_profile_all_zeros_at_every_cap(built_indices, cap):
+    """Extends the PR 3 cap-trim regression: trimming keeps the trailing
+    self entry, so s == t profiles are all-zeros at EVERY level for any
+    cap >= 1 — on the profile path, not just single-level queries."""
+    _, idx = built_indices(**SOCIAL)
+    eng = DeviceQueryEngine(idx, cap=cap, layout="padded")
+    s = np.arange(idx.num_nodes, dtype=np.int32)
+    prof = np.asarray(eng.query_profile(s, s))
+    assert prof.shape == (idx.num_nodes, idx.num_levels + 1)
+    assert np.all(prof == 0), cap
+
+
+def test_self_profile_all_zeros_csr(built_indices):
+    _, idx = built_indices(**ROAD)
+    eng = DeviceQueryEngine(idx, layout="csr", use_pallas=True)
+    s = np.arange(idx.num_nodes, dtype=np.int32)
+    assert np.all(np.asarray(eng.query_profile(s, s)) == 0)
+
+
+@pytest.mark.parametrize("layout", ["padded", "csr"])
+@pytest.mark.parametrize("budget", [None, 1])
+def test_sharded_profile_matches_device_engine(built_indices, layout,
+                                               budget):
+    """Both sharded placements (replicated / row-sharded labels with the
+    fused multi-array row-gather) produce bit-identical staircases on a
+    1-device mesh; the 8-virtual-device proof runs via dryrun --serve."""
+    from repro.launch.mesh import make_serving_mesh
+    _, idx = built_indices(**SOCIAL)
+    eng = ShardedQueryEngine(idx, mesh=make_serving_mesh(), layout=layout,
+                             device_budget_bytes=budget)
+    assert eng.mode == ("replicated" if budget is None else "sharded_labels")
+    s, t = _queries(idx, 150, seed=7)
+    exp = np.asarray(DeviceQueryEngine(idx,
+                                       layout=layout).query_profile(s, t))
+    np.testing.assert_array_equal(np.asarray(eng.query_profile(s, t)), exp)
+
+
+# --------------------------------------- builder round-trip (hypothesis)
+def _adversarial_entries(rng, V, W, mode):
+    """Flat (v, hub, dist, wlev) label entries honoring the builder
+    contract (hub < v == rank(v); sorted by (v, hub, dist)) with an
+    adversarial quality-level distribution."""
+    v_l, h_l, d_l, w_l = [], [], [], []
+    equal_lev = int(rng.integers(0, W))
+    hole = int(rng.integers(0, W))
+    for v in range(V):
+        hubs = [h for h in range(v) if rng.random() < 0.7]
+        if mode == "singleton" and hubs:      # at most one entry per vertex
+            hubs = [hubs[int(rng.integers(len(hubs)))]]
+        for h in hubs:
+            k = 1 if mode == "singleton" else int(rng.integers(1, 4))
+            dists = np.sort(rng.integers(1, 12, size=k))
+            for d in dists:
+                if mode == "equal":
+                    lev = equal_lev                  # all levels equal
+                elif mode == "hole":                 # one level empty
+                    lev = int(rng.integers(0, W - 1))
+                    lev += lev >= hole
+                else:
+                    lev = int(rng.integers(0, W))
+                v_l.append(v), h_l.append(h)
+                d_l.append(int(d)), w_l.append(lev)
+    order = np.lexsort((d_l, h_l, v_l)) if v_l else np.zeros(0, np.int64)
+    arr = lambda x: np.asarray(x, np.int32)[order]  # noqa: E731
+    return arr(v_l), arr(h_l), arr(d_l), arr(w_l)
+
+
+@given(st.integers(0, 100_000),
+       st.sampled_from(["equal", "hole", "singleton", "mixed"]))
+@settings(max_examples=16, deadline=None, derandomize=True)
+def test_builder_roundtrip_profile_on_adversarial_levels(seed, mode):
+    """PackedLabelsBuilder -> PackedLabels -> profile kernel round trip:
+    the staircase from the freshly finalized store equals the host
+    sort-merge (`PackedWCIndex.query_one`) at every level, on stores whose
+    level distributions stress the bucket min-scan (all levels equal, one
+    level missing entirely, singleton label rows — plus vertex 0, whose
+    row is only its self entry)."""
+    rng = np.random.default_rng(seed)
+    V, W = 8, 4
+    v, h, d, w = _adversarial_entries(rng, V, W, mode)
+    builder = PackedLabelsBuilder(V)
+    split = h < V // 2          # two rank-ascending batches
+    for m in (split, ~split):
+        builder.append_batch(v[m], h[m], d[m], w[m])
+    store, _ = builder.finalize(rank=np.arange(V, dtype=np.int32),
+                                num_levels=W)
+    pidx = PackedWCIndex(order=np.arange(V, dtype=np.int32),
+                         rank=np.arange(V, dtype=np.int32),
+                         levels=np.arange(1, W + 1, dtype=np.float64),
+                         labels=store)
+    eng = DeviceQueryEngine(pidx, layout="csr", use_pallas=True)
+    s, t = np.meshgrid(np.arange(V), np.arange(V), indexing="ij")
+    s = s.ravel().astype(np.int32)
+    t = t.ravel().astype(np.int32)
+    prof = np.asarray(eng.query_profile(s, t))
+    assert np.all(prof[:, :-1] <= prof[:, 1:])
+    for i in range(len(s)):
+        for lev in range(W + 1):
+            exp = min(pidx.query_one(int(s[i]), int(t[i]), lev), INF_DIST)
+            assert prof[i, lev] == exp, (mode, s[i], t[i], lev)
+
+
+# ------------------------------------------------------- serving surface
+def test_server_profile_matches_oracle(built_indices, serve_layout):
+    _, idx = built_indices(**SOCIAL)
+    srv = WCSDServer(idx, max_batch=64, layout=serve_layout)
+    s, t = _queries(idx, 150, seed=9)
+    got = srv.query_profile_many(s, t)
+    exp = np.stack([idx.query_batch(s, t, np.full(150, w, np.int32))
+                    for w in range(idx.num_levels + 1)], axis=1)
+    np.testing.assert_array_equal(got, exp)
+    assert srv.stats.profile_requests == 150
+    assert len(srv.profile_results) == 0      # read-once delivery drained
+
+
+def test_cached_profile_serves_every_single_level(built_indices,
+                                                  serve_layout):
+    """The memo interaction the profile exists for: once a pair's
+    staircase is cached, ANY single-level submit of that pair is a memo
+    hit — no device batch, answers read straight off the staircase."""
+    _, idx = built_indices(**SOCIAL)
+    srv = WCSDServer(idx, max_batch=32, layout=serve_layout)
+    rid = srv.submit_profile(3, 9)
+    srv.flush()
+    prof = srv.profile_result(rid)
+    batches = srv.stats.batches
+    for w in range(idx.num_levels + 1):
+        r = srv.submit(3, 9, w)
+        assert srv.result(r) == prof[w], w
+        r = srv.submit(9, 3, w)            # symmetric orientation too
+        assert srv.result(r) == prof[w], w
+    assert srv.stats.batches == batches    # zero extra device work
+    assert srv.stats.memo_hits >= 2 * (idx.num_levels + 1)
+    # …and a repeated profile submit is itself a memo hit
+    r2 = srv.submit_profile(9, 3)
+    np.testing.assert_array_equal(srv.profile_result(r2), prof)
+    assert srv.stats.batches == batches
+
+
+def test_profile_piggybacks_on_inflight_batch(built_indices, serve_layout):
+    _, idx = built_indices(**SOCIAL)
+    srv = WCSDServer(idx, max_batch=2, layout=serve_layout)
+    r1 = srv.submit_profile(3, 9)
+    srv.submit(5, 11, 0)             # hits max_batch -> async dispatch
+    assert srv._inflight_prof is not None and srv.stats.batches == 1
+    r2 = srv.submit_profile(3, 9)    # duplicate of in-flight profile
+    assert srv.stats.memo_hits == 1
+    assert srv.pending_profiles == []
+    p2 = srv.profile_result(r2)      # drains the in-flight slot
+    np.testing.assert_array_equal(p2, srv.profile_result(r1))
+    assert srv.stats.batches == 1    # no second device batch
+
+
+def test_profile_memo_is_directed_gated(built_indices):
+    """undirected=False must keep (s, t) and (t, s) profiles apart, same
+    as the single-level memo (asymmetric stub engine simulates a directed
+    index)."""
+    _, idx = built_indices(**SOCIAL)
+    W1 = idx.num_levels + 1
+    srv = WCSDServer(idx, max_batch=1024, undirected=False)
+    srv.engine.query_profile_async = None   # force the blocking fallback
+
+    def fake_profile(s, t):
+        return (np.asarray(s)[:, None] * 1000 + np.asarray(t)[:, None]
+                + np.zeros(W1, np.int32)[None, :])
+    srv.engine.query_profile = fake_profile
+    a = srv.submit_profile(2, 7)
+    srv.flush()
+    b = srv.submit_profile(7, 2)             # NOT a memo hit when directed
+    assert srv.stats.memo_hits == 0
+    srv.flush()
+    assert srv.profile_result(a)[0] == 2007
+    assert srv.profile_result(b)[0] == 7002
+    c = srv.submit_profile(2, 7)             # exact repeat IS memoized
+    assert srv.stats.memo_hits == 1
+    assert srv.profile_result(c)[0] == 2007
+
+
+def test_mixed_scalar_and_profile_flush(built_indices, serve_layout):
+    """One flush carries both a scalar and a profile section; both drain
+    into their result maps and agree with each other pointwise."""
+    _, idx = built_indices(**SOCIAL)
+    srv = WCSDServer(idx, max_batch=1024, layout=serve_layout)
+    rs = srv.submit(4, 17, 1)
+    rp = srv.submit_profile(4, 17)
+    rs2 = srv.submit(8, 23, 0)
+    assert srv.stats.batches == 0
+    srv.flush()
+    assert srv.stats.batches == 1            # ONE in-flight slot for both
+    prof = srv.profile_result(rp)
+    assert srv.result(rs) == prof[1]
+    assert srv.result(rs2) is not None
+    assert len(srv.results) == 0 and len(srv.profile_results) == 0
+
+
+def test_profile_results_do_not_grow_across_epochs(built_indices,
+                                                   serve_layout):
+    _, idx = built_indices(**SOCIAL)
+    srv = WCSDServer(idx, max_batch=32, layout=serve_layout)
+    s, t = _queries(idx, 100, seed=1)
+    for epoch in range(3):
+        srv.query_profile_many(s, t)
+        assert len(srv.profile_results) == 0, epoch
+    assert srv.stats.profile_requests == 300
+
+
+def test_delivered_profile_is_a_private_copy(built_indices, serve_layout):
+    """Mutating a delivered staircase must not corrupt the memo's copy —
+    on the primary drain path AND the in-flight piggyback path (regression:
+    piggybacked deliveries used to alias the memo's row view)."""
+    _, idx = built_indices(**SOCIAL)
+    srv = WCSDServer(idx, max_batch=32, layout=serve_layout)
+    r1 = srv.submit_profile(3, 9)
+    srv.flush()
+    first = srv.profile_result(r1)
+    first[:] = -42
+    r2 = srv.submit_profile(3, 9)            # memo hit, fresh copy
+    again = srv.profile_result(r2)
+    assert np.all(again >= 0) and not np.array_equal(again, first)
+    # piggybacked delivery: duplicate submitted while in flight
+    srv2 = WCSDServer(idx, max_batch=1, layout=serve_layout)
+    ra = srv2.submit_profile(5, 11)          # auto-flush: in flight
+    rb = srv2.submit_profile(5, 11)          # piggybacks on in-flight slot
+    pb = srv2.profile_result(rb)
+    pb[:] = -42
+    rc = srv2.submit_profile(5, 11)          # memo hit must be unpoisoned
+    assert np.all(srv2.profile_result(rc) >= 0)
+    w = idx.num_levels - 1
+    assert srv2.result(srv2.submit(5, 11, w)) >= 0
+    assert np.all(srv2.profile_result(ra) >= 0)
+
+
+def test_empty_profile_batch_paths(built_indices, serve_layout):
+    _, idx = built_indices(**SOCIAL)
+    srv = WCSDServer(idx, max_batch=8, layout=serve_layout)
+    out = srv.query_profile_many(np.array([], np.int32),
+                                 np.array([], np.int32))
+    assert out.shape == (0, idx.num_levels + 1)
+    assert srv.stats.batches == 0

@@ -86,6 +86,9 @@ def test_dryrun_serve_eight_virtual_devices():
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
     assert "serve dryrun PASS on 8 virtual devices" in r.stdout
     assert r.stdout.count("bit-identical") >= 8  # 2 instances x 4 modes
+    # the profile path is part of the same acceptance sweep
+    assert r.stdout.count("queries + profiles bit-identical") >= 8
+    assert "(+profiles)" in r.stdout             # async server epoch
 
 
 def test_row_gather_collectives_eight_devices():
@@ -116,6 +119,21 @@ g = jax.jit(shard_map_compat(
 np.testing.assert_array_equal(np.asarray(g(store, rows)), store[rows])
 print("OK row gather")
 
+# fused multi-array gather (ONE reduce-scatter for hub/dist/wlev + a
+# count column) == per-array gathers, exactly
+from repro.distributed.collectives import multi_row_gather_psum_scatter
+store2 = rng.integers(0, 7, (V, 3)).astype(np.int32)
+col = rng.integers(1, 50, (V, 1)).astype(np.int32)
+m = jax.jit(shard_map_compat(
+    lambda a, b, c, rr: multi_row_gather_psum_scatter(
+        (a, b, c), rr, ("data",), per),
+    mesh, (P("data", None),) * 3 + (P(None),), (P("data"),) * 3))
+ga, gb, gc = (np.asarray(x) for x in m(store, store2, col, rows))
+np.testing.assert_array_equal(ga, store[rows])
+np.testing.assert_array_equal(gb, store2[rows])
+np.testing.assert_array_equal(gc, col[rows])
+print("OK fused multi row gather")
+
 # ServeConfig.multi_pod reaches the engine's mesh (regression: the flag
 # used to be dropped by server_kwargs)
 from repro.configs.wcsd_serve import ServeConfig
@@ -136,4 +154,5 @@ print("OK multi_pod config plumb")
                        text=True, env=env, timeout=300)
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
     assert "OK row gather" in r.stdout
+    assert "OK fused multi row gather" in r.stdout
     assert "OK multi_pod config plumb" in r.stdout
