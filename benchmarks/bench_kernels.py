@@ -104,9 +104,11 @@ def bench_segmented_kernel(B=2048, V=4000, seed=0):
         dict(table="kernel_segmented", dataset=name, algo="sub_batches",
              value=len(plan)),
     ]
-    # CPU wall time of the XLA fallbacks (scale reference only)
+    # CPU wall time of the XLA fallbacks (scale reference only; pinned to
+    # the bucket-pair dispatch this suite's traffic model describes — the
+    # ragged-vs-bucket-pair comparison lives in bench_wcsd.bench_serving)
     dense = DeviceQueryEngine(idx)
-    seg = DeviceQueryEngine(idx, layout="csr")
+    seg = DeviceQueryEngine(idx, layout="csr", dispatch="bucket_pair")
     np.asarray(dense.query(s, t, w)); np.asarray(seg.query(s, t, w))
     for algo, eng in [("dense_us_per_query", dense),
                       ("seg_us_per_query", seg)]:

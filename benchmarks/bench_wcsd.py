@@ -285,7 +285,96 @@ def bench_serving(batch=4096, n_nodes=3000):
              value=dt_single / dt_shard),
     ]
     rows += _bench_profile_vs_loop(idx, s[:batch], t[:batch], name)
+    rows += _bench_ragged_dispatch()
     return rows
+
+
+def make_skewed_store(V=2048, W=6, lane=32, buckets=8, seed=17, rng=None):
+    """A synthetic CSR label store whose row lengths span exactly
+    ``buckets`` geometric length buckets (widths lane * 2^b): mostly
+    short rows plus one hub-heavy row per wider bucket — the adversarial
+    scale-free shape for which the bucket-pair dispatch loop degenerates
+    toward buckets^2 kernel launches per flush while the ragged path
+    stays at ONE. Synthetic on purpose: the dispatch tax depends only on
+    the length distribution, and building a real index with multi-
+    thousand-entry rows is not CI material. Rows keep the hub-sorted
+    invariant (I1) the arena's tile early-out relies on.
+
+    Shared with tests/test_ragged.py (the adversarial-skew differential
+    block drives it with hypothesis-drawn rngs), so the bench and the
+    correctness harness cannot drift apart in what "adversarial skew"
+    means. Returns (PackedWCIndex, heavy_vertex_ids)."""
+    from repro.core.wc_index import PackedLabels, PackedWCIndex
+
+    rng = np.random.default_rng(seed) if rng is None else rng
+    lens = rng.integers(1, lane + 1, size=V)
+    heavy = rng.choice(V, size=buckets - 1, replace=False)
+    for i, v in enumerate(heavy):
+        w = lane << (i + 1)                   # one row per wider bucket
+        lens[v] = rng.integers(w // 2 + 1, w + 1)
+    hub_space = int(lens.max()) * 4
+    hub = np.concatenate(
+        [np.sort(rng.choice(hub_space, size=k, replace=False))
+         for k in lens]).astype(np.int32)
+    offsets = np.zeros(V + 1, dtype=np.int64)
+    np.cumsum(lens, out=offsets[1:])
+    dist = rng.integers(0, 1000, size=len(hub)).astype(np.int32)
+    wlev = rng.integers(0, W + 1, size=len(hub)).astype(np.int32)
+    store = PackedLabels.from_flat(hub, dist, wlev, offsets, lane=lane)
+    assert store.num_buckets == buckets
+    ar = np.arange(V, dtype=np.int32)
+    pidx = PackedWCIndex(order=ar, rank=ar.copy(),
+                         levels=np.arange(W, dtype=np.float64), labels=store)
+    return pidx, heavy
+
+
+def _bench_ragged_dispatch(flush=2048, lane=32):
+    """The acceptance row of the single-launch megakernel: ragged vs
+    bucket-pair µs/query on a skewed store spanning >= 8 length buckets,
+    at the server's default flush size. Both engines run the XLA paths
+    and are asserted bit-identical before timing.
+
+    The quantity under test is the DISPATCH tax — one launch + one fused
+    H2D + a device-emitted plan, vs one launch per populated bucket pair,
+    a host argsort/unique, and per-sub-batch staging — which is exactly
+    what the ragged path removes. ``lane=32`` keeps the O(lane^2) label-
+    scan compute (bit-identical work on BOTH paths) from hiding that tax
+    under CPU XLA wall-clock; on TPU the same comparison runs at the
+    production lane of 128 with the launch overhead in play instead."""
+    from repro.core.query import DeviceQueryEngine
+
+    pidx, heavy = make_skewed_store(lane=lane)
+    rng = np.random.default_rng(5)
+    s = rng.integers(0, pidx.num_nodes, flush).astype(np.int32)
+    t = rng.integers(0, pidx.num_nodes, flush).astype(np.int32)
+    wl = rng.integers(0, pidx.num_levels + 1, flush).astype(np.int32)
+    # salt with hub-heavy endpoints (the celebrity-node pattern) on BOTH
+    # sides so the flush populates short x short, short x heavy and
+    # heavy x heavy pairs — ~20+ bucket-pair launches per flush
+    n_salt = min(64, flush // 4)
+    s[:n_salt] = np.resize(heavy, n_salt)
+    t[n_salt // 2:n_salt + n_salt // 2] = np.resize(heavy, n_salt)
+    packed = pidx.labels
+    ragged = DeviceQueryEngine(pidx, layout="csr", lane=lane)
+    bp = DeviceQueryEngine(pidx, layout="csr", lane=lane,
+                           dispatch="bucket_pair")
+    out_r = np.asarray(ragged.query(s, t, wl))              # warmup compiles
+    out_b = np.asarray(bp.query(s, t, wl))
+    assert np.array_equal(out_r, out_b), \
+        "ragged dispatch diverged from the bucket-pair oracle"
+    t_rag, _ = _time(lambda: np.asarray(ragged.query(s, t, wl)), repeat=5)
+    t_bp, _ = _time(lambda: np.asarray(bp.query(s, t, wl)), repeat=5)
+    name = f"SKEW{packed.num_buckets}"
+    return [
+        dict(table="serving", dataset=name, algo="ragged_buckets",
+             value=packed.num_buckets),
+        dict(table="serving", dataset=name, algo="ragged_us_per_query",
+             value=t_rag / len(s) * 1e6),
+        dict(table="serving", dataset=name, algo="bucket_pair_us_per_query",
+             value=t_bp / len(s) * 1e6),
+        dict(table="serving", dataset=name, algo="ragged_speedup",
+             value=t_bp / t_rag),
+    ]
 
 
 def _bench_profile_vs_loop(idx, s, t, name):

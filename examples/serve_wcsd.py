@@ -19,8 +19,9 @@ def main():
     idx = build_wc_index(g)
     s, t, wl = random_queries(g, 10_000, seed=1)
 
-    # layout="padded": one [V, cap] store; layout="csr": CSR-packed bucket
-    # tiles, flushes planned per bucket pair (see docs/index-format.md).
+    # layout="padded": one [V, cap] store; layout="csr": the CSR-packed
+    # store served by the ragged megakernel — one kernel launch per flush
+    # over the lane-tiled arena (see docs/query-engine.md).
     # backend="sharded" runs the same queries over every attached device
     # (labels replicated, batch sharded; see docs/serving.md) — start with
     # XLA_FLAGS=--xla_force_host_platform_device_count=8 to see it scale.

@@ -26,15 +26,20 @@ class ServeConfig:
     `launch.mesh.make_serving_mesh` mesh (batch sharded, labels replicated;
     vertex-sharded labels + row-gather reduce-scatter once the store
     exceeds ``device_budget_bytes``). ``use_pallas``/``interpret`` select
-    the kernel path: compiled Pallas on TPU is ``use_pallas=True,
-    interpret=False`` — serving is NOT pinned to interpret mode. The same
-    stack serves profile (staircase) queries — `WCSDServer.submit_profile`
-    needs no extra configuration; its level count comes from the index."""
+    the kernel path: ``interpret=None`` resolves through
+    `kernels.ops.resolve_interpret` — compiled Pallas on TPU, interpret
+    emulation elsewhere or by explicit request — so serving is NOT
+    pinned to interpret mode. ``dispatch`` picks the CSR
+    query path: "ragged" (one megakernel launch per flush, the default) or
+    "bucket_pair" (the per-bucket-pair oracle loop). The same stack serves
+    profile (staircase) queries — `WCSDServer.submit_profile` needs no
+    extra configuration; its level count comes from the index."""
 
     backend: str = "sharded"          # "device" | "sharded"
     layout: str = "csr"               # "padded" | "csr"
+    dispatch: str = "ragged"          # "ragged" | "bucket_pair"
     use_pallas: bool = False
-    interpret: bool = True            # False on real TPUs
+    interpret: bool | None = None     # auto: compiled on TPU, else interpret
     max_batch: int = 1024
     memo_capacity: int = 65536
     undirected: bool = True
@@ -43,6 +48,7 @@ class ServeConfig:
 
     def server_kwargs(self) -> dict:
         return dict(backend=self.backend, layout=self.layout,
+                    dispatch=self.dispatch,
                     use_pallas=self.use_pallas, interpret=self.interpret,
                     max_batch=self.max_batch,
                     memo_capacity=self.memo_capacity,
@@ -52,8 +58,10 @@ class ServeConfig:
 
 
 def serve_config() -> ServeConfig:
-    """Production shape: compiled kernels, CSR store, sharded batch."""
-    return ServeConfig(use_pallas=True, interpret=False, max_batch=4096)
+    """Production shape: compiled kernels (interpret auto-resolves False on
+    accelerators), CSR store, ragged single-launch dispatch, sharded
+    batch."""
+    return ServeConfig(use_pallas=True, max_batch=4096)
 
 
 def smoke_serve_config() -> ServeConfig:

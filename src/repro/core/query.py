@@ -1,12 +1,17 @@
 """Device-side batched WCSD query engine.
 
-The serving hot path: given padded label arrays resident on device, answer
-batches of (s, t, w_level) queries. Three implementations:
+The serving hot path: given device-resident labels, answer batches of
+(s, t, w_level) queries. Implementations:
 
   - `query_batch_jnp`: pure-jnp masked outer join (oracle; also what the XLA
     fallback runs when Pallas is unavailable).
   - `kernels.ops.wcsd_query`: the Pallas TPU kernel (VMEM-tiled).
   - `WCIndex.query_one`: host sort-merge (paper Alg. 5), for tiny workloads.
+  - the CSR layout's ragged megakernel path (default): ONE launch per flush
+    over the lane-tiled `LabelArena`, batch plan = a device-emitted
+    tile-pair worklist (`emit_ragged_worklist`) — the bucket-pair dispatch
+    loop survives as `dispatch="bucket_pair"`, the differential oracle.
+    See docs/query-engine.md for the dispatch-cost model.
 
 Distribution (`ShardedQueryEngine`): queries are embarrassingly parallel ->
 shard the batch axis over ("data",) / ("pod", "data") and replicate the
@@ -155,8 +160,8 @@ class QuerySubBatch:
     positions: np.ndarray  # [n] indices into the original batch
 
 
-def plan_query_batch(bucket_of: np.ndarray, s: np.ndarray, t: np.ndarray
-                     ) -> list[QuerySubBatch]:
+def plan_query_batch(bucket_of: np.ndarray, s: np.ndarray, t: np.ndarray,
+                     num_buckets: int | None = None) -> list[QuerySubBatch]:
     """Group a (s, t) batch by the (bucket(s), bucket(t)) pair.
 
     The dense path pays ``B * cap^2`` hub compares where cap is the *global*
@@ -166,11 +171,18 @@ def plan_query_batch(bucket_of: np.ndarray, s: np.ndarray, t: np.ndarray
     almost every query lands in the smallest bucket pair. Sub-batches come
     back in a deterministic (bucket_s, bucket_t) order and their position
     arrays partition ``arange(len(s))``.
+
+    ``num_buckets``: pass the store's bucket count (the engines cache it)
+    to skip the O(V) ``bucket_of.max()`` scan this planner otherwise pays
+    on EVERY flush.
     """
     bucket_of = np.asarray(bucket_of)
     bs = bucket_of[np.asarray(s)]
     bt = bucket_of[np.asarray(t)]
-    nb = int(bucket_of.max()) + 1 if len(bucket_of) else 1
+    if num_buckets is not None:
+        nb = int(num_buckets)
+    else:
+        nb = int(bucket_of.max()) + 1 if len(bucket_of) else 1
     key = bs.astype(np.int64) * nb + bt
     order = np.argsort(key, kind="stable")
     uniq, starts = np.unique(key[order], return_index=True)
@@ -178,6 +190,100 @@ def plan_query_batch(bucket_of: np.ndarray, s: np.ndarray, t: np.ndarray
     return [QuerySubBatch(bucket_s=int(k // nb), bucket_t=int(k % nb),
                           positions=order[a:b])
             for k, a, b in zip(uniq, bounds[:-1], bounds[1:])]
+
+
+# -------------------------------------------------------- ragged dispatch
+@functools.partial(jax.jit, static_argnames=("worklist_len",))
+def emit_ragged_worklist(tile_base, tile_cnt, s, t, *, worklist_len: int):
+    """Device-side ragged plan: the flat (query, s_tile, t_tile) worklist.
+
+    Query q over rows with ``tile_cnt[s[q]]`` x ``tile_cnt[t[q]]`` arena
+    tiles owns that many consecutive work items (query-major via an
+    exclusive prefix sum — no wasted lanes on skewed length mixes, and the
+    megakernel's output row is revisited only consecutively). This IS the
+    batch plan, jitted: it replaces the per-flush host argsort/unique of
+    the bucket-pair planner, so the host contributes only the O(B)
+    worklist-capacity sum (`ragged_worklist_len`).
+
+    Returns (qidx, stile, ttile, first), all int32 [worklist_len]. Work
+    items beyond the real total carry ``qidx == len(s)`` — the caller's
+    kernel output owns one trash row at that index — and tile 0 on both
+    sides. ``first`` marks each output row's first work item (kernel-side
+    DEV_INF init), including the trash row's.
+    """
+    Q = s.shape[0]
+    ts = tile_cnt[s].astype(jnp.int32)
+    tt = tile_cnt[t].astype(jnp.int32)
+    c = ts * tt                                            # [Q] >= 1
+    cum = jnp.cumsum(c)
+    k = jnp.arange(worklist_len, dtype=jnp.int32)
+    qidx = jnp.searchsorted(cum, k, side="right").astype(jnp.int32)
+    qc = jnp.minimum(qidx, Q - 1)                          # clamp for pads
+    local = k - (cum[qc] - c[qc])
+    pad = qidx >= Q
+    stile = jnp.where(pad, 0, tile_base[s[qc]] + local // tt[qc])
+    ttile = jnp.where(pad, 0, tile_base[t[qc]] + local % tt[qc])
+    first = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32),
+         (qidx[1:] != qidx[:-1]).astype(jnp.int32)])
+    return qidx, stile, ttile, first
+
+
+def ragged_worklist_len(tile_cnt: np.ndarray, s: np.ndarray, t: np.ndarray
+                        ) -> int:
+    """Host-side worklist capacity: the total tile-pair count of the batch,
+    rounded to the next power of two (compiled-shape count stays
+    logarithmic). O(B) gather + sum — the ONLY per-flush host arithmetic
+    left on the ragged path."""
+    total = int(tile_cnt[s].astype(np.int64) @ tile_cnt[t].astype(np.int64))
+    return round_to_pow2(total)
+
+
+@functools.partial(jax.jit, static_argnames=("worklist_len", "interpret",
+                                             "use_kernel"))
+def ragged_query_batch(hub, dist, wlev, tile_lo, tile_hi,
+                       tile_base, tile_cnt, stq, *, worklist_len: int,
+                       interpret: bool = True, use_kernel: bool = True):
+    """Plan + launch, fused into ONE device call: emit the worklist from
+    the staged queries and answer every query with a single ragged kernel
+    launch.
+
+    hub..tile_cnt: the `LabelArena` arrays; stq: [3, Q] staged
+    (s, t, w_level) — one H2D transfer carries the whole batch. Returns
+    [Q] int32 distances (INF_DIST when no feasible path); pad queries
+    should carry an infeasible level and are the caller's to discard."""
+    from ..kernels import ops as kops
+    s, t, wl = stq[0], stq[1], stq[2]
+    qidx, stile, ttile, first = emit_ragged_worklist(
+        tile_base, tile_cnt, s, t, worklist_len=worklist_len)
+    # one trash output row for worklist pads; no stored wlev reaches 2^20,
+    # so its level is infeasible at every entry
+    wq = jnp.concatenate([wl, jnp.full((1,), 1 << 20, jnp.int32)])
+    out = kops.wcsd_query_ragged(hub, dist, wlev, tile_lo, tile_hi,
+                                 qidx, stile, ttile, first, wq,
+                                 interpret=interpret, use_kernel=use_kernel)
+    return out[: s.shape[0]]
+
+
+@functools.partial(jax.jit, static_argnames=("worklist_len", "num_levels",
+                                             "interpret", "use_kernel"))
+def ragged_profile_batch(hub, dist, wlev, tile_lo, tile_hi,
+                         tile_base, tile_cnt, stq, *, worklist_len: int,
+                         num_levels: int, interpret: bool = True,
+                         use_kernel: bool = True):
+    """Profile twin of `ragged_query_batch`: stq is [2, Q] staged (s, t);
+    every constraint level of every query is answered by the one launch.
+    Returns [Q, num_levels + 1] staircases."""
+    from ..kernels import ops as kops
+    s, t = stq[0], stq[1]
+    qidx, stile, ttile, first = emit_ragged_worklist(
+        tile_base, tile_cnt, s, t, worklist_len=worklist_len)
+    out = kops.wcsd_profile_ragged(hub, dist, wlev, tile_lo, tile_hi,
+                                   qidx, stile, ttile, first,
+                                   num_rows=int(s.shape[0]) + 1,
+                                   num_levels=num_levels,
+                                   interpret=interpret, use_kernel=use_kernel)
+    return out[: s.shape[0]]
 
 
 class PendingResult:
@@ -200,17 +306,18 @@ class PendingResult:
 
 
 def _pad_sub_batch(slot_of, num_levels, pos, s, t, w_level, npad):
-    """(srow, trow, wq) arrays for one planned sub-batch, padded to ``npad``
-    with slot 0 at query level num_levels + 1 — infeasible at any stored
-    wlev, so pad lanes compute INF and are discarded."""
+    """One planned sub-batch as a single [3, npad] staging array stacking
+    (srow, trow, wq) — ONE H2D transfer instead of three; the device side
+    unpacks in-jit (`ops.wcsd_query_segmented_staged`). Pads point at slot
+    0 with query level num_levels + 1 — infeasible at any stored wlev, so
+    pad lanes compute INF and are discarded."""
     n = len(pos)
-    srow = np.zeros(npad, dtype=np.int32)
-    trow = np.zeros(npad, dtype=np.int32)
-    wq = np.full(npad, num_levels + 1, dtype=np.int32)
-    srow[:n] = slot_of[s[pos]]
-    trow[:n] = slot_of[t[pos]]
-    wq[:n] = w_level[pos]
-    return srow, trow, wq
+    stq = np.zeros((3, npad), dtype=np.int32)
+    stq[2, :] = num_levels + 1
+    stq[0, :n] = slot_of[s[pos]]
+    stq[1, :n] = slot_of[t[pos]]
+    stq[2, :n] = w_level[pos]
+    return stq
 
 
 def _build_padded_store(idx, cap, lane_pad: bool):
@@ -230,23 +337,23 @@ class _QueryEngineBase:
     """Shared engine plumbing: the host-side bucket-pair plan / pad /
     dispatch / assemble loop of the CSR layout, and quality-threshold
     canonicalization. Subclasses provide ``_bucket_of`` / ``_slot_of`` /
-    ``num_levels`` and a per-sub-batch dispatch."""
+    ``num_buckets`` / ``num_levels`` and a per-sub-batch dispatch."""
 
     def _plan_segmented(self, s, t, w_level, pad_len, dispatch
                         ) -> PendingResult:
-        """Plan on host, dispatch each sub-batch (padded to ``pad_len(n)``)
-        via ``dispatch(sub, srow, trow, wq)``; materialization of every
-        sub-result is deferred to `wait()`."""
+        """Plan on host, dispatch each sub-batch (padded to ``pad_len(n)``,
+        staged as one [3, npad] array) via ``dispatch(sub, stq)``;
+        materialization of every sub-result is deferred to `wait()`."""
         s = np.asarray(s, np.int32)
         t = np.asarray(t, np.int32)
         w_level = np.asarray(w_level, np.int32)
         parts = []
-        for sub in plan_query_batch(self._bucket_of, s, t):
+        for sub in plan_query_batch(self._bucket_of, s, t,
+                                    num_buckets=self.num_buckets):
             pos = sub.positions
-            srow, trow, wq = _pad_sub_batch(self._slot_of, self.num_levels,
-                                            pos, s, t, w_level,
-                                            pad_len(len(pos)))
-            parts.append((pos, dispatch(sub, srow, trow, wq)))
+            stq = _pad_sub_batch(self._slot_of, self.num_levels,
+                                 pos, s, t, w_level, pad_len(len(pos)))
+            parts.append((pos, dispatch(sub, stq)))
 
         def assemble():
             out = np.full(len(s), INF_DIST, dtype=np.int32)
@@ -257,20 +364,21 @@ class _QueryEngineBase:
 
     def _plan_profile(self, s, t, pad_len, dispatch) -> PendingResult:
         """Profile variant of `_plan_segmented`: no per-query level — every
-        level is answered by the one sweep — so sub-batches carry only row
-        ids (pads point at slot 0 and are sliced off on assembly) and
-        assembly scatters [n, W + 1] staircases into the batch order."""
+        level is answered by the one sweep — so the [2, npad] staging array
+        carries only row ids (pads point at slot 0 and are sliced off on
+        assembly) and assembly scatters [n, W + 1] staircases into the
+        batch order."""
         s = np.asarray(s, np.int32)
         t = np.asarray(t, np.int32)
         parts = []
-        for sub in plan_query_batch(self._bucket_of, s, t):
+        for sub in plan_query_batch(self._bucket_of, s, t,
+                                    num_buckets=self.num_buckets):
             pos = sub.positions
             n = len(pos)
-            srow = np.zeros(pad_len(n), dtype=np.int32)
-            trow = np.zeros(pad_len(n), dtype=np.int32)
-            srow[:n] = self._slot_of[s[pos]]
-            trow[:n] = self._slot_of[t[pos]]
-            parts.append((pos, dispatch(sub, srow, trow)))
+            stq = np.zeros((2, pad_len(n)), dtype=np.int32)
+            stq[0, :n] = self._slot_of[s[pos]]
+            stq[1, :n] = self._slot_of[t[pos]]
+            parts.append((pos, dispatch(sub, stq)))
 
         def assemble():
             out = np.full((len(s), self.num_levels + 1), INF_DIST,
@@ -279,6 +387,25 @@ class _QueryEngineBase:
                 out[pos] = np.asarray(res)[:len(pos)]
             return out
         return PendingResult(assemble)
+
+    # ----------------------------------------------------- ragged dispatch
+    def _stage_ragged(self, s, t, w_level=None):
+        """Staged query array for one ragged flush: queries padded by the
+        engine's batch rule, stacked into one [3 or 2, Q] H2D staging
+        array. Pad lanes use the arena's minimal-tile-count vertex at an
+        infeasible level — a hub-heavy vertex 0 must not cost every pad
+        lane its tile count squared in worklist items."""
+        n = len(s)
+        Q = self._ragged_pad(n)
+        if w_level is not None:
+            stq = np.full((3, Q), self._pad_vertex, dtype=np.int32)
+            stq[2, :] = self.num_levels + 1
+            stq[2, :n] = w_level
+        else:
+            stq = np.full((2, Q), self._pad_vertex, dtype=np.int32)
+        stq[0, :n] = s
+        stq[1, :n] = t
+        return stq
 
     def query_from_quality(self, s, t, w: np.ndarray, levels: np.ndarray):
         """Real-valued thresholds -> levels (exact canonicalization)."""
@@ -291,36 +418,64 @@ class DeviceQueryEngine(_QueryEngineBase):
 
     layout="padded": one [V, cap] store, every query pays the global-max
     label width (kernel: `wcsd_query_gathered`).
-    layout="csr": the CSR-packed store's length-bucketed tiles; batches are
-    split by `plan_query_batch` and each sub-batch runs the segmented
-    kernel shaped for its own bucket pair (`wcsd_query_segmented`).
+    layout="csr": the CSR-packed store, two dispatch modes:
+
+      dispatch="ragged" (default): the whole batch — every bucket mix —
+      runs as ONE kernel launch over the lane-tiled `LabelArena`; the
+      batch plan is a device-emitted tile-pair worklist
+      (`emit_ragged_worklist`), no host argsort/unique per flush.
+      dispatch="bucket_pair": the original per-(bucket_s, bucket_t)
+      dispatch loop (`plan_query_batch` + `wcsd_query_segmented`), kept as
+      the ragged path's differential oracle.
 
     ``idx`` may be a padded `WCIndex` or a `PackedWCIndex` from the
     device-resident batched builder; for the latter the csr layout adopts
     the already-packed store as-is (`idx.packed()` is the store itself —
     no repack between construction and serving).
+
+    ``interpret=None`` resolves via `kernels.ops.resolve_interpret`:
+    compiled kernels on TPU (the only backend that lowers these Mosaic
+    kernels), interpret emulation elsewhere or by explicit request.
     """
 
     def __init__(self, idx: WCIndex | PackedWCIndex, cap: int | None = None,
-                 use_pallas: bool = False, interpret: bool = True,
-                 layout: str = "padded"):
+                 use_pallas: bool = False, interpret: bool | None = None,
+                 layout: str = "padded", dispatch: str = "ragged",
+                 lane: int | None = None):
+        from ..kernels.ops import resolve_interpret
         if layout not in ("padded", "csr"):
             raise ValueError(f"unknown layout: {layout!r}")
+        if dispatch not in ("ragged", "bucket_pair"):
+            raise ValueError(f"unknown dispatch: {dispatch!r}")
         if layout == "csr" and cap is not None:
             raise ValueError("cap (label-row trimming) only applies to the "
                              "padded layout; the CSR store keeps exact rows")
         self.layout = layout
         self.use_pallas = use_pallas
-        self.interpret = interpret
+        self.interpret = resolve_interpret(interpret)
         self.num_levels = idx.num_levels
         if layout == "csr":
-            packed = idx.packed()
+            from .wc_index import LANE
+            lane = LANE if lane is None else int(lane)
+            packed = idx.packed(lane=lane)
             self.packed = packed
+            self.dispatch = dispatch
             self._bucket_of = packed.bucket_of
             self._slot_of = packed.slot_of
-            self._tiles = [tuple(jnp.asarray(a) for a in packed.bucket_tiles(b))
-                           for b in range(packed.num_buckets)]
+            self.num_buckets = packed.num_buckets
+            if dispatch == "ragged":
+                ar = packed.arena(lane=lane)
+                self._tile_cnt_np = ar.tile_cnt
+                self._pad_vertex = int(np.argmin(ar.tile_cnt))
+                self._arena = tuple(jnp.asarray(a) for a in (
+                    ar.hub, ar.dist, ar.wlev, ar.tile_lo, ar.tile_hi,
+                    ar.tile_base, ar.tile_cnt))
+            else:
+                self._tiles = [tuple(jnp.asarray(a)
+                                     for a in packed.bucket_tiles(b))
+                               for b in range(packed.num_buckets)]
             return
+        self.dispatch = "dense"
         h, d, w, c = _build_padded_store(idx, cap, lane_pad=use_pallas)
         self.hub = jnp.asarray(h)
         self.dist = jnp.asarray(d)
@@ -339,6 +494,8 @@ class DeviceQueryEngine(_QueryEngineBase):
         done and every device call issued when this returns; `wait()` on
         the handle syncs."""
         if self.layout == "csr":
+            if self.dispatch == "ragged":
+                return self._query_ragged_async(s, t, w_level)
             return self._query_segmented_async(s, t, w_level)
         res = self._query_dense(s, t, w_level)
         return PendingResult(lambda: res)
@@ -354,15 +511,29 @@ class DeviceQueryEngine(_QueryEngineBase):
         return query_batch_jnp(self.hub, self.dist, self.wlev, self.count,
                                s, t, w_level)
 
+    _ragged_pad = staticmethod(round_to_pow2)
+
+    def _query_ragged_async(self, s, t, w_level) -> PendingResult:
+        s = np.asarray(s, np.int32)
+        t = np.asarray(t, np.int32)
+        w_level = np.asarray(w_level, np.int32)
+        n = len(s)
+        stq = self._stage_ragged(s, t, w_level)
+        wl_len = ragged_worklist_len(self._tile_cnt_np, stq[0], stq[1])
+        res = ragged_query_batch(*self._arena, jnp.asarray(stq),
+                                 worklist_len=wl_len,
+                                 interpret=self.interpret,
+                                 use_kernel=self.use_pallas)
+        return PendingResult(lambda: np.asarray(res)[:n])
+
     def _query_segmented_async(self, s, t, w_level) -> PendingResult:
         from ..kernels import ops as kops
 
-        def dispatch(sub, srow, trow, wq):
+        def dispatch(sub, stq):
             hs, ds, ws = self._tiles[sub.bucket_s]
             ht, dt, wt = self._tiles[sub.bucket_t]
-            return kops.wcsd_query_segmented(
-                hs, ds, ws, ht, dt, wt,
-                jnp.asarray(srow), jnp.asarray(trow), jnp.asarray(wq),
+            return kops.wcsd_query_segmented_staged(
+                hs, ds, ws, ht, dt, wt, jnp.asarray(stq),
                 interpret=self.interpret, use_kernel=self.use_pallas)
 
         # pad sub-batches to the next power of two: the compiled kernel
@@ -379,6 +550,8 @@ class DeviceQueryEngine(_QueryEngineBase):
 
     def query_profile_async(self, s, t) -> PendingResult:
         if self.layout == "csr":
+            if self.dispatch == "ragged":
+                return self._profile_ragged_async(s, t)
             return self._profile_segmented_async(s, t)
         res = self._profile_dense(s, t)
         return PendingResult(lambda: res)
@@ -392,15 +565,27 @@ class DeviceQueryEngine(_QueryEngineBase):
         return profile_batch_jnp(self.hub, self.dist, self.wlev, self.count,
                                  s, t, num_levels=self.num_levels)
 
+    def _profile_ragged_async(self, s, t) -> PendingResult:
+        s = np.asarray(s, np.int32)
+        t = np.asarray(t, np.int32)
+        n = len(s)
+        stq = self._stage_ragged(s, t)
+        wl_len = ragged_worklist_len(self._tile_cnt_np, stq[0], stq[1])
+        res = ragged_profile_batch(*self._arena, jnp.asarray(stq),
+                                   worklist_len=wl_len,
+                                   num_levels=self.num_levels,
+                                   interpret=self.interpret,
+                                   use_kernel=self.use_pallas)
+        return PendingResult(lambda: np.asarray(res)[:n])
+
     def _profile_segmented_async(self, s, t) -> PendingResult:
         from ..kernels import ops as kops
 
-        def dispatch(sub, srow, trow):
+        def dispatch(sub, stq):
             hs, ds, ws = self._tiles[sub.bucket_s]
             ht, dt, wt = self._tiles[sub.bucket_t]
-            return kops.wcsd_profile_segmented(
-                hs, ds, ws, ht, dt, wt,
-                jnp.asarray(srow), jnp.asarray(trow),
+            return kops.wcsd_profile_segmented_staged(
+                hs, ds, ws, ht, dt, wt, jnp.asarray(stq),
                 num_levels=self.num_levels,
                 interpret=self.interpret, use_kernel=self.use_pallas)
 
@@ -416,9 +601,13 @@ class ShardedQueryEngine(_QueryEngineBase):
     mode="replicated" (default): every device holds the full label store
     (`NamedSharding` with an all-`None` spec) and answers its slice of the
     batch under `shard_map` — zero per-query communication, linear
-    throughput scaling. layout="csr" keeps the host-side bucket-pair
-    planner: each planned sub-batch is padded to a device multiple and the
-    segmented scalar-prefetch kernel runs inside `shard_map`.
+    throughput scaling. layout="csr" defaults to the ragged megakernel
+    (dispatch="ragged"): the arena is replicated, the staged batch splits
+    over the mesh, and each device emits + launches the worklist of its
+    own slice — one kernel launch per device per flush, no host planner.
+    dispatch="bucket_pair" keeps the host-side planner: each planned
+    sub-batch is padded to a device multiple and the segmented
+    scalar-prefetch kernel runs inside `shard_map`.
 
     mode="sharded_labels": when the store exceeds ``device_budget_bytes``,
     label tiles shard their vertex/row axis over the same devices in
@@ -438,13 +627,18 @@ class ShardedQueryEngine(_QueryEngineBase):
 
     def __init__(self, idx: WCIndex | PackedWCIndex, mesh=None,
                  cap: int | None = None, use_pallas: bool = False,
-                 interpret: bool = True, layout: str = "csr",
+                 interpret: bool | None = None, layout: str = "csr",
                  device_budget_bytes: int | None = None,
-                 multi_pod: bool = False):
+                 multi_pod: bool = False, dispatch: str = "ragged",
+                 lane: int | None = None):
         from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from ..kernels.ops import resolve_interpret
 
         if layout not in ("padded", "csr"):
             raise ValueError(f"unknown layout: {layout!r}")
+        if dispatch not in ("ragged", "bucket_pair"):
+            raise ValueError(f"unknown dispatch: {dispatch!r}")
         if layout == "csr" and cap is not None:
             raise ValueError("cap (label-row trimming) only applies to the "
                              "padded layout; the CSR store keeps exact rows")
@@ -460,7 +654,7 @@ class ShardedQueryEngine(_QueryEngineBase):
         self.ndev = int(np.prod([mesh.shape[a] for a in self.batch_axes]))
         self.layout = layout
         self.use_pallas = use_pallas
-        self.interpret = interpret
+        self.interpret = resolve_interpret(interpret)
         self.num_levels = idx.num_levels
         self._P = P
         self._qspec = P(self.batch_axes)
@@ -472,10 +666,13 @@ class ShardedQueryEngine(_QueryEngineBase):
         self._fns: dict = {}  # jitted shard_map callables, one per path
 
         if layout == "csr":
-            packed = idx.packed()
+            from .wc_index import LANE
+            lane = LANE if lane is None else int(lane)
+            packed = idx.packed(lane=lane)
             self.packed = packed
             self._bucket_of = packed.bucket_of
             self._slot_of = packed.slot_of
+            self.num_buckets = packed.num_buckets
             self.store_bytes_per_device = packed.tile_memory_bytes()
         else:
             h, d, w, c = _build_padded_store(idx, cap, lane_pad=use_pallas)
@@ -488,17 +685,38 @@ class ShardedQueryEngine(_QueryEngineBase):
         if self.mode == "sharded_labels":
             self.store_bytes_per_device = ceil_to(
                 self.store_bytes_per_device, self.ndev) // self.ndev
+        # the ragged megakernel reads the whole arena, so it requires the
+        # replicated placement; the vertex/row-sharded store falls back to
+        # the bucket-pair dispatch loop (whose row gathers the reduce-
+        # scatter collective was built for). The padded layout has no
+        # dispatch choice (one dense store, one path).
+        if layout == "csr":
+            self.dispatch = (dispatch if self.mode == "replicated"
+                             else "bucket_pair")
+        else:
+            self.dispatch = "dense"
 
         rep = NamedSharding(mesh, P(*(None, None)))
         if layout == "csr":
-            self._tiles = []
-            for b in range(packed.num_buckets):
-                tiles = packed.bucket_tiles(b)
-                if self.mode == "sharded_labels":
-                    tiles = self._shard_tile_rows(tiles)
-                else:
-                    tiles = tuple(jax.device_put(a, rep) for a in tiles)
-                self._tiles.append(tiles)
+            if self.dispatch == "ragged":
+                ar = packed.arena(lane=lane)
+                self._tile_cnt_np = ar.tile_cnt
+                self._pad_vertex = int(np.argmin(ar.tile_cnt))
+                rep1 = NamedSharding(mesh, P(None))
+                self._arena = tuple(
+                    jax.device_put(a, rep if a.ndim == 2 else rep1)
+                    for a in (ar.hub, ar.dist, ar.wlev, ar.tile_lo,
+                              ar.tile_hi, ar.tile_base, ar.tile_cnt))
+                self.store_bytes_per_device = ar.memory_bytes()
+            else:
+                self._tiles = []
+                for b in range(packed.num_buckets):
+                    tiles = packed.bucket_tiles(b)
+                    if self.mode == "sharded_labels":
+                        tiles = self._shard_tile_rows(tiles)
+                    else:
+                        tiles = tuple(jax.device_put(a, rep) for a in tiles)
+                    self._tiles.append(tiles)
         elif self.mode == "sharded_labels":
             (self.hub, self.dist, self.wlev), self.count, self._rows_per = \
                 self._shard_store_rows((h, d, w), c)
@@ -568,6 +786,15 @@ class ShardedQueryEngine(_QueryEngineBase):
               else self._qsharding)
         return (jax.device_put(a, sh) for a in arrays)
 
+    def _put_staged(self, stq):
+        """Place one [k, npad] staging array: the query axis (axis 1)
+        sharded over the batch axes in replicated mode, fully replicated
+        in sharded_labels mode (every shard scores the full row-id list)."""
+        from jax.sharding import NamedSharding
+        spec = (self._P(None, None) if self.mode == "sharded_labels"
+                else self._P(None, self.batch_axes))
+        return jax.device_put(stq, NamedSharding(self.mesh, spec))
+
     # ---- padded layout
     def _dispatch_padded(self, s, t, w_level):
         """Dispatch one dense batch; returns (device result [npad], n)."""
@@ -608,10 +835,8 @@ class ShardedQueryEngine(_QueryEngineBase):
                 # row-id list against its row block and a reduce-scatter
                 # leaves each shard the gathered rows of its batch slice
                 from ..distributed.collectives import (
-                    axis_linear_index, row_gather_psum_scatter)
-                b_loc = s.shape[0] // ndev
-                wq_loc = jax.lax.dynamic_slice_in_dim(
-                    wq, axis_linear_index(axes) * b_loc, b_loc)
+                    batch_slice, row_gather_psum_scatter)
+                wq_loc = batch_slice(wq, axes, s.shape[0] // ndev)
 
                 def side(v):
                     h = row_gather_psum_scatter(hub, v, axes, rows_per)
@@ -638,15 +863,66 @@ class ShardedQueryEngine(_QueryEngineBase):
 
     # ---- csr layout
     def _query_csr_async(self, s, t, w_level) -> PendingResult:
+        if self.dispatch == "ragged":
+            return self._query_ragged_async(s, t, w_level)
         fn = self._segmented_fn()
 
-        def dispatch(sub, srow, trow, wq):
+        def dispatch(sub, stq):
             hs, ds, ws = self._tiles[sub.bucket_s]
             ht, dt, wt = self._tiles[sub.bucket_t]
-            return fn(hs, ds, ws, ht, dt, wt,
-                      *self._put_queries(srow, trow, wq))
+            return fn(hs, ds, ws, ht, dt, wt, self._put_staged(stq))
 
         return self._plan_segmented(s, t, w_level, self._batch_pad, dispatch)
+
+    def _ragged_pad(self, n: int) -> int:
+        return self._batch_pad(n)
+
+    def _shard_worklist_len(self, stq) -> int:
+        """Per-shard worklist capacity: each shard plans its own contiguous
+        batch slice inside shard_map, so the static capacity is the max
+        over shards' tile-pair totals."""
+        b_loc = stq.shape[1] // self.ndev
+        return max(ragged_worklist_len(
+            self._tile_cnt_np, stq[0, k * b_loc:(k + 1) * b_loc],
+            stq[1, k * b_loc:(k + 1) * b_loc]) for k in range(self.ndev))
+
+    def _query_ragged_async(self, s, t, w_level) -> PendingResult:
+        n = len(s)
+        stq = self._stage_ragged(s, t, w_level)
+        fn = self._ragged_fn(self._shard_worklist_len(stq), profile=False)
+        res = fn(*self._arena, self._put_staged(stq))
+        return PendingResult(lambda: np.asarray(res)[:n])
+
+    def _ragged_fn(self, worklist_len: int, profile: bool):
+        """Jitted shard_map over `ragged_query_batch` / the profile twin:
+        the arena replicated, the staged batch split over the batch axes,
+        each shard emitting + launching its own slice's worklist — still
+        exactly one kernel launch per device per flush."""
+        key = ("csr-ragged", profile, worklist_len)
+        if key in self._fns:
+            return self._fns[key]
+        P, q = self._P, self._qspec
+        use_pallas, interpret = self.use_pallas, self.interpret
+        W = self.num_levels
+
+        if profile:
+            def local(hub, dist, wlev, lo, hi, tbase, tcnt, stq):
+                return ragged_profile_batch(
+                    hub, dist, wlev, lo, hi, tbase, tcnt, stq,
+                    worklist_len=worklist_len, num_levels=W,
+                    interpret=interpret, use_kernel=use_pallas)
+        else:
+            def local(hub, dist, wlev, lo, hi, tbase, tcnt, stq):
+                return ragged_query_batch(
+                    hub, dist, wlev, lo, hi, tbase, tcnt, stq,
+                    worklist_len=worklist_len,
+                    interpret=interpret, use_kernel=use_pallas)
+
+        in_specs = (P(None, None),) * 3 + (P(None),) * 4 \
+            + (P(None, self.batch_axes),)
+        fn = jax.jit(shard_map_compat(local, self.mesh, in_specs, q))
+        self._fns[key] = fn
+        return fn
 
     def _segmented_fn(self):
         key = ("csr", self.mode)
@@ -656,24 +932,24 @@ class ShardedQueryEngine(_QueryEngineBase):
         if self.mode == "replicated":
             use_pallas, interpret = self.use_pallas, self.interpret
 
-            def local(hs, ds, ws, ht, dt, wt, srow, trow, wq):
+            def local(hs, ds, ws, ht, dt, wt, stq):
                 from ..kernels import ops as kops
-                return kops.wcsd_query_segmented(
-                    hs, ds, ws, ht, dt, wt, srow, trow, wq,
+                return kops.wcsd_query_segmented_staged(
+                    hs, ds, ws, ht, dt, wt, stq,
                     interpret=interpret, use_kernel=use_pallas)
 
             tile = P(None, None)
+            qspec = P(None, self.batch_axes)
         else:
             axes, ndev = self.batch_axes, self.ndev
 
-            def local(hs, ds, ws, ht, dt, wt, srow, trow, wq):
+            def local(hs, ds, ws, ht, dt, wt, stq):
                 # replicated row ids + reduce-scatter, as in the padded
                 # sharded-labels path; tiles are row-sharded per bucket
                 from ..distributed.collectives import (
-                    axis_linear_index, row_gather_psum_scatter)
-                b_loc = srow.shape[0] // ndev
-                wq_loc = jax.lax.dynamic_slice_in_dim(
-                    wq, axis_linear_index(axes) * b_loc, b_loc)
+                    batch_slice, row_gather_psum_scatter)
+                srow, trow, wq = stq[0], stq[1], stq[2]
+                wq_loc = batch_slice(wq, axes, srow.shape[0] // ndev)
 
                 def side(h, d, w, rows):
                     per = h.shape[0]  # local row-block height
@@ -694,8 +970,8 @@ class ShardedQueryEngine(_QueryEngineBase):
                                  best).astype(jnp.int32)
 
             tile = P(self.batch_axes, None)
-        in_specs = (tile,) * 6 + ((q,) * 3 if self.mode == "replicated"
-                                  else (P(None),) * 3)
+            qspec = P(None, None)
+        in_specs = (tile,) * 6 + (qspec,)
         fn = jax.jit(shard_map_compat(local, self.mesh, in_specs, q))
         self._fns[key] = fn
         return fn
@@ -711,16 +987,24 @@ class ShardedQueryEngine(_QueryEngineBase):
         s = np.asarray(s, np.int32)
         t = np.asarray(t, np.int32)
         if self.layout == "csr":
+            if self.dispatch == "ragged":
+                return self._profile_ragged_async(s, t)
             fn = self._profile_segmented_fn()
 
-            def dispatch(sub, srow, trow):
+            def dispatch(sub, stq):
                 hs, ds, ws = self._tiles[sub.bucket_s]
                 ht, dt, wt = self._tiles[sub.bucket_t]
-                return fn(hs, ds, ws, ht, dt, wt,
-                          *self._put_queries(srow, trow))
+                return fn(hs, ds, ws, ht, dt, wt, self._put_staged(stq))
 
             return self._plan_profile(s, t, self._batch_pad, dispatch)
         res, n = self._dispatch_padded_profile(s, t)
+        return PendingResult(lambda: np.asarray(res)[:n])
+
+    def _profile_ragged_async(self, s, t) -> PendingResult:
+        n = len(s)
+        stq = self._stage_ragged(s, t)
+        fn = self._ragged_fn(self._shard_worklist_len(stq), profile=True)
+        res = fn(*self._arena, self._put_staged(stq))
         return PendingResult(lambda: np.asarray(res)[:n])
 
     def _dispatch_padded_profile(self, s, t):
@@ -782,22 +1066,24 @@ class ShardedQueryEngine(_QueryEngineBase):
         if self.mode == "replicated":
             use_pallas, interpret = self.use_pallas, self.interpret
 
-            def local(hs, ds, ws, ht, dt, wt, srow, trow):
+            def local(hs, ds, ws, ht, dt, wt, stq):
                 from ..kernels import ops as kops
-                return kops.wcsd_profile_segmented(
-                    hs, ds, ws, ht, dt, wt, srow, trow, num_levels=W,
+                return kops.wcsd_profile_segmented_staged(
+                    hs, ds, ws, ht, dt, wt, stq, num_levels=W,
                     interpret=interpret, use_kernel=use_pallas)
 
             tile = P(None, None)
+            qspec = P(None, self.batch_axes)
         else:
             axes = self.batch_axes
 
-            def local(hs, ds, ws, ht, dt, wt, srow, trow):
+            def local(hs, ds, ws, ht, dt, wt, stq):
                 # row-sharded bucket tiles: one fused reduce-scatter per
                 # side gathers (hub, dist, wlev) rows; store pads carry
                 # wlev = -1 and fall below every staircase bucket
                 from ..distributed.collectives import (
                     multi_row_gather_psum_scatter)
+                srow, trow = stq[0], stq[1]
 
                 def side(h, d, w, rows):
                     hg, dg, wg = multi_row_gather_psum_scatter(
@@ -808,8 +1094,8 @@ class ShardedQueryEngine(_QueryEngineBase):
                                             *side(ht, dt, wt, trow), W)
 
             tile = P(self.batch_axes, None)
-        in_specs = (tile,) * 6 + ((q,) * 2 if self.mode == "replicated"
-                                  else (P(None),) * 2)
+            qspec = P(None, None)
+        in_specs = (tile,) * 6 + (qspec,)
         fn = jax.jit(shard_map_compat(local, self.mesh, in_specs, q))
         self._fns[key] = fn
         return fn

@@ -15,9 +15,12 @@ Production shape:
     reach the *compiled* kernels instead of being pinned to interpret mode.
   * double-buffered async flush — an auto-flush (hitting ``max_batch``)
     only *dispatches* the batch (`engine.query_async`); while the device
-    executes batch k, the host keeps accepting submissions and plans batch
-    k+1 (`plan_query_batch` for the CSR layout). At most one batch is in
-    flight; launching the next one (or any result()/flush()) drains it.
+    executes batch k, the host keeps accepting submissions for batch k+1.
+    On the default ragged dispatch the batch PLAN itself is computed on
+    device (`emit_ragged_worklist`), so a flush is host-plan-free; the
+    bucket-pair dispatch still plans on host (`plan_query_batch`). At most
+    one batch is in flight; launching the next one (or any
+    result()/flush()) drains it.
   * read-once results — `result(rid)` pops the delivered answer, so a
     long-running server's result dict stays bounded by what is queued or
     in flight instead of growing one entry per request forever. Callers
@@ -55,17 +58,22 @@ class WCSDServer:
     def __init__(self, idx: WCIndex | PackedWCIndex | None = None,
                  max_batch: int = 1024, use_pallas: bool = False,
                  memo_capacity: int = 65536, layout: str = "padded",
-                 undirected: bool = True, interpret: bool = True,
+                 undirected: bool = True, interpret: bool | None = None,
                  backend: str = "device", engine=None, mesh=None,
                  device_budget_bytes: int | None = None,
-                 multi_pod: bool = False):
-        # layout="csr" serves from the CSR-packed bucket tiles: each flush
-        # is planned by bucket pair and routed to the segmented kernel.
+                 multi_pod: bool = False, dispatch: str = "ragged"):
+        # layout="csr" serves from the CSR-packed store; dispatch="ragged"
+        # (default) answers each flush with ONE megakernel launch over the
+        # lane-tiled arena — flush_async is plan-free on host — while
+        # dispatch="bucket_pair" keeps the per-bucket-pair dispatch loop
+        # (the differential oracle).
         # A PackedWCIndex (device-resident batched builder output) is served
         # as-is under layout="csr" — no repack between build and serve.
         # undirected=False disables the symmetric (s <= t) memo
         # canonicalization for indices over directed graphs, where
         # d(s, t) != d(t, s) and the swap would alias distinct answers.
+        # interpret=None resolves via kernels.ops.resolve_interpret —
+        # compiled kernels on TPU, interpret emulation elsewhere.
         if engine is not None:
             self.engine = engine
         elif idx is None:
@@ -74,12 +82,12 @@ class WCSDServer:
         elif backend == "device":
             self.engine = DeviceQueryEngine(idx, use_pallas=use_pallas,
                                             interpret=interpret,
-                                            layout=layout)
+                                            layout=layout, dispatch=dispatch)
         elif backend == "sharded":
             self.engine = ShardedQueryEngine(
                 idx, mesh=mesh, use_pallas=use_pallas, interpret=interpret,
                 layout=layout, device_budget_bytes=device_budget_bytes,
-                multi_pod=multi_pod)
+                multi_pod=multi_pod, dispatch=dispatch)
         else:
             raise ValueError(f"unknown backend: {backend!r} "
                              "(expected 'device' or 'sharded')")

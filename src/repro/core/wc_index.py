@@ -296,6 +296,15 @@ class PackedLabels:
         n_b = np.array([len(m) for m in self.bucket_vertices], dtype=np.int64)
         return int((n_b * self.bucket_widths.astype(np.int64)).sum() * 12)
 
+    def arena(self, lane: int = LANE) -> "LabelArena":
+        """The lane-tiled flat arena view of this store (cached per lane) —
+        the single-buffer layout the ragged query megakernel reads; see
+        `LabelArena`."""
+        cache = self.__dict__.setdefault("_arena_cache", {})
+        if lane not in cache:
+            cache[lane] = LabelArena.from_packed(self, lane=lane)
+        return cache[lane]
+
     # ------------------------------------------------------------ conversions
     def bucket_tiles(self, b: int):
         """Bucket b as padded [n_b, W_b] (hub, dist, wlev) tiles.
@@ -345,6 +354,81 @@ class PackedLabels:
             dist[over, c - 1] = self.dist[last]
             wlev[over, c - 1] = self.wlev[last]
         return hub, dist, wlev, np.minimum(count, c).astype(np.int32)
+
+
+@dataclasses.dataclass
+class LabelArena:
+    """Lane-tiled flat label arena: the single-store layout behind the
+    ragged query megakernel (docs/query-engine.md).
+
+    Every CSR row is re-packed starting at a lane-aligned offset, so ANY
+    label row — whatever its length — is addressable as ``tile_cnt[v]``
+    whole ``[lane]`` tiles beginning at tile ``tile_base[v]``. One arena
+    replaces the per-bucket tile arrays: a batch of queries over arbitrary
+    bucket mixes becomes a flat ``(query, s_tile, t_tile)`` worklist over
+    these tiles and runs as ONE kernel launch (`kernels.wcsd_query.
+    wcsd_query_ragged`) instead of one launch per bucket pair.
+
+      hub/dist/wlev : [T, lane] int32 tiles, vertex rows back to back; the
+                      in-row pad cells (beyond the row length, inside its
+                      last tile) carry the §3 sentinel contract of
+                      docs/index-format.md: hub -1, dist INF_DIST, wlev -1.
+      tile_base     : [V] int32 — first tile of vertex v's row
+      tile_cnt      : [V] int32 — ``ceil(len(v) / lane)`` (>= 1)
+      tile_lo/hi    : [T] int32 — min/max real hub rank inside each tile.
+                      Rows are hub-sorted (invariant I1), so a tile's hub
+                      span is an interval; two tiles whose intervals are
+                      disjoint cannot meet and the kernel skips their
+                      O(lane^2) join (tile_lo = first cell; pads are -1 and
+                      sit at the row tail, so tile_hi = max over cells).
+    """
+
+    hub: np.ndarray        # [T, lane] int32
+    dist: np.ndarray       # [T, lane] int32
+    wlev: np.ndarray       # [T, lane] int32
+    tile_base: np.ndarray  # [V] int32
+    tile_cnt: np.ndarray   # [V] int32
+    tile_lo: np.ndarray    # [T] int32
+    tile_hi: np.ndarray    # [T] int32
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.hub.shape[0])
+
+    @property
+    def lane(self) -> int:
+        return int(self.hub.shape[1])
+
+    def memory_bytes(self) -> int:
+        """Device-resident footprint: 3 int32 per arena cell + the per-row
+        and per-tile index tables."""
+        return int(self.hub.nbytes + self.dist.nbytes + self.wlev.nbytes
+                   + self.tile_base.nbytes + self.tile_cnt.nbytes
+                   + self.tile_lo.nbytes + self.tile_hi.nbytes)
+
+    @staticmethod
+    def from_packed(packed: "PackedLabels", lane: int = LANE) -> "LabelArena":
+        offsets = packed.offsets
+        V = packed.num_nodes
+        count = offsets[1:] - offsets[:-1]                     # [V] int64
+        tile_cnt = np.maximum(-(-count // lane), 1).astype(np.int64)
+        tile_base = np.zeros(V, dtype=np.int64)
+        np.cumsum(tile_cnt[:-1], out=tile_base[1:])
+        T = int(tile_cnt.sum())
+        hub = np.full((T, lane), -1, dtype=np.int32)
+        dist = np.full((T, lane), INF_DIST, dtype=np.int32)
+        wlev = np.full((T, lane), -1, dtype=np.int32)
+        pos = np.repeat(tile_base * lane, count) + _concat_ranges(count)
+        hub.reshape(-1)[pos] = packed.hub_rank
+        dist.reshape(-1)[pos] = packed.dist
+        wlev.reshape(-1)[pos] = packed.wlev
+        # hub-sorted rows + tail pads of -1: lo is the first cell, hi the max
+        tile_lo = hub[:, 0].copy()
+        tile_hi = hub.max(axis=1).astype(np.int32)
+        return LabelArena(hub=hub, dist=dist, wlev=wlev,
+                          tile_base=tile_base.astype(np.int32),
+                          tile_cnt=tile_cnt.astype(np.int32),
+                          tile_lo=tile_lo, tile_hi=tile_hi)
 
 
 class PackedLabelsBuilder:

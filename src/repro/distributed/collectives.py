@@ -41,6 +41,18 @@ def axis_linear_index(axes):
     return idx
 
 
+def batch_slice(x, axes, n_local: int):
+    """This shard's contiguous slice of a REPLICATED batch-axis array,
+    under the same row-major linear device order the row-gather collectives
+    use: shard k owns ``x[k * n_local : (k + 1) * n_local]``. The serving
+    engines' sharded-labels locals pair it with `row_gather_psum_scatter`
+    (whose reduce-scatter delivers exactly that slice of the gathered
+    rows), so the per-shard query levels and the gathered label rows line
+    up by construction."""
+    return jax.lax.dynamic_slice_in_dim(
+        x, axis_linear_index(axes) * n_local, n_local)
+
+
 def _owned_contribution(shard, rows, axes, rows_per_shard: int):
     """This shard's contribution to gathering global ``rows`` from an array
     block-row-sharded over ``axes``: its owned rows, zeros elsewhere.

@@ -22,6 +22,33 @@ def _ceil_to(x: int, m: int) -> int:
     return int(-(-x // m) * m)
 
 
+def resolve_interpret(interpret: bool | None) -> bool:
+    """THE resolution point for the Pallas ``interpret`` flag.
+
+    Every engine takes ``interpret=None`` by default and resolves it here,
+    so ``use_pallas=True`` engines reach the COMPILED kernels whenever the
+    backend can lower them — interpret mode is for explicit requests and
+    backends without Mosaic support, not a silent production default.
+
+    Only the TPU backend resolves to compiled: every kernel in this
+    package is TPU Pallas (`pltpu.PrefetchScalarGridSpec` scalar
+    prefetch), which neither CPU nor GPU can lower — those backends
+    emulate.
+
+    Resolution table (locked by tests/test_ragged.py):
+
+        interpret arg | backend      | resolved
+        --------------+--------------+---------
+        True          | any          | True
+        False         | any          | False
+        None          | tpu          | False  (compiled Mosaic kernels)
+        None          | cpu/gpu/...  | True   (no Mosaic: emulate)
+    """
+    if interpret is not None:
+        return bool(interpret)
+    return jax.default_backend() != "tpu"
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
 def wcsd_query(hub, dist, wlev, count, s, t, w_level, *,
                interpret: bool = True, use_kernel: bool = True):
@@ -78,6 +105,61 @@ def wcsd_query_segmented(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
     return jnp.where(best >= DEV_INF, INF_DIST, best).astype(jnp.int32)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def wcsd_query_segmented_staged(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
+                                stq, *, interpret: bool = True,
+                                use_kernel: bool = True):
+    """`wcsd_query_segmented` fed by ONE fused staging array: ``stq`` is
+    [3, B] int32 carrying (srow, trow, w_level) stacked, so a planned
+    sub-batch pays a single H2D transfer instead of three — the unpack
+    happens on device, inside this jit."""
+    return wcsd_query_segmented(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
+                                stq[0], stq[1], stq[2], interpret=interpret,
+                                use_kernel=use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def wcsd_query_ragged(hub, dist, wlev, tile_lo, tile_hi,
+                      qidx, stile, ttile, first, wq, *,
+                      interpret: bool = True, use_kernel: bool = True):
+    """One ragged sub-batch — which is the WHOLE batch: every bucket mix in
+    a single launch over the lane-tiled arena (see `kernels.wcsd_query.
+    wcsd_query_ragged` for the worklist contract). Returns [Q] int32
+    distances (INF_DIST when no feasible path)."""
+    if use_kernel:
+        best = _wq.wcsd_query_ragged(hub, dist, wlev, tile_lo, tile_hi,
+                                     qidx, stile, ttile, first, wq,
+                                     interpret=interpret)
+    else:
+        best = _ref.wcsd_query_ragged_ref(hub, dist, wlev, qidx, stile,
+                                          ttile, wq)
+    return jnp.where(best >= DEV_INF, INF_DIST, best).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "num_levels",
+                                             "interpret", "use_kernel"))
+def wcsd_profile_ragged(hub, dist, wlev, tile_lo, tile_hi,
+                        qidx, stile, ttile, first, *, num_rows: int,
+                        num_levels: int, interpret: bool = True,
+                        use_kernel: bool = True):
+    """Ragged PROFILE batch: same worklist contract as `wcsd_query_ragged`,
+    every constraint level answered from the one sweep. The kernel (or its
+    jnp oracle) emits per-pair-level bucket minima; the suffix min-scan
+    applied here turns them into staircases. Returns
+    [num_rows, num_levels + 1] int32 (INF_DIST where infeasible)."""
+    if use_kernel:
+        bucket = _wq.wcsd_profile_ragged(hub, dist, wlev, tile_lo, tile_hi,
+                                         qidx, stile, ttile, first,
+                                         num_rows=num_rows,
+                                         num_levels=num_levels,
+                                         interpret=interpret)
+    else:
+        bucket = _ref.wcsd_profile_ragged_ref(hub, dist, wlev, qidx, stile,
+                                              ttile, num_rows, num_levels)
+    prof = jax.lax.cummin(bucket, axis=1, reverse=True)
+    return jnp.where(prof >= DEV_INF, INF_DIST, prof).astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("num_levels", "interpret",
                                              "use_kernel"))
 def wcsd_profile_segmented(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
@@ -105,6 +187,20 @@ def wcsd_profile_segmented(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
                                                  srow, trow, num_levels)
     prof = jax.lax.cummin(bucket, axis=1, reverse=True)
     return jnp.where(prof >= DEV_INF, INF_DIST, prof).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_levels", "interpret",
+                                             "use_kernel"))
+def wcsd_profile_segmented_staged(hub_s, dist_s, wlev_s,
+                                  hub_t, dist_t, wlev_t, stq, *,
+                                  num_levels: int, interpret: bool = True,
+                                  use_kernel: bool = True):
+    """`wcsd_profile_segmented` fed by one fused [2, B] (srow, trow)
+    staging array — single H2D per planned sub-batch, unpacked in-jit."""
+    return wcsd_profile_segmented(hub_s, dist_s, wlev_s,
+                                  hub_t, dist_t, wlev_t, stq[0], stq[1],
+                                  num_levels=num_levels, interpret=interpret,
+                                  use_kernel=use_kernel)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))

@@ -36,6 +36,48 @@ def wcsd_query_segmented_ref(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
         axis=(1, 2))
 
 
+def wcsd_query_ragged_ref(hub, dist, wlev, qidx, stile, ttile, wq):
+    """Ragged-megakernel oracle: gather each work item's two arena tiles,
+    join, scatter-min into the output row.
+
+    hub/dist/wlev: [T, lane] arena tiles; qidx/stile/ttile: [WL] worklist;
+    wq: [Q] per-output-row levels. Pads (arena cells with wlev = -1, and
+    worklist pads routed to an infeasible trash row) contribute only
+    DEV_INF. The tile_lo/tile_hi early-out is a kernel optimization, not
+    semantics — the oracle joins every work item."""
+    wqe = wq[qidx]                                          # [WL]
+    hs, ws = hub[stile], wlev[stile]                        # [WL, lane]
+    ht, wt = hub[ttile], wlev[ttile]
+    ds = jnp.where(ws >= wqe[:, None],
+                   jnp.minimum(dist[stile], DEV_INF), DEV_INF)
+    dt = jnp.where(wt >= wqe[:, None],
+                   jnp.minimum(dist[ttile], DEV_INF), DEV_INF)
+    eq = hs[:, :, None] == ht[:, None, :]
+    best = jnp.where(eq, ds[:, :, None] + dt[:, None, :], DEV_INF).min(
+        axis=(1, 2))
+    out = jnp.full((wq.shape[0],), DEV_INF, dtype=jnp.int32)
+    return out.at[qidx].min(best)
+
+
+def wcsd_profile_ragged_ref(hub, dist, wlev, qidx, stile, ttile,
+                            num_rows: int, num_levels: int):
+    """Ragged profile oracle: per work item, bin hub meets by pair level
+    ``min(wlev_s, wlev_t)`` and scatter-min the [num_levels + 1] bucket
+    rows into the output (suffix min-scan into the staircase happens in
+    ops). Returns [num_rows, num_levels + 1]."""
+    hs, ws = hub[stile], wlev[stile]
+    ht, wt = hub[ttile], wlev[ttile]
+    ds = jnp.minimum(dist[stile], DEV_INF)
+    dt = jnp.minimum(dist[ttile], DEV_INF)
+    eq = hs[:, :, None] == ht[:, None, :]
+    dsum = jnp.where(eq, ds[:, :, None] + dt[:, None, :], DEV_INF)
+    mw = jnp.minimum(ws[:, :, None], wt[:, None, :])
+    bucket = jnp.stack([jnp.where(mw == lev, dsum, DEV_INF).min(axis=(1, 2))
+                        for lev in range(num_levels + 1)], axis=1)
+    out = jnp.full((num_rows, num_levels + 1), DEV_INF, dtype=jnp.int32)
+    return out.at[qidx].min(bucket)
+
+
 def wcsd_profile_segmented_ref(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
                                srow, trow, num_levels: int):
     """Profile-path oracle, mirroring the kernel's bucket-minima contract:

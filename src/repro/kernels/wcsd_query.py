@@ -77,6 +77,19 @@ def wcsd_query_gathered(hs, ds, ht, dt, *, block_b: int = 8,
     return out[:, 0]
 
 
+def _fit_block(block_lt: int, Wt: int) -> int:
+    """Largest t-tile block width <= ``block_lt`` that DIVIDES ``Wt`` —
+    the grid is ``Wt // block_lt`` steps, so a non-divisor block would
+    silently drop Wt's tail columns (non-128-multiple widths are reachable
+    through the engines' ``lane`` knob: lane=48 gives Wt = 48, 96, 192...).
+    Halving always terminates at a divisor (worst case 1)."""
+    if Wt <= block_lt:
+        return Wt
+    while Wt % block_lt:
+        block_lt //= 2
+    return block_lt
+
+
 # --------------------------------------------------------------- segmented
 def _segmented_kernel(srow_ref, trow_ref, wq_ref,
                       hs_ref, ds_ref, ws_ref, ht_ref, dt_ref, wt_ref,
@@ -125,6 +138,7 @@ def wcsd_query_segmented(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
     """
     B = srow.shape[0]
     Ws, Wt = hub_s.shape[1], hub_t.shape[1]
+    block_lt = _fit_block(block_lt, Wt)
     grid = (B, Wt // block_lt)
 
     def s_spec():
@@ -148,6 +162,167 @@ def wcsd_query_segmented(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
         interpret=interpret,
     )(srow, trow, w_level, hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t)
     return out[:, 0]
+
+
+# ------------------------------------------------------------------ ragged
+def _ragged_kernel(qidx_ref, stile_ref, ttile_ref, first_ref, wq_ref,
+                   lo_ref, hi_ref,
+                   hs_ref, ds_ref, ws_ref, ht_ref, dt_ref, wt_ref, out_ref):
+    k = pl.program_id(0)
+
+    @pl.when(first_ref[k] == 1)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, DEV_INF)
+
+    s_tile = stile_ref[k]
+    t_tile = ttile_ref[k]
+    # Thm.-3 rows are hub-sorted, so each arena tile covers one hub-rank
+    # interval [lo, hi]; disjoint intervals cannot meet -> skip the
+    # O(lane^2) join for this work item (the DMA already happened, the
+    # saving is compute — and on skewed stores most cross-tile pairs of a
+    # long x long query are disjoint).
+    meet = (lo_ref[s_tile] <= hi_ref[t_tile]) & \
+        (lo_ref[t_tile] <= hi_ref[s_tile])
+
+    @pl.when(meet)
+    def _join():
+        wq = wq_ref[qidx_ref[k]]
+        hs = hs_ref[...]                                    # [1, lane]
+        ds = jnp.where(ws_ref[...] >= wq,
+                       jnp.minimum(ds_ref[...], DEV_INF), DEV_INF)
+        ht = ht_ref[...]                                    # [1, lane]
+        dt = jnp.where(wt_ref[...] >= wq,
+                       jnp.minimum(dt_ref[...], DEV_INF), DEV_INF)
+        eq = hs[0, :, None] == ht[0, None, :]               # [lane, lane]
+        best = jnp.where(eq, ds[0, :, None] + dt[0, None, :], DEV_INF).min()
+        out_ref[0, 0] = jnp.minimum(out_ref[0, 0], best)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wcsd_query_ragged(hub, dist, wlev, tile_lo, tile_hi,
+                      qidx, stile, ttile, first, wq, *,
+                      interpret: bool = True):
+    """Single-launch ragged query path over the lane-tiled label arena.
+
+    Collapses the whole bucket-pair dispatch loop into ONE `pallas_call`:
+    the grid is a flat worklist of ``(query, s_tile, t_tile)`` work items
+    (one per tile pair of a query's two label rows, query-major — see
+    `core.query.emit_ragged_worklist`), and the scalar-prefetch index maps
+    pick ARBITRARY row tiles out of one shared arena, so a batch mixing
+    every bucket length runs in a single launch with zero wasted lanes.
+
+    hub/dist/wlev: [T, lane] arena tiles (pad contract hub -1, wlev -1);
+    tile_lo/tile_hi: [T] per-tile hub-rank spans (Thm.-3 early-out);
+    qidx/stile/ttile/first: [WL] int32 worklist — ``qidx`` is
+    non-decreasing (output rows are revisited only consecutively) and
+    ``first`` marks each query's first work item (DEV_INF init);
+    wq: [Q] per-output-row query levels (worklist pads must point at a
+    trash row whose level is infeasible). Returns [Q] int32 best sums
+    (>= DEV_INF means infeasible).
+    """
+    WL = qidx.shape[0]
+    Q = wq.shape[0]
+    lane = hub.shape[1]
+
+    def s_spec():
+        return pl.BlockSpec(
+            (1, lane), lambda k, qidx, stile, ttile, first, wq, lo, hi:
+            (stile[k], 0))
+
+    def t_spec():
+        return pl.BlockSpec(
+            (1, lane), lambda k, qidx, stile, ttile, first, wq, lo, hi:
+            (ttile[k], 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(WL,),
+        in_specs=[s_spec(), s_spec(), s_spec(),
+                  t_spec(), t_spec(), t_spec()],
+        out_specs=pl.BlockSpec(
+            (1, 1), lambda k, qidx, stile, ttile, first, wq, lo, hi:
+            (qidx[k], 0)),
+    )
+    out = pl.pallas_call(
+        _ragged_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+        interpret=interpret,
+    )(qidx, stile, ttile, first, wq, tile_lo, tile_hi,
+      hub, dist, wlev, hub, dist, wlev)
+    return out[:, 0]
+
+
+def _profile_ragged_kernel(qidx_ref, stile_ref, ttile_ref, first_ref,
+                           lo_ref, hi_ref,
+                           hs_ref, ds_ref, ws_ref, ht_ref, dt_ref, wt_ref,
+                           out_ref):
+    k = pl.program_id(0)
+
+    @pl.when(first_ref[k] == 1)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, DEV_INF)
+
+    s_tile = stile_ref[k]
+    t_tile = ttile_ref[k]
+    meet = (lo_ref[s_tile] <= hi_ref[t_tile]) & \
+        (lo_ref[t_tile] <= hi_ref[s_tile])
+
+    @pl.when(meet)
+    def _join():
+        hs = hs_ref[...]                                    # [1, lane]
+        ds = jnp.minimum(ds_ref[...], DEV_INF)
+        ht = ht_ref[...]
+        dt = jnp.minimum(dt_ref[...], DEV_INF)
+        eq = hs[0, :, None] == ht[0, None, :]               # [lane, lane]
+        dsum = jnp.where(eq, ds[0, :, None] + dt[0, None, :], DEV_INF)
+        mw = jnp.minimum(ws_ref[...][0, :, None], wt_ref[...][0, None, :])
+        for lev in range(out_ref.shape[1]):  # static unroll: W + 1 is tiny
+            best = jnp.where(mw == lev, dsum, DEV_INF).min()
+            out_ref[0, lev] = jnp.minimum(out_ref[0, lev], best)
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "num_levels",
+                                             "interpret"))
+def wcsd_profile_ragged(hub, dist, wlev, tile_lo, tile_hi,
+                        qidx, stile, ttile, first, *, num_rows: int,
+                        num_levels: int, interpret: bool = True):
+    """Single-launch ragged PROFILE path: same arena/worklist contract as
+    `wcsd_query_ragged`, no per-query level — each work item bins its hub
+    meets' distance sums by pair level ``min(wlev_s, wlev_t)`` into the
+    query's [num_levels + 1] bucket row (the staircase is the suffix
+    min-scan, applied in ops). Returns [num_rows, num_levels + 1] int32
+    bucket minima; worklist pads must point at trash row num_rows - 1."""
+    WL = qidx.shape[0]
+    lane = hub.shape[1]
+    Lp = int(num_levels) + 1
+
+    def s_spec():
+        return pl.BlockSpec(
+            (1, lane), lambda k, qidx, stile, ttile, first, lo, hi:
+            (stile[k], 0))
+
+    def t_spec():
+        return pl.BlockSpec(
+            (1, lane), lambda k, qidx, stile, ttile, first, lo, hi:
+            (ttile[k], 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(WL,),
+        in_specs=[s_spec(), s_spec(), s_spec(),
+                  t_spec(), t_spec(), t_spec()],
+        out_specs=pl.BlockSpec(
+            (1, Lp), lambda k, qidx, stile, ttile, first, lo, hi:
+            (qidx[k], 0)),
+    )
+    return pl.pallas_call(
+        _profile_ragged_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_rows, Lp), jnp.int32),
+        interpret=interpret,
+    )(qidx, stile, ttile, first, tile_lo, tile_hi,
+      hub, dist, wlev, hub, dist, wlev)
 
 
 # ----------------------------------------------------------------- profile
@@ -203,6 +378,7 @@ def wcsd_profile_segmented(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
     B = srow.shape[0]
     Ws, Wt = hub_s.shape[1], hub_t.shape[1]
     Lp = int(num_levels) + 1
+    block_lt = _fit_block(block_lt, Wt)
     grid = (B, Wt // block_lt)
 
     def s_spec():

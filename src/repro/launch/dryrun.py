@@ -107,10 +107,14 @@ def run_serve(quick: bool) -> None:
             s, t, wl = (a.ravel().astype(np.int32) for a in (s, t, wl))
         else:
             s, t, wl = random_queries(g, 512, seed=seed + 1)
-        for layout in ("csr", "padded"):   # every layout x placement combo
+        for layout, dispatch in (("csr", "ragged"), ("csr", "bucket_pair"),
+                                 ("padded", "ragged")):
+            # every layout x dispatch x placement combo; dispatch only
+            # differentiates the csr layout (the ragged megakernel vs the
+            # bucket-pair oracle loop)
             dev_eng = DeviceQueryEngine(
                 idx, layout=layout, use_pallas=cfg.use_pallas,
-                interpret=cfg.interpret)
+                interpret=cfg.interpret, dispatch=dispatch)
             exp = np.asarray(dev_eng.query(s, t, wl))
             # profile expectation: the per-level loop the one-pass replaces
             exp_prof = np.stack(
@@ -127,9 +131,9 @@ def run_serve(quick: bool) -> None:
                     eng = ShardedQueryEngine(
                         idx, mesh=mesh, layout=layout,
                         use_pallas=cfg.use_pallas, interpret=cfg.interpret,
-                        device_budget_bytes=budget)
+                        device_budget_bytes=budget, dispatch=dispatch)
                     got = np.asarray(eng.query(s, t, wl))
-                    tag = (f"V={V} layout={layout} "
+                    tag = (f"V={V} layout={layout} dispatch={eng.dispatch} "
                            f"mesh={'2x4' if multi_pod else '8'} "
                            f"mode={eng.mode}")
                     if not np.array_equal(got, exp):

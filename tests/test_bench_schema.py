@@ -13,7 +13,9 @@ import numpy as np
 import pytest
 
 from benchmarks import bench_wcsd
-from benchmarks.run import REQUIRED_ALGOS, ROW_KEYS, validate_rows
+from benchmarks.run import (BASELINE_FILES, CHECK_FLOORS, CHECK_GATES,
+                            REQUIRED_ALGOS, ROW_KEYS,
+                            check_against_baseline, validate_rows)
 
 
 @pytest.fixture(scope="module")
@@ -67,3 +69,56 @@ def test_validate_rows_rejects_drift():
     # numpy scalars (what _time / len arithmetic can produce) are numbers
     validate_rows("x", [dict(table="t", dataset="d", algo="a",
                              value=float(np.float64(1.5)))])
+
+
+# ------------------------------------------------- --check regression gate
+def _row(algo, value, table="serving", dataset="S"):
+    return dict(table=table, dataset=dataset, algo=algo, value=value)
+
+
+def test_check_against_baseline_passes_within_tolerance():
+    kb = [_row("cmp_ratio", 10.0, table="kernel_segmented"),
+          _row("hbm_ratio", 5.0, table="kernel_segmented"),
+          _row("seg_us_per_query", 50.0, table="kernel_segmented")]
+    fresh = [_row("cmp_ratio", 8.0, table="kernel_segmented"),   # 1.25x ok
+             _row("hbm_ratio", 5.0, table="kernel_segmented"),
+             _row("seg_us_per_query", 500.0, table="kernel_segmented")]
+    assert check_against_baseline("kernel_segmented", fresh, kb) == []
+    # wall-clock serving metrics are archived but NOT relatively gated
+    # (cross-machine); only the same-run speedup floors apply
+    fresh_srv = [_row("us_per_query", 1e9), _row("ragged_speedup", 5.0),
+                 _row("ragged_buckets", 8.0)]
+    assert check_against_baseline(
+        "serving", fresh_srv, [_row("us_per_query", 100.0)]) == []
+
+
+def test_check_against_baseline_fails_on_regression():
+    # higher-is-better direction: the kernel traffic ratio collapsing
+    kb = [_row("traffic_ratio", 50.0, table="kernel_wcsd_query")]
+    fails = check_against_baseline(
+        "kernel_query", [_row("traffic_ratio", 30.0,
+                              table="kernel_wcsd_query")], kb)
+    assert len(fails) == 1 and "worse than baseline" in fails[0]
+
+
+def test_check_against_baseline_enforces_floors_and_presence():
+    # the >= 2x ragged acceptance floor holds independent of the baseline
+    fails = check_against_baseline(
+        "serving", [_row("ragged_speedup", 1.5)], [])
+    assert len(fails) == 1 and "absolute floor" in fails[0]
+    # a gated baseline metric missing from the fresh run is a failure
+    fails = check_against_baseline(
+        "kernel_cin", [], [_row("ratio", 16.0, table="kernel_cin")])
+    assert len(fails) == 1 and "missing" in fails[0]
+
+
+def test_gate_tables_are_wired():
+    """Every gated/floored suite maps to a committed baseline artifact,
+    and the ragged acceptance metrics are actually gated."""
+    for suite in set(CHECK_GATES) | set(CHECK_FLOORS):
+        assert suite in BASELINE_FILES, suite
+    assert CHECK_FLOORS["serving"]["ragged_speedup"] >= 2.0
+    assert CHECK_FLOORS["serving"]["ragged_buckets"] >= 8.0
+    assert {"ragged_speedup", "ragged_us_per_query",
+            "bucket_pair_us_per_query",
+            "ragged_buckets"} <= REQUIRED_ALGOS["serving"]

@@ -105,8 +105,11 @@ def test_five_paths_agree_on_full_grid(block, n, deg, levels, seed):
     got3 = np.asarray(query_batch_sorted_jnp(*dev, *qargs))[:nq]
     np.testing.assert_array_equal(got3, exp)
 
-    # 4. segmented CSR kernel via the bucket-pair planner
-    eng = DeviceQueryEngine(idx, layout="csr", use_pallas=True)
+    # 4. segmented CSR kernel via the bucket-pair planner (pinned: this is
+    # the ragged megakernel's differential oracle; the ragged path has its
+    # own harness in tests/test_ragged.py)
+    eng = DeviceQueryEngine(idx, layout="csr", use_pallas=True,
+                            dispatch="bucket_pair")
     got4 = np.asarray(eng.query(s, t, wl))
     np.testing.assert_array_equal(got4, exp)
 

@@ -243,3 +243,36 @@ def test_segmented_kernel_vs_ref_op():
     got = np.asarray(ops.wcsd_query_segmented(*args))
     exp = np.asarray(ops.wcsd_query_segmented(*args, use_kernel=False))
     np.testing.assert_array_equal(got, exp)
+
+
+@pytest.mark.parametrize("Ws,Wt", [(192, 192), (96, 48), (48, 192)])
+def test_segmented_kernel_non_multiple_widths(Ws, Wt):
+    """Regression: tile widths that are NOT multiples of the 128 t-block
+    (reachable via the engines' ``lane`` knob, e.g. lane=48) must not drop
+    tail columns — a hub meeting only in the tile's last block was
+    silently missed before the block width was fitted to divide Wt."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    hs = np.full((2, Ws), -1, np.int32)
+    ht = np.full((2, Wt), -1, np.int32)
+    ds = np.full((2, Ws), 7, np.int32)
+    dt = np.full((2, Wt), 7, np.int32)
+    ws = np.full((2, Ws), 3, np.int32)
+    wt = np.full((2, Wt), 3, np.int32)
+    hs[0, 0] = 5
+    ht[0, Wt - 1] = 5          # the meet lives in the LAST t-column
+    args = tuple(jnp.asarray(a) for a in (
+        hs, ds, ws, ht, dt, wt, np.zeros(4, np.int32),
+        np.zeros(4, np.int32), np.zeros(4, np.int32)))
+    got = np.asarray(ops.wcsd_query_segmented(*args))
+    exp = np.asarray(ops.wcsd_query_segmented(*args, use_kernel=False))
+    np.testing.assert_array_equal(got, exp)
+    assert got[0] == 14
+    prof_args = args[:8]
+    gp = np.asarray(ops.wcsd_profile_segmented(*prof_args, num_levels=3))
+    ep = np.asarray(ops.wcsd_profile_segmented(*prof_args, num_levels=3,
+                                               use_kernel=False))
+    np.testing.assert_array_equal(gp, ep)
+    assert gp[0, 3] == 14

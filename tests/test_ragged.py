@@ -1,0 +1,347 @@
+"""Ragged single-launch query megakernel: the differential harness.
+
+Paths under test: the ragged arena path (`DeviceQueryEngine(layout="csr",
+dispatch="ragged")`, interpret-mode Pallas kernel AND jnp oracle, plus the
+sharded engine) against the bucket-pair dispatch loop it replaced
+(`dispatch="bucket_pair"`, kept as the oracle), the padded numpy outer
+join, and the per-level BFS sweep — on real graphs (full (s, t, w) grids)
+and on ADVERSARIAL skewed label-length distributions built directly as
+synthetic CSR stores spanning several length buckets.
+
+Also here: the launch-count regression test (ONE `pallas_call` trace per
+flush shape, however many buckets the batch mixes), the plan-free-flush
+guarantee (the host bucket-pair planner is never invoked on the ragged
+path), the device worklist emission vs a numpy reference, and the
+`resolve_interpret` resolution-table lock.
+"""
+import numpy as np
+import pytest
+from _hypo_shim import given, settings, st  # hypothesis or fallback
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import constrained_distance_grid
+from repro.core.generators import erdos_renyi
+from repro.core.query import (DeviceQueryEngine, ShardedQueryEngine,
+                              emit_ragged_worklist, ragged_worklist_len)
+from repro.core.serve import WCSDServer
+from repro.core.wc_index import WCIndex, build_wc_index
+from repro.kernels import ops
+
+EXAMPLES_PER_BLOCK = 25
+_instances_run = [0]
+
+
+def _full_grid(V, W):
+    s, t, w = np.meshgrid(np.arange(V), np.arange(V), np.arange(W + 1),
+                          indexing="ij")
+    return (s.ravel().astype(np.int32), t.ravel().astype(np.int32),
+            w.ravel().astype(np.int32))
+
+
+# ------------------------------------------------------- real-graph grids
+@pytest.mark.parametrize("lane", [128, 16])
+@given(st.sampled_from([8, 10, 12]), st.sampled_from([2.5, 3.5, 4.5]),
+       st.sampled_from([2, 3]), st.integers(0, 100_000))
+@settings(max_examples=EXAMPLES_PER_BLOCK, deadline=None, derandomize=True)
+def test_ragged_agrees_with_bucket_pair_and_bfs(lane, n, deg, levels, seed):
+    """Full (s, t, w) grid: ragged (kernel + jnp) == bucket-pair == BFS
+    sweep, single-level AND profile. lane=16 forces multi-tile rows and
+    multi-bucket stores even on tiny graphs, so the worklist emission and
+    the in-kernel tile walk are exercised, not just the 1-tile fast case."""
+    g = erdos_renyi(n, deg, num_levels=levels, seed=seed + 4801 * lane)
+    V, W = g.num_nodes, g.num_levels
+    idx = build_wc_index(g)
+    s, t, wl = _full_grid(V, W)
+    D = constrained_distance_grid(g)
+    exp = D[s, t, wl]
+
+    eng_k = DeviceQueryEngine(idx, layout="csr", use_pallas=True, lane=lane)
+    assert eng_k.dispatch == "ragged"
+    np.testing.assert_array_equal(np.asarray(eng_k.query(s, t, wl)), exp)
+    eng_j = DeviceQueryEngine(idx, layout="csr", use_pallas=False, lane=lane)
+    np.testing.assert_array_equal(np.asarray(eng_j.query(s, t, wl)), exp)
+
+    oracle = DeviceQueryEngine(idx, layout="csr", use_pallas=True, lane=lane,
+                               dispatch="bucket_pair")
+    np.testing.assert_array_equal(np.asarray(oracle.query(s, t, wl)), exp)
+
+    # profile staircases, every level from the one launch
+    s2, t2 = np.meshgrid(np.arange(V), np.arange(V), indexing="ij")
+    s2 = s2.ravel().astype(np.int32)
+    t2 = t2.ravel().astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(eng_k.query_profile(s2, t2)),
+                                  D[s2, t2, :])
+    np.testing.assert_array_equal(np.asarray(oracle.query_profile(s2, t2)),
+                                  D[s2, t2, :])
+    _instances_run[0] += 1
+
+
+# ------------------------------------------------- adversarial skew stores
+def _padded_oracle(pidx):
+    hub, dist, wlev, count = pidx.labels.to_padded()
+    return WCIndex(order=pidx.order, rank=pidx.rank, levels=pidx.levels,
+                   hub_rank=hub, dist=dist, wlev=wlev, count=count)
+
+
+@given(st.integers(0, 100_000), st.sampled_from([2, 3, 4]))
+@settings(max_examples=15, deadline=None, derandomize=True)
+def test_ragged_adversarial_skewed_lengths(seed, buckets):
+    """Skewed length mixes across up to 4 buckets: the ragged megakernel
+    (kernel + jnp), the bucket-pair loop, and the padded numpy outer join
+    agree exactly — single-level and profile — on batches that hit every
+    (short x short / short x heavy / heavy x heavy) pair shape. The store
+    builder is SHARED with benchmarks/bench_wcsd.py: the configuration
+    the perf row measures is the one this block proves correct."""
+    from benchmarks.bench_wcsd import make_skewed_store
+    rng = np.random.default_rng(seed)
+    V, W, lane = 48, 3, 8
+    pidx, heavy = make_skewed_store(V=V, W=W, lane=lane, buckets=buckets,
+                                    rng=rng)
+    oracle = _padded_oracle(pidx)
+    B = 160
+    s = rng.integers(0, V, B).astype(np.int32)
+    t = rng.integers(0, V, B).astype(np.int32)
+    s[:buckets] = np.resize(heavy, buckets)   # force heavy x heavy pairs
+    t[:buckets] = np.resize(heavy[::-1], buckets)
+    wl = rng.integers(0, W + 1, B).astype(np.int32)
+    exp = oracle.query_batch(s, t, wl)
+
+    eng_k = DeviceQueryEngine(pidx, layout="csr", use_pallas=True, lane=lane)
+    eng_j = DeviceQueryEngine(pidx, layout="csr", use_pallas=False, lane=lane)
+    bp = DeviceQueryEngine(pidx, layout="csr", use_pallas=False, lane=lane,
+                           dispatch="bucket_pair")
+    np.testing.assert_array_equal(np.asarray(eng_k.query(s, t, wl)), exp)
+    np.testing.assert_array_equal(np.asarray(eng_j.query(s, t, wl)), exp)
+    np.testing.assert_array_equal(np.asarray(bp.query(s, t, wl)), exp)
+
+    exp_prof = np.stack([oracle.query_batch(s, t, np.full(B, w, np.int32))
+                         for w in range(W + 1)], axis=1)
+    np.testing.assert_array_equal(np.asarray(eng_k.query_profile(s, t)),
+                                  exp_prof)
+    np.testing.assert_array_equal(np.asarray(bp.query_profile(s, t)),
+                                  exp_prof)
+
+
+# ----------------------------------------------------------- both engines
+def test_sharded_ragged_matches_device_engine():
+    """ShardedQueryEngine(dispatch="ragged") == DeviceQueryEngine bit for
+    bit (1-device mesh in-process; the 8-virtual-device sweep runs in
+    launch.dryrun --serve), and the row-sharded fallback silently routes
+    to bucket_pair."""
+    from repro.launch.mesh import make_serving_mesh
+    g = erdos_renyi(40, 3.5, num_levels=3, seed=9)
+    idx = build_wc_index(g)
+    rng = np.random.default_rng(1)
+    s = rng.integers(0, 40, 300).astype(np.int32)
+    t = rng.integers(0, 40, 300).astype(np.int32)
+    wl = rng.integers(0, 4, 300).astype(np.int32)
+    dev = DeviceQueryEngine(idx, layout="csr", use_pallas=True)
+    exp = np.asarray(dev.query(s, t, wl))
+    sh = ShardedQueryEngine(idx, mesh=make_serving_mesh(), layout="csr",
+                            use_pallas=True)
+    assert sh.dispatch == "ragged"
+    np.testing.assert_array_equal(np.asarray(sh.query(s, t, wl)), exp)
+    np.testing.assert_array_equal(np.asarray(sh.query_profile(s, t)),
+                                  np.asarray(dev.query_profile(s, t)))
+    # vertex-sharded labels cannot host the arena megakernel: fallback
+    fb = ShardedQueryEngine(idx, mesh=make_serving_mesh(), layout="csr",
+                            device_budget_bytes=1, dispatch="ragged")
+    assert fb.mode == "sharded_labels" and fb.dispatch == "bucket_pair"
+    np.testing.assert_array_equal(np.asarray(fb.query(s, t, wl)), exp)
+
+
+# ------------------------------------------------------------ launch count
+def test_one_pallas_launch_per_flush():
+    """Acceptance: a 4096-query batch mixing several length buckets is
+    served by EXACTLY ONE ragged `pallas_call` trace per flush shape —
+    where the bucket-pair dispatch traces one kernel per bucket pair —
+    and the answers are bit-identical to the bucket-pair path and the BFS
+    sweep."""
+    import repro.kernels.wcsd_query as wq
+
+    g = erdos_renyi(60, 4.0, num_levels=4, seed=77)
+    idx = build_wc_index(g)
+    lane = 16
+    packed = idx.packed(lane=lane)
+    assert packed.num_buckets >= 2, "config no longer mixes buckets"
+    D = constrained_distance_grid(g)
+    rng = np.random.default_rng(3)
+    B = 4096
+    s = rng.integers(0, g.num_nodes, B).astype(np.int32)
+    t = rng.integers(0, g.num_nodes, B).astype(np.int32)
+    wl = rng.integers(0, g.num_levels + 1, B).astype(np.int32)
+    exp = D[s, t, wl]
+
+    calls = []
+    real = wq.pl.pallas_call
+
+    def counting(*a, **k):
+        calls.append(a)
+        return real(*a, **k)
+
+    wq.pl.pallas_call = counting
+    try:
+        eng = DeviceQueryEngine(idx, layout="csr", use_pallas=True,
+                                lane=lane)
+        got = np.asarray(eng.query(s, t, wl))
+        assert len(calls) == 1, \
+            f"expected ONE ragged launch per flush, traced {len(calls)}"
+        # same flush shape again: the compiled call is reused, no re-trace
+        got2 = np.asarray(eng.query(s, t, wl))
+        assert len(calls) == 1
+        # the bucket-pair loop traces one kernel per (bucket_s, bucket_t)
+        calls.clear()
+        bp = DeviceQueryEngine(idx, layout="csr", use_pallas=True,
+                               lane=lane, dispatch="bucket_pair")
+        exp_bp = np.asarray(bp.query(s, t, wl))
+        n_pairs = len(
+            {(packed.bucket_of[a], packed.bucket_of[b])
+             for a, b in zip(s.tolist(), t.tolist())})
+        assert len(calls) == n_pairs > 1
+    finally:
+        wq.pl.pallas_call = real
+    np.testing.assert_array_equal(got, exp)
+    np.testing.assert_array_equal(got2, exp)
+    np.testing.assert_array_equal(exp_bp, exp)
+
+
+def test_ragged_flush_never_calls_host_planner(monkeypatch):
+    """The ragged path's batch plan is emitted on device: the host
+    bucket-pair planner must not run on any flush (that is what makes
+    `WCSDServer.flush_async` plan-free)."""
+    import repro.core.query as q
+
+    def boom(*a, **k):
+        raise AssertionError("host planner invoked on the ragged path")
+
+    monkeypatch.setattr(q, "plan_query_batch", boom)
+    g = erdos_renyi(30, 3.0, num_levels=3, seed=4)
+    idx = build_wc_index(g)
+    srv = WCSDServer(idx, max_batch=32, layout="csr")
+    rng = np.random.default_rng(0)
+    s = rng.integers(0, 30, 100).astype(np.int32)
+    t = rng.integers(0, 30, 100).astype(np.int32)
+    wl = rng.integers(0, 3, 100).astype(np.int32)
+    got = srv.query_many(s, t, wl)
+    np.testing.assert_array_equal(got, idx.query_batch(s, t, wl))
+    np.testing.assert_array_equal(srv.query_profile_many(s[:20], t[:20]),
+                                  np.stack([idx.query_batch(
+                                      s[:20], t[:20],
+                                      np.full(20, w, np.int32))
+                                      for w in range(4)], axis=1))
+
+
+# ------------------------------------------------------- worklist emission
+def test_emit_ragged_worklist_matches_numpy_reference():
+    rng = np.random.default_rng(11)
+    V = 20
+    tile_cnt = rng.integers(1, 5, V).astype(np.int32)
+    tile_base = np.zeros(V, dtype=np.int32)
+    np.cumsum(tile_cnt[:-1], out=tile_base[1:])
+    Q = 16
+    s = rng.integers(0, V, Q).astype(np.int32)
+    t = rng.integers(0, V, Q).astype(np.int32)
+    total = int((tile_cnt[s].astype(np.int64) * tile_cnt[t]).sum())
+    WL = ragged_worklist_len(tile_cnt, s, t)
+    assert WL >= total and WL & (WL - 1) == 0
+
+    qidx, stile, ttile, first = (np.asarray(a) for a in emit_ragged_worklist(
+        jnp.asarray(tile_base), jnp.asarray(tile_cnt),
+        jnp.asarray(s), jnp.asarray(t), worklist_len=WL))
+    # numpy reference: query-major expansion of every tile pair
+    c = (tile_cnt[s].astype(np.int64) * tile_cnt[t])
+    exp_q = np.repeat(np.arange(Q), c)
+    local = np.arange(total) - np.repeat(np.cumsum(c) - c, c)
+    exp_s = tile_base[s[exp_q]] + local // tile_cnt[t[exp_q]]
+    exp_t = tile_base[t[exp_q]] + local % tile_cnt[t[exp_q]]
+    np.testing.assert_array_equal(qidx[:total], exp_q)
+    np.testing.assert_array_equal(stile[:total], exp_s)
+    np.testing.assert_array_equal(ttile[:total], exp_t)
+    # first marks each output row's first work item, exactly once per row
+    np.testing.assert_array_equal(
+        np.flatnonzero(first[:total]),
+        np.concatenate([[0], 1 + np.flatnonzero(np.diff(exp_q))]))
+    # pads: trash row Q, tile 0, and the trash row is init'd too
+    assert np.all(qidx[total:] == Q)
+    assert np.all(stile[total:] == 0) and np.all(ttile[total:] == 0)
+    if WL > total:
+        assert first[total] == 1
+    # qidx non-decreasing: output blocks are revisited only consecutively
+    assert np.all(np.diff(qidx.astype(np.int64)) >= 0)
+
+
+def test_ragged_empty_and_identity_edge_cases():
+    g = erdos_renyi(10, 2.0, num_levels=2, seed=2)
+    idx = build_wc_index(g)
+    eng = DeviceQueryEngine(idx, layout="csr", use_pallas=True)
+    empty = np.array([], dtype=np.int32)
+    assert len(np.asarray(eng.query(empty, empty, empty))) == 0
+    assert eng.query_profile(empty, empty).shape == (0, 3)
+    v = np.arange(10, dtype=np.int32)
+    # s == t is 0 at EVERY level, including the infeasible one (self entry)
+    for w in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(eng.query(v, v, np.full(10, w, np.int32))), 0)
+
+
+def test_ragged_batch_pads_use_minimal_tile_vertex():
+    """Batch-pad lanes must point at a minimal-tile-count vertex: padding
+    with vertex 0 would cost tile_cnt[0]^2 worklist items PER PAD LANE
+    whenever vertex 0 happens to be hub-heavy."""
+    from benchmarks.bench_wcsd import make_skewed_store
+    pidx, heavy = make_skewed_store(V=32, W=3, lane=8, buckets=3,
+                                    rng=np.random.default_rng(0))
+    eng = DeviceQueryEngine(pidx, layout="csr", lane=8)
+    assert int(eng._tile_cnt_np[eng._pad_vertex]) == \
+        int(eng._tile_cnt_np.min()) == 1
+    # a 3-query batch pads to 4: the pad lane carries the cheap vertex
+    h = np.resize(heavy, 3).astype(np.int32)
+    stq = eng._stage_ragged(h, h, np.zeros(3, np.int32))
+    assert stq.shape[1] == 4
+    assert stq[0, 3] == stq[1, 3] == eng._pad_vertex
+
+
+# ------------------------------------------------------ interpret default
+@pytest.mark.parametrize("arg,backend,want", [
+    (True, "cpu", True), (True, "tpu", True),
+    (False, "cpu", False), (False, "tpu", False),
+    (None, "cpu", True), (None, "gpu", True), (None, "tpu", False),
+])
+def test_resolve_interpret_table(monkeypatch, arg, backend, want):
+    """The ONE resolution point for the interpret flag: explicit values are
+    honored; None means compiled kernels exactly on TPU (the only backend
+    that lowers these Mosaic kernels) and interpret emulation elsewhere —
+    including GPU, where pltpu scalar prefetch cannot compile."""
+    monkeypatch.setattr(jax, "default_backend", lambda: backend)
+    assert ops.resolve_interpret(arg) is want
+
+
+def test_engines_resolve_interpret_through_ops(monkeypatch):
+    """use_pallas=True engines (and the server) default to COMPILED kernels
+    on TPU — interpret only when explicitly requested or the backend
+    cannot lower Mosaic. The engine must consume the resolved bool, not
+    the raw None."""
+    g = erdos_renyi(12, 2.5, num_levels=2, seed=6)
+    idx = build_wc_index(g)
+    # this test host is CPU: None resolves to interpret=True
+    assert DeviceQueryEngine(idx, use_pallas=True).interpret is True
+    assert DeviceQueryEngine(idx, use_pallas=True,
+                             interpret=False).interpret is False
+    srv = WCSDServer(idx, layout="csr", use_pallas=True)
+    assert srv.engine.interpret is True
+    # on an accelerator backend the same default resolves to compiled
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert DeviceQueryEngine(idx, use_pallas=True).interpret is False
+    assert DeviceQueryEngine(idx, use_pallas=True,
+                             interpret=True).interpret is True
+
+
+def test_ragged_harness_coverage_target():
+    """>= 50 generated real-graph instances (2 lane blocks x 25) plus the
+    adversarial-skew block; when blocks ran in this session each produced
+    its full example count (no silent early exits)."""
+    assert 2 * EXAMPLES_PER_BLOCK >= 50
+    if _instances_run[0]:
+        assert _instances_run[0] % EXAMPLES_PER_BLOCK == 0
