@@ -286,6 +286,7 @@ def bench_serving(batch=4096, n_nodes=3000):
     ]
     rows += _bench_profile_vs_loop(idx, s[:batch], t[:batch], name)
     rows += _bench_ragged_dispatch()
+    rows += _bench_rowsharded_ragged()
     return rows
 
 
@@ -374,6 +375,62 @@ def _bench_ragged_dispatch(flush=2048, lane=32):
              value=t_bp / len(s) * 1e6),
         dict(table="serving", dataset=name, algo="ragged_speedup",
              value=t_bp / t_rag),
+    ]
+
+
+def _bench_rowsharded_ragged(flush=2048, lane=32):
+    """The acceptance row of the ROW-SHARDED ragged path: ragged vs
+    bucket-pair µs/query with the label store tile-row-sharded over the
+    mesh (``device_budget_bytes=1`` forces mode="sharded_labels"), on the
+    same adversarial skewed store as `_bench_ragged_dispatch`. Both
+    engines are asserted bit-identical before timing.
+
+    What the ragged path removes here is the PER-BUCKET-PAIR collective
+    loop: the bucket-pair engine pays one staged sub-batch plus its row
+    gathers for every populated (bucket_s, bucket_t) pair of the flush,
+    while the ragged path runs ONE worklist tile gather plus one launch
+    per device regardless of the bucket mix. Also rides along:
+    ``compressed_bytes_ratio``, the uncompressed/compressed arena bytes
+    on this store (the capacity multiplier a fixed HBM budget gains from
+    `CompressedArena`)."""
+    from repro.core.query import ShardedQueryEngine
+    from repro.launch.mesh import make_serving_mesh
+
+    pidx, heavy = make_skewed_store(lane=lane)
+    rng = np.random.default_rng(5)
+    s = rng.integers(0, pidx.num_nodes, flush).astype(np.int32)
+    t = rng.integers(0, pidx.num_nodes, flush).astype(np.int32)
+    wl = rng.integers(0, pidx.num_levels + 1, flush).astype(np.int32)
+    n_salt = min(64, flush // 4)
+    s[:n_salt] = np.resize(heavy, n_salt)
+    t[n_salt // 2:n_salt + n_salt // 2] = np.resize(heavy, n_salt)
+    mesh = make_serving_mesh()
+    ragged = ShardedQueryEngine(pidx, mesh=mesh, layout="csr", lane=lane,
+                                device_budget_bytes=1, dispatch="ragged")
+    bp = ShardedQueryEngine(pidx, mesh=mesh, layout="csr", lane=lane,
+                            device_budget_bytes=1, dispatch="bucket_pair")
+    assert ragged.mode == bp.mode == "sharded_labels"
+    out_r = np.asarray(ragged.query(s, t, wl))              # warmup compiles
+    out_b = np.asarray(bp.query(s, t, wl))
+    assert np.array_equal(out_r, out_b), \
+        "row-sharded ragged diverged from the bucket-pair oracle"
+    t_rag, _ = _time(lambda: np.asarray(ragged.query(s, t, wl)), repeat=5)
+    t_bp, _ = _time(lambda: np.asarray(bp.query(s, t, wl)), repeat=5)
+    packed = pidx.packed(lane=lane)
+    ar_bytes = packed.arena(lane=lane).memory_bytes()
+    comp = packed.compressed_arena(lane=lane)
+    name = f"SKEW{pidx.labels.num_buckets}"
+    return [
+        dict(table="serving", dataset=name,
+             algo="rowsharded_ragged_us_per_query",
+             value=t_rag / len(s) * 1e6),
+        dict(table="serving", dataset=name,
+             algo="rowsharded_bucket_pair_us_per_query",
+             value=t_bp / len(s) * 1e6),
+        dict(table="serving", dataset=name, algo="rowsharded_ragged_speedup",
+             value=t_bp / t_rag),
+        dict(table="serving", dataset=name, algo="compressed_bytes_ratio",
+             value=ar_bytes / comp.memory_bytes()),
     ]
 
 

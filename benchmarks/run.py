@@ -33,7 +33,10 @@ REQUIRED_ALGOS = {
                 "sharded_speedup", "profile_levels", "profile_us_per_query",
                 "profile_loop_us_per_query", "profile_speedup",
                 "ragged_buckets", "ragged_us_per_query",
-                "bucket_pair_us_per_query", "ragged_speedup"},
+                "bucket_pair_us_per_query", "ragged_speedup",
+                "rowsharded_ragged_us_per_query",
+                "rowsharded_bucket_pair_us_per_query",
+                "rowsharded_ragged_speedup", "compressed_bytes_ratio"},
     "label_store": {"entries", "padded_bytes", "csr_bytes",
                     "dense_us_per_query", "seg_us_per_query"},
 }
@@ -63,9 +66,14 @@ CHECK_GATES = {
 
 # absolute floors independent of the baseline (acceptance trends): the
 # ragged megakernel must stay >= 2x over the bucket-pair dispatch loop on
-# the >= 8-bucket skewed store (observed 5.8-11.6x)
+# the >= 8-bucket skewed store (observed 5.8-11.6x), including with the
+# store row-sharded (one tile gather + one launch per device vs the
+# per-bucket-pair collective loop), and the compressed arena must keep
+# >= 1.8x the rows per byte of the uncompressed one (observed ~2.35x)
 CHECK_FLOORS = {
-    "serving": {"ragged_speedup": 2.0, "ragged_buckets": 8.0},
+    "serving": {"ragged_speedup": 2.0, "ragged_buckets": 8.0,
+                "rowsharded_ragged_speedup": 2.0,
+                "compressed_bytes_ratio": 1.8},
 }
 
 # which committed artifact holds each suite's baseline rows

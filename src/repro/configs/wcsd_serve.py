@@ -31,9 +31,12 @@ class ServeConfig:
     emulation elsewhere or by explicit request — so serving is NOT
     pinned to interpret mode. ``dispatch`` picks the CSR
     query path: "ragged" (one megakernel launch per flush, the default) or
-    "bucket_pair" (the per-bucket-pair oracle loop). The same stack serves
-    profile (staircase) queries — `WCSDServer.submit_profile` needs no
-    extra configuration; its level count comes from the index."""
+    "bucket_pair" (the per-bucket-pair oracle loop). ``compressed`` (csr +
+    ragged only) serves from the bf16/delta-coded `CompressedArena` —
+    ~2.4x the rows per device under the same ``device_budget_bytes``; hub
+    ids exact, distances within the documented bound. The same stack
+    serves profile (staircase) queries — `WCSDServer.submit_profile`
+    needs no extra configuration; its level count comes from the index."""
 
     backend: str = "sharded"          # "device" | "sharded"
     layout: str = "csr"               # "padded" | "csr"
@@ -45,6 +48,7 @@ class ServeConfig:
     undirected: bool = True
     multi_pod: bool = False           # ("pod", "data") batch axes
     device_budget_bytes: int | None = None
+    compressed: bool = False          # CompressedArena store (csr + ragged)
 
     def server_kwargs(self) -> dict:
         return dict(backend=self.backend, layout=self.layout,
@@ -54,7 +58,7 @@ class ServeConfig:
                     memo_capacity=self.memo_capacity,
                     undirected=self.undirected,
                     device_budget_bytes=self.device_budget_bytes,
-                    multi_pod=self.multi_pod)
+                    multi_pod=self.multi_pod, compressed=self.compressed)
 
 
 def serve_config() -> ServeConfig:

@@ -240,10 +240,11 @@ def ragged_worklist_len(tile_cnt: np.ndarray, s: np.ndarray, t: np.ndarray
 
 
 @functools.partial(jax.jit, static_argnames=("worklist_len", "interpret",
-                                             "use_kernel"))
+                                             "use_kernel", "compressed"))
 def ragged_query_batch(hub, dist, wlev, tile_lo, tile_hi,
                        tile_base, tile_cnt, stq, *, worklist_len: int,
-                       interpret: bool = True, use_kernel: bool = True):
+                       interpret: bool = True, use_kernel: bool = True,
+                       compressed: bool = False):
     """Plan + launch, fused into ONE device call: emit the worklist from
     the staged queries and answer every query with a single ragged kernel
     launch.
@@ -251,7 +252,10 @@ def ragged_query_batch(hub, dist, wlev, tile_lo, tile_hi,
     hub..tile_cnt: the `LabelArena` arrays; stq: [3, Q] staged
     (s, t, w_level) — one H2D transfer carries the whole batch. Returns
     [Q] int32 distances (INF_DIST when no feasible path); pad queries
-    should carry an infeasible level and are the caller's to discard."""
+    should carry an infeasible level and are the caller's to discard.
+    ``compressed=True`` reads `CompressedArena` arrays instead (hub deltas,
+    float distances, int8 levels — decoded in-kernel); hub/dist/wlev must
+    then be the compressed trio, the index arrays are shared."""
     from ..kernels import ops as kops
     s, t, wl = stq[0], stq[1], stq[2]
     qidx, stile, ttile, first = emit_ragged_worklist(
@@ -259,18 +263,20 @@ def ragged_query_batch(hub, dist, wlev, tile_lo, tile_hi,
     # one trash output row for worklist pads; no stored wlev reaches 2^20,
     # so its level is infeasible at every entry
     wq = jnp.concatenate([wl, jnp.full((1,), 1 << 20, jnp.int32)])
-    out = kops.wcsd_query_ragged(hub, dist, wlev, tile_lo, tile_hi,
-                                 qidx, stile, ttile, first, wq,
-                                 interpret=interpret, use_kernel=use_kernel)
+    op = (kops.wcsd_query_ragged_compressed if compressed
+          else kops.wcsd_query_ragged)
+    out = op(hub, dist, wlev, tile_lo, tile_hi, qidx, stile, ttile, first,
+             wq, interpret=interpret, use_kernel=use_kernel)
     return out[: s.shape[0]]
 
 
 @functools.partial(jax.jit, static_argnames=("worklist_len", "num_levels",
-                                             "interpret", "use_kernel"))
+                                             "interpret", "use_kernel",
+                                             "compressed"))
 def ragged_profile_batch(hub, dist, wlev, tile_lo, tile_hi,
                          tile_base, tile_cnt, stq, *, worklist_len: int,
                          num_levels: int, interpret: bool = True,
-                         use_kernel: bool = True):
+                         use_kernel: bool = True, compressed: bool = False):
     """Profile twin of `ragged_query_batch`: stq is [2, Q] staged (s, t);
     every constraint level of every query is answered by the one launch.
     Returns [Q, num_levels + 1] staircases."""
@@ -278,11 +284,11 @@ def ragged_profile_batch(hub, dist, wlev, tile_lo, tile_hi,
     s, t = stq[0], stq[1]
     qidx, stile, ttile, first = emit_ragged_worklist(
         tile_base, tile_cnt, s, t, worklist_len=worklist_len)
-    out = kops.wcsd_profile_ragged(hub, dist, wlev, tile_lo, tile_hi,
-                                   qidx, stile, ttile, first,
-                                   num_rows=int(s.shape[0]) + 1,
-                                   num_levels=num_levels,
-                                   interpret=interpret, use_kernel=use_kernel)
+    op = (kops.wcsd_profile_ragged_compressed if compressed
+          else kops.wcsd_profile_ragged)
+    out = op(hub, dist, wlev, tile_lo, tile_hi, qidx, stile, ttile, first,
+             num_rows=int(s.shape[0]) + 1, num_levels=num_levels,
+             interpret=interpret, use_kernel=use_kernel)
     return out[: s.shape[0]]
 
 
@@ -441,7 +447,7 @@ class DeviceQueryEngine(_QueryEngineBase):
     def __init__(self, idx: WCIndex | PackedWCIndex, cap: int | None = None,
                  use_pallas: bool = False, interpret: bool | None = None,
                  layout: str = "padded", dispatch: str = "ragged",
-                 lane: int | None = None):
+                 lane: int | None = None, compressed: bool = False):
         from ..kernels.ops import resolve_interpret
         if layout not in ("padded", "csr"):
             raise ValueError(f"unknown layout: {layout!r}")
@@ -450,10 +456,16 @@ class DeviceQueryEngine(_QueryEngineBase):
         if layout == "csr" and cap is not None:
             raise ValueError("cap (label-row trimming) only applies to the "
                              "padded layout; the CSR store keeps exact rows")
+        if compressed and (layout, dispatch) != ("csr", "ragged"):
+            raise ValueError("compressed=True requires layout='csr' with "
+                             "dispatch='ragged' (only the arena megakernel "
+                             "decodes the compressed tile format)")
         self.layout = layout
         self.use_pallas = use_pallas
         self.interpret = resolve_interpret(interpret)
         self.num_levels = idx.num_levels
+        self.compressed = False
+        self.compression_overflow = False
         if layout == "csr":
             from .wc_index import LANE
             lane = LANE if lane is None else int(lane)
@@ -467,9 +479,22 @@ class DeviceQueryEngine(_QueryEngineBase):
                 ar = packed.arena(lane=lane)
                 self._tile_cnt_np = ar.tile_cnt
                 self._pad_vertex = int(np.argmin(ar.tile_cnt))
-                self._arena = tuple(jnp.asarray(a) for a in (
-                    ar.hub, ar.dist, ar.wlev, ar.tile_lo, ar.tile_hi,
-                    ar.tile_base, ar.tile_cnt))
+                src = ar
+                if compressed:
+                    comp = packed.compressed_arena(lane=lane)
+                    if comp.num_overflow_tiles:
+                        # the store does not fit the compressed format
+                        # losslessly (hub-delta / level / distance range
+                        # overflow) — serve uncompressed and say so rather
+                        # than silently corrupting answers
+                        self.compression_overflow = True
+                    else:
+                        self.compressed = True
+                        src = comp
+                trio = ((src.hub_delta, src.dist, src.wlev)
+                        if self.compressed else (src.hub, src.dist, src.wlev))
+                self._arena = tuple(jnp.asarray(a) for a in trio + (
+                    src.tile_lo, src.tile_hi, src.tile_base, src.tile_cnt))
             else:
                 self._tiles = [tuple(jnp.asarray(a)
                                      for a in packed.bucket_tiles(b))
@@ -523,7 +548,8 @@ class DeviceQueryEngine(_QueryEngineBase):
         res = ragged_query_batch(*self._arena, jnp.asarray(stq),
                                  worklist_len=wl_len,
                                  interpret=self.interpret,
-                                 use_kernel=self.use_pallas)
+                                 use_kernel=self.use_pallas,
+                                 compressed=self.compressed)
         return PendingResult(lambda: np.asarray(res)[:n])
 
     def _query_segmented_async(self, s, t, w_level) -> PendingResult:
@@ -575,7 +601,8 @@ class DeviceQueryEngine(_QueryEngineBase):
                                    worklist_len=wl_len,
                                    num_levels=self.num_levels,
                                    interpret=self.interpret,
-                                   use_kernel=self.use_pallas)
+                                   use_kernel=self.use_pallas,
+                                   compressed=self.compressed)
         return PendingResult(lambda: np.asarray(res)[:n])
 
     def _profile_segmented_async(self, s, t) -> PendingResult:
@@ -610,19 +637,33 @@ class ShardedQueryEngine(_QueryEngineBase):
     scalar-prefetch kernel runs inside `shard_map`.
 
     mode="sharded_labels": when the store exceeds ``device_budget_bytes``,
-    label tiles shard their vertex/row axis over the same devices in
-    contiguous blocks. Query row ids are replicated; each device
+    the label store shards its vertex/tile-row axis over the same devices
+    in contiguous blocks. Query row ids are replicated; each device
     contributes its owned label rows and one reduce-scatter
-    (`distributed.collectives.row_gather_psum_scatter`) hands every device
-    exactly the gathered rows of its own batch slice — only touched rows
-    cross the interconnect, and each crosses it once. The masked join then
-    runs locally on the XLA path — the gather, not the compare loop, is
-    the bottleneck this mode exists for — so `use_pallas` only affects
-    replicated mode.
+    (`distributed.collectives`) hands every device exactly the gathered
+    rows of its own batch slice — only touched rows cross the
+    interconnect, and each crosses it once. dispatch="ragged" keeps the
+    megakernel in this mode too: every device emits the ragged worklist
+    of its own batch slice, ONE fused reduce-scatter
+    (`ragged_tile_gather`) delivers the worklist's arena tiles to their
+    consuming device, and the one-per-device ragged launch joins the
+    gathered tiles — a flush is one kernel launch per device plus one
+    collective, and `use_pallas` / `interpret` route through
+    `kernels.ops` exactly as in replicated mode. dispatch="bucket_pair"
+    keeps the per-bucket row-gather loop as the differential oracle.
+
+    ``compressed=True`` (csr + ragged only) serves from the
+    `CompressedArena` — bf16 distances, delta-coded int16 hub ids, int8
+    levels, decoded in-kernel — roughly 2.4x the rows per device under
+    the same ``device_budget_bytes``. Hub ids and levels are exact; see
+    `CompressedArena` for the documented distance error bound. Stores
+    whose deltas/levels overflow the compressed format fall back to the
+    uncompressed arena with ``compression_overflow = True``.
 
     Every query is answered by per-query integer min-plus reductions that
     no partitioning reorders, so results are bit-for-bit identical to
-    `DeviceQueryEngine` on the same index.
+    `DeviceQueryEngine` on the same index (exactly, when uncompressed;
+    within the documented distance bound when compressed).
     """
 
     def __init__(self, idx: WCIndex | PackedWCIndex, mesh=None,
@@ -630,7 +671,7 @@ class ShardedQueryEngine(_QueryEngineBase):
                  interpret: bool | None = None, layout: str = "csr",
                  device_budget_bytes: int | None = None,
                  multi_pod: bool = False, dispatch: str = "ragged",
-                 lane: int | None = None):
+                 lane: int | None = None, compressed: bool = False):
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         from ..kernels.ops import resolve_interpret
@@ -665,6 +706,12 @@ class ShardedQueryEngine(_QueryEngineBase):
         self._qreplicated = NamedSharding(mesh, P(None))
         self._fns: dict = {}  # jitted shard_map callables, one per path
 
+        if compressed and (layout, dispatch) != ("csr", "ragged"):
+            raise ValueError("compressed=True requires layout='csr' with "
+                             "dispatch='ragged' (only the arena megakernel "
+                             "decodes the compressed tile format)")
+        self.compressed = False
+        self.compression_overflow = False
         if layout == "csr":
             from .wc_index import LANE
             lane = LANE if lane is None else int(lane)
@@ -673,7 +720,24 @@ class ShardedQueryEngine(_QueryEngineBase):
             self._bucket_of = packed.bucket_of
             self._slot_of = packed.slot_of
             self.num_buckets = packed.num_buckets
-            self.store_bytes_per_device = packed.tile_memory_bytes()
+            if dispatch == "ragged":
+                ar = packed.arena(lane=lane)
+                src = ar
+                if compressed:
+                    comp = packed.compressed_arena(lane=lane)
+                    if comp.num_overflow_tiles:
+                        # lossless fallback: the store overflows the
+                        # compressed cell ranges, serve uncompressed
+                        self.compression_overflow = True
+                    else:
+                        self.compressed = True
+                        src = comp
+                # the mode decision sees the bytes the chosen arena
+                # actually costs — compression raises the row count a
+                # fixed budget admits before sharding kicks in
+                self.store_bytes_per_device = src.memory_bytes()
+            else:
+                self.store_bytes_per_device = packed.tile_memory_bytes()
         else:
             h, d, w, c = _build_padded_store(idx, cap, lane_pad=use_pallas)
             self.store_bytes_per_device = int(
@@ -685,29 +749,29 @@ class ShardedQueryEngine(_QueryEngineBase):
         if self.mode == "sharded_labels":
             self.store_bytes_per_device = ceil_to(
                 self.store_bytes_per_device, self.ndev) // self.ndev
-        # the ragged megakernel reads the whole arena, so it requires the
-        # replicated placement; the vertex/row-sharded store falls back to
-        # the bucket-pair dispatch loop (whose row gathers the reduce-
-        # scatter collective was built for). The padded layout has no
-        # dispatch choice (one dense store, one path).
-        if layout == "csr":
-            self.dispatch = (dispatch if self.mode == "replicated"
-                             else "bucket_pair")
-        else:
-            self.dispatch = "dense"
+        # the csr layout keeps the requested dispatch in BOTH placements:
+        # row-sharded ragged routes each device's worklist tiles to their
+        # consumer with one fused reduce-scatter (`ragged_tile_gather`).
+        # The padded layout has no dispatch choice (one store, one path).
+        self.dispatch = dispatch if layout == "csr" else "dense"
 
         rep = NamedSharding(mesh, P(*(None, None)))
         if layout == "csr":
             if self.dispatch == "ragged":
-                ar = packed.arena(lane=lane)
                 self._tile_cnt_np = ar.tile_cnt
+                self._tile_base_np = ar.tile_base
+                self._num_tiles_np = int(ar.num_tiles)
                 self._pad_vertex = int(np.argmin(ar.tile_cnt))
+                trio = ((src.hub_delta, src.dist, src.wlev)
+                        if self.compressed else (src.hub, src.dist, src.wlev))
+                rest = (src.tile_lo, src.tile_hi, src.tile_base, src.tile_cnt)
                 rep1 = NamedSharding(mesh, P(None))
-                self._arena = tuple(
-                    jax.device_put(a, rep if a.ndim == 2 else rep1)
-                    for a in (ar.hub, ar.dist, ar.wlev, ar.tile_lo,
-                              ar.tile_hi, ar.tile_base, ar.tile_cnt))
-                self.store_bytes_per_device = ar.memory_bytes()
+                if self.mode == "sharded_labels":
+                    trio = self._shard_arena_tiles(trio)
+                else:
+                    trio = tuple(jax.device_put(a, rep) for a in trio)
+                self._arena = trio + tuple(jax.device_put(a, rep1)
+                                           for a in rest)
             else:
                 self._tiles = []
                 for b in range(packed.num_buckets):
@@ -739,6 +803,26 @@ class ShardedQueryEngine(_QueryEngineBase):
             h = np.pad(h, ((0, npad - n), (0, 0)), constant_values=-1)
             d = np.pad(d, ((0, npad - n), (0, 0)), constant_values=INF_DIST)
             w = np.pad(w, ((0, npad - n), (0, 0)), constant_values=-1)
+        sh = NamedSharding(self.mesh, self._P(self.batch_axes, None))
+        return tuple(jax.device_put(a, sh) for a in (h, d, w))
+
+    def _shard_arena_tiles(self, trio):
+        """Pad the arena trio's tile-row axis to a device multiple (pad
+        tiles carry the standard pad contract and are never named by any
+        worklist — tile_base/tile_cnt only address real tiles) and shard
+        it over the batch axes; records the per-device block height for
+        the worklist tile gather."""
+        from jax.sharding import NamedSharding
+        h, d, w = trio
+        T = h.shape[0]
+        Tpad = ceil_to(max(T, 1), self.ndev)
+        self._tiles_per = Tpad // self.ndev
+        if Tpad != T:
+            pad = ((0, Tpad - T), (0, 0))
+            dfill = INF_DIST if d.dtype == np.int32 else np.inf
+            h = np.pad(h, pad, constant_values=-1)
+            d = np.pad(d, pad, constant_values=dfill)
+            w = np.pad(w, pad, constant_values=-1)
         sh = NamedSharding(self.mesh, self._P(self.batch_axes, None))
         return tuple(jax.device_put(a, sh) for a in (h, d, w))
 
@@ -886,40 +970,194 @@ class ShardedQueryEngine(_QueryEngineBase):
             self._tile_cnt_np, stq[0, k * b_loc:(k + 1) * b_loc],
             stq[1, k * b_loc:(k + 1) * b_loc]) for k in range(self.ndev))
 
+    def _balance_ragged(self, stq):
+        """Load-balanced device assignment for the row-sharded flush: hot
+        queries usually arrive clustered (one tenant, one hot subgraph),
+        and the static per-shard worklist capacity is the MAX over device
+        slices — one heavy contiguous slice makes every device pay its
+        worklist. Queries are dealt in descending tile-pair cost, each
+        round handing the heaviest remaining queries to the least-loaded
+        devices (capacity-constrained LPT: every device gets exactly
+        npad/ndev), so the capacity tracks the batch mean instead.
+        Returns (stq reordered device-major, perm); results are
+        unpermuted with ``out[perm] = res``."""
+        ndev = self.ndev
+        if ndev == 1:
+            return stq, np.arange(stq.shape[1])
+        tc = self._tile_cnt_np
+        c = tc[stq[0]].astype(np.int64) * tc[stq[1]]
+        order = np.argsort(-c, kind="stable")
+        b = stq.shape[1] // ndev
+        load = np.zeros(ndev, np.int64)
+        perm = np.empty(stq.shape[1], np.int64)
+        cs = c[order].reshape(b, ndev)
+        ob = order.reshape(b, ndev)
+        for blk in range(b):
+            dst = np.argsort(load, kind="stable")
+            perm[dst * b + blk] = ob[blk]
+            load[dst] += cs[blk]
+        return stq[:, perm], perm
+
+    def _balanced_worklist_len(self, stq) -> int:
+        """Per-shard worklist capacity for a BALANCED flush: slice totals
+        sit near the batch mean, so capacity rounds to the next
+        512-multiple (not the next power of two — doubling a balanced
+        slice's capacity would hand every device back the pad waste the
+        balancing just removed)."""
+        b = stq.shape[1] // self.ndev
+        tc = self._tile_cnt_np
+        tot = max(int(tc[stq[0, k * b:(k + 1) * b]].astype(np.int64)
+                      @ tc[stq[1, k * b:(k + 1) * b]])
+                  for k in range(self.ndev))
+        return ceil_to(max(tot, 1), 512)
+
+    def _gather_plan(self, stq, worklist_len: int):
+        """Host-side gather plan for the row-sharded arena: per device, the
+        sorted DISTINCT arena tiles its batch slice can name — the union of
+        the slice vertices' tile ranges, NOT the worklist (a hub-heavy row
+        joined by a thousand queries still contributes its tiles once).
+        Rows are padded to a static capacity G with the last real tile id
+        (keeps the array sorted for the device-side binary search); G is
+        rounded up to a 256-multiple so the compiled-shape count stays
+        small. O(B + tiles named) numpy, the same order of host work as
+        `ragged_worklist_len`."""
+        ndev = self.ndev
+        b = stq.shape[1] // ndev
+        tb, tc = self._tile_base_np, self._tile_cnt_np
+        uniqs = []
+        for k in range(ndev):
+            v = np.unique(np.concatenate([stq[0, k * b:(k + 1) * b],
+                                          stq[1, k * b:(k + 1) * b]]))
+            cnt = tc[v].astype(np.int64)
+            # expand the [tb[v], tb[v] + tc[v]) ranges vectorized
+            ends = np.cumsum(cnt)
+            idx = np.arange(int(ends[-1]))
+            own = np.searchsorted(ends, idx, side="right")
+            uniqs.append(np.unique(
+                tb[v][own] + (idx - (ends[own] - cnt[own]))).astype(np.int32))
+        G = ceil_to(max(len(u) for u in uniqs), 256)
+        uniq = np.full((ndev, G), self._num_tiles_np - 1, dtype=np.int32)
+        for k, u in enumerate(uniqs):
+            uniq[k, :len(u)] = u
+        return uniq, G
+
     def _query_ragged_async(self, s, t, w_level) -> PendingResult:
         n = len(s)
         stq = self._stage_ragged(s, t, w_level)
+        if self.mode == "sharded_labels":
+            stq, perm = self._balance_ragged(stq)
+            wl_len = self._balanced_worklist_len(stq)
+            uniq, G = self._gather_plan(stq, wl_len)
+            fn = self._ragged_fn(wl_len, profile=False, gather_cap=G)
+            res = fn(*self._arena, self._put_staged(stq),
+                     self._put_staged(uniq))
+
+            def finalize():
+                out = np.empty(stq.shape[1], dtype=np.int32)
+                out[perm] = np.asarray(res)
+                return out[:n]
+
+            return PendingResult(finalize)
         fn = self._ragged_fn(self._shard_worklist_len(stq), profile=False)
         res = fn(*self._arena, self._put_staged(stq))
         return PendingResult(lambda: np.asarray(res)[:n])
 
-    def _ragged_fn(self, worklist_len: int, profile: bool):
-        """Jitted shard_map over `ragged_query_batch` / the profile twin:
-        the arena replicated, the staged batch split over the batch axes,
-        each shard emitting + launching its own slice's worklist — still
-        exactly one kernel launch per device per flush."""
-        key = ("csr-ragged", profile, worklist_len)
+    def _ragged_fn(self, worklist_len: int, profile: bool,
+                   gather_cap: int | None = None):
+        """Jitted shard_map over the ragged megakernel path.
+
+        Replicated mode: the arena on every device, the staged batch split
+        over the batch axes, each shard emitting + launching its own
+        slice's worklist — one kernel launch per device per flush.
+
+        Sharded-labels mode: the [T, lane] trio is tile-row-sharded, the
+        staged batch load-balanced on host (`_balance_ragged`) and
+        replicated alongside the host `_gather_plan` — per device, the
+        sorted DISTINCT tiles its batch slice can name. ONE fused
+        reduce-scatter (`ragged_tile_gather`) hands device k exactly
+        those tiles, each crossing the interconnect once however many
+        worklist entries name it (a hub-heavy row can be joined by
+        thousands of queries in a flush). Each device then emits only its
+        OWN slice's worklist (`emit_ragged_worklist`, no cross-device
+        work), relabels it into the gathered buffer by binary search, and
+        the same ragged launch joins it against the batch slice. A flush
+        is one kernel launch per device plus one collective, with
+        `use_pallas` / `interpret` routing through `kernels.ops` exactly
+        as in replicated mode."""
+        key = ("csr-ragged", self.mode, profile, worklist_len, gather_cap)
         if key in self._fns:
             return self._fns[key]
         P, q = self._P, self._qspec
         use_pallas, interpret = self.use_pallas, self.interpret
+        compressed = self.compressed
         W = self.num_levels
 
-        if profile:
-            def local(hub, dist, wlev, lo, hi, tbase, tcnt, stq):
-                return ragged_profile_batch(
-                    hub, dist, wlev, lo, hi, tbase, tcnt, stq,
-                    worklist_len=worklist_len, num_levels=W,
-                    interpret=interpret, use_kernel=use_pallas)
-        else:
-            def local(hub, dist, wlev, lo, hi, tbase, tcnt, stq):
-                return ragged_query_batch(
-                    hub, dist, wlev, lo, hi, tbase, tcnt, stq,
-                    worklist_len=worklist_len,
-                    interpret=interpret, use_kernel=use_pallas)
+        if self.mode == "replicated":
+            if profile:
+                def local(hub, dist, wlev, lo, hi, tbase, tcnt, stq):
+                    return ragged_profile_batch(
+                        hub, dist, wlev, lo, hi, tbase, tcnt, stq,
+                        worklist_len=worklist_len, num_levels=W,
+                        interpret=interpret, use_kernel=use_pallas,
+                        compressed=compressed)
+            else:
+                def local(hub, dist, wlev, lo, hi, tbase, tcnt, stq):
+                    return ragged_query_batch(
+                        hub, dist, wlev, lo, hi, tbase, tcnt, stq,
+                        worklist_len=worklist_len,
+                        interpret=interpret, use_kernel=use_pallas,
+                        compressed=compressed)
 
-        in_specs = (P(None, None),) * 3 + (P(None),) * 4 \
-            + (P(None, self.batch_axes),)
+            in_specs = (P(None, None),) * 3 + (P(None),) * 4 \
+                + (P(None, self.batch_axes),)
+        else:
+            axes, ndev = self.batch_axes, self.ndev
+            tiles_per, WL = self._tiles_per, worklist_len
+
+            def local(hub, dist, wlev, lo, hi, tbase, tcnt, stq, uniq):
+                from ..distributed.collectives import (axis_linear_index,
+                                                       ragged_tile_gather)
+                from ..kernels import ops as kops
+                b = stq.shape[1] // ndev
+                # one fused reduce-scatter routes each device's
+                # host-planned DISTINCT tile list to it, in linear device
+                # order — each tile crosses the interconnect once
+                gh, gd, gw = ragged_tile_gather(
+                    (hub, dist, wlev), uniq.reshape(-1), axes, tiles_per)
+                me = axis_linear_index(axes)
+
+                def mine(a):
+                    return jax.lax.dynamic_slice_in_dim(a, me * b, b)
+
+                qidx, stile, ttile, first = emit_ragged_worklist(
+                    tbase, tcnt, mine(stq[0]), mine(stq[1]),
+                    worklist_len=WL)
+                # relabel worklist tiles into the gathered buffer: the
+                # plan rows are sorted (fill = last real tile id), so a
+                # binary search lands every real entry; worklist pads
+                # name tile 0, whose probe row is trash-routed anyway
+                uniq_me = jax.lax.dynamic_index_in_dim(
+                    uniq, me, axis=0, keepdims=False)
+                sloc = jnp.searchsorted(uniq_me, stile).astype(jnp.int32)
+                tloc = jnp.searchsorted(uniq_me, ttile).astype(jnp.int32)
+                args = (gh, gd, gw, lo[uniq_me], hi[uniq_me], qidx,
+                        sloc, tloc, first)
+                if profile:
+                    op = (kops.wcsd_profile_ragged_compressed if compressed
+                          else kops.wcsd_profile_ragged)
+                    out = op(*args, num_rows=b + 1, num_levels=W,
+                             interpret=interpret, use_kernel=use_pallas)
+                else:
+                    wq = jnp.concatenate([
+                        mine(stq[2]), jnp.full((1,), 1 << 20, jnp.int32)])
+                    op = (kops.wcsd_query_ragged_compressed if compressed
+                          else kops.wcsd_query_ragged)
+                    out = op(*args, wq,
+                             interpret=interpret, use_kernel=use_pallas)
+                return out[:b]
+
+            in_specs = (P(self.batch_axes, None),) * 3 + (P(None),) * 4 \
+                + (P(None, None), P(None, None))
         fn = jax.jit(shard_map_compat(local, self.mesh, in_specs, q))
         self._fns[key] = fn
         return fn
@@ -1003,6 +1241,21 @@ class ShardedQueryEngine(_QueryEngineBase):
     def _profile_ragged_async(self, s, t) -> PendingResult:
         n = len(s)
         stq = self._stage_ragged(s, t)
+        if self.mode == "sharded_labels":
+            stq, perm = self._balance_ragged(stq)
+            wl_len = self._balanced_worklist_len(stq)
+            uniq, G = self._gather_plan(stq, wl_len)
+            fn = self._ragged_fn(wl_len, profile=True, gather_cap=G)
+            res = fn(*self._arena, self._put_staged(stq),
+                     self._put_staged(uniq))
+
+            def finalize():
+                r = np.asarray(res)
+                out = np.empty_like(r)
+                out[perm] = r
+                return out[:n]
+
+            return PendingResult(finalize)
         fn = self._ragged_fn(self._shard_worklist_len(stq), profile=True)
         res = fn(*self._arena, self._put_staged(stq))
         return PendingResult(lambda: np.asarray(res)[:n])

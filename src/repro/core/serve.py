@@ -61,12 +61,16 @@ class WCSDServer:
                  undirected: bool = True, interpret: bool | None = None,
                  backend: str = "device", engine=None, mesh=None,
                  device_budget_bytes: int | None = None,
-                 multi_pod: bool = False, dispatch: str = "ragged"):
+                 multi_pod: bool = False, dispatch: str = "ragged",
+                 compressed: bool = False):
         # layout="csr" serves from the CSR-packed store; dispatch="ragged"
         # (default) answers each flush with ONE megakernel launch over the
         # lane-tiled arena — flush_async is plan-free on host — while
         # dispatch="bucket_pair" keeps the per-bucket-pair dispatch loop
-        # (the differential oracle).
+        # (the differential oracle). compressed=True (csr + ragged only)
+        # serves from the bf16/delta-coded arena (`CompressedArena`) —
+        # ~2.4x the rows per device, hub ids exact, distances within the
+        # documented bound.
         # A PackedWCIndex (device-resident batched builder output) is served
         # as-is under layout="csr" — no repack between build and serve.
         # undirected=False disables the symmetric (s <= t) memo
@@ -82,12 +86,14 @@ class WCSDServer:
         elif backend == "device":
             self.engine = DeviceQueryEngine(idx, use_pallas=use_pallas,
                                             interpret=interpret,
-                                            layout=layout, dispatch=dispatch)
+                                            layout=layout, dispatch=dispatch,
+                                            compressed=compressed)
         elif backend == "sharded":
             self.engine = ShardedQueryEngine(
                 idx, mesh=mesh, use_pallas=use_pallas, interpret=interpret,
                 layout=layout, device_budget_bytes=device_budget_bytes,
-                multi_pod=multi_pod, dispatch=dispatch)
+                multi_pod=multi_pod, dispatch=dispatch,
+                compressed=compressed)
         else:
             raise ValueError(f"unknown backend: {backend!r} "
                              "(expected 'device' or 'sharded')")

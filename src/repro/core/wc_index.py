@@ -305,6 +305,17 @@ class PackedLabels:
             cache[lane] = LabelArena.from_packed(self, lane=lane)
         return cache[lane]
 
+    def compressed_arena(self, lane: int = LANE,
+                         dtype: str = "bfloat16") -> "CompressedArena":
+        """Compressed view of `arena` (cached per (lane, dtype)); see
+        `CompressedArena` and docs/index-format.md §6."""
+        cache = self.__dict__.setdefault("_carena_cache", {})
+        key = (lane, dtype)
+        if key not in cache:
+            cache[key] = CompressedArena.from_arena(self.arena(lane=lane),
+                                                    dtype=dtype)
+        return cache[key]
+
     # ------------------------------------------------------------ conversions
     def bucket_tiles(self, b: int):
         """Bucket b as padded [n_b, W_b] (hub, dist, wlev) tiles.
@@ -429,6 +440,143 @@ class LabelArena:
                           tile_base=tile_base.astype(np.int32),
                           tile_cnt=tile_cnt.astype(np.int32),
                           tile_lo=tile_lo, tile_hi=tile_hi)
+
+
+# the arena's device infinity (kernels/wcsd_query.py DEV_INF): any stored
+# distance at or above this is "no path" and decodes back to INF_DIST
+_DEV_INF = 1 << 29
+_I16_MAX = np.int32(np.iinfo(np.int16).max)   # 32767: hub-delta ceiling
+_I8_MAX = np.int32(np.iinfo(np.int8).max)     # 127:   wlev ceiling
+_F16_MAX_DIST = 65000                         # fp16 finite headroom
+
+
+@dataclasses.dataclass
+class CompressedArena:
+    """Compressed lane-tiled arena: same tile geometry as `LabelArena`,
+    ~2.4x fewer bytes per cell, decoded inside the ragged kernels.
+
+    Per-cell encoding (docs/index-format.md §6):
+
+      hub_delta : [T, lane] int16 — ``hub - tile_lo[t]`` for real cells
+                  (rows are hub-sorted, so deltas are non-negative and
+                  bounded by the tile's hub span); pad cells keep the -1
+                  sentinel directly (``tile_lo + delta`` never reaches -1
+                  for a real cell, so the sign IS the pad flag).
+      dist      : [T, lane] bfloat16 (default) or float16 — real distances
+                  rounded to the float format; INF_DIST pads and any
+                  "no path" value >= DEV_INF encode as +inf, which the
+                  decoder clamps back to the integer infinity.
+      wlev      : [T, lane] int8 — quality levels (< 128 in practice);
+                  pad sentinel -1 survives as-is.
+
+    Tiles the narrow encoding cannot hold losslessly-enough — a hub span
+    wider than int16, a quality level past int8, or (fp16 only) a finite
+    distance past the format's range — are FLAGGED in ``overflow`` and
+    kept verbatim in the int32 side tables (``side_*``, one row per
+    overflowed tile, indexed by ``side_slot``). `decode` restores them
+    exactly; the query engines refuse to serve a flagged store compressed
+    and fall back to the uncompressed arena instead (never silent
+    corruption — see tests/test_compressed_arena.py).
+
+    Distance precision (the documented bound, asserted in the tests):
+    bfloat16 has an 8-bit significand, so distances <= 256 round-trip
+    exactly and larger ones carry relative error <= 2^-8; float16 is
+    exact up to 2048 with relative error <= 2^-11 beyond.
+    """
+
+    hub_delta: np.ndarray  # [T, lane] int16
+    dist: np.ndarray       # [T, lane] bfloat16 | float16
+    wlev: np.ndarray       # [T, lane] int8
+    tile_base: np.ndarray  # [V] int32
+    tile_cnt: np.ndarray   # [V] int32
+    tile_lo: np.ndarray    # [T] int32
+    tile_hi: np.ndarray    # [T] int32
+    overflow: np.ndarray   # [T] bool — tile lives in the side tables
+    side_slot: np.ndarray  # [T] int32 — row in side_* (0 where not flagged)
+    side_hub: np.ndarray   # [n_overflow, lane] int32
+    side_dist: np.ndarray  # [n_overflow, lane] int32
+    side_wlev: np.ndarray  # [n_overflow, lane] int32
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.hub_delta.shape[0])
+
+    @property
+    def lane(self) -> int:
+        return int(self.hub_delta.shape[1])
+
+    @property
+    def num_overflow_tiles(self) -> int:
+        return int(self.side_hub.shape[0])
+
+    def memory_bytes(self) -> int:
+        """Device-resident footprint: compressed cells + index tables +
+        whatever side tables the overflowed tiles forced."""
+        return int(self.hub_delta.nbytes + self.dist.nbytes
+                   + self.wlev.nbytes + self.tile_base.nbytes
+                   + self.tile_cnt.nbytes + self.tile_lo.nbytes
+                   + self.tile_hi.nbytes + self.overflow.nbytes
+                   + self.side_slot.nbytes + self.side_hub.nbytes
+                   + self.side_dist.nbytes + self.side_wlev.nbytes)
+
+    @staticmethod
+    def from_arena(ar: "LabelArena",
+                   dtype: str = "bfloat16") -> "CompressedArena":
+        if dtype not in ("bfloat16", "float16"):
+            raise ValueError(f"unsupported compressed dist dtype: {dtype!r}")
+        if dtype == "bfloat16":
+            import ml_dtypes
+            fdt = np.dtype(ml_dtypes.bfloat16)
+        else:
+            fdt = np.dtype(np.float16)
+        hub, dist, wlev = ar.hub, ar.dist, ar.wlev
+        pad = hub < 0
+        real = ~pad
+        delta = hub.astype(np.int64) - ar.tile_lo[:, None].astype(np.int64)
+        no_path = dist >= _DEV_INF
+        ovf = ((real & (delta > int(_I16_MAX))).any(axis=1)
+               | (real & (wlev > int(_I8_MAX))).any(axis=1))
+        if fdt == np.float16:
+            ovf |= (real & ~no_path & (dist > _F16_MAX_DIST)).any(axis=1)
+        hub_delta = np.where(pad, -1,
+                             np.clip(delta, 0, int(_I16_MAX))
+                             ).astype(np.int16)
+        with np.errstate(over="ignore"):   # fp16: overflowed tiles are
+            dist_c = np.where(no_path, np.inf,  # flagged + side-tabled
+                              dist.astype(np.float64)).astype(fdt)
+        wlev_c = np.clip(wlev, -1, int(_I8_MAX)).astype(np.int8)
+        slots = np.flatnonzero(ovf)
+        side_slot = np.zeros(hub.shape[0], dtype=np.int32)
+        side_slot[slots] = np.arange(len(slots), dtype=np.int32)
+        return CompressedArena(
+            hub_delta=hub_delta, dist=dist_c, wlev=wlev_c,
+            tile_base=ar.tile_base, tile_cnt=ar.tile_cnt,
+            tile_lo=ar.tile_lo, tile_hi=ar.tile_hi,
+            overflow=ovf, side_slot=side_slot,
+            side_hub=hub[slots].copy(), side_dist=dist[slots].copy(),
+            side_wlev=wlev[slots].copy())
+
+    def decode(self) -> "LabelArena":
+        """Exact inverse of the tile geometry (hub ids and wlev are always
+        bit-exact; distances round-trip within the documented float bound,
+        and overflowed tiles verbatim from the side tables)."""
+        d16 = self.hub_delta.astype(np.int32)
+        hub = np.where(d16 >= 0, self.tile_lo[:, None] + d16,
+                       -1).astype(np.int32)
+        df = self.dist.astype(np.float64)
+        inf = ~np.isfinite(df) | (df >= float(_DEV_INF))
+        dist = np.where(inf, INF_DIST,
+                        np.rint(np.where(inf, 0.0, df))).astype(np.int32)
+        wlev = self.wlev.astype(np.int32)
+        if self.overflow.any():
+            rows = np.flatnonzero(self.overflow)
+            slot = self.side_slot[rows]
+            hub[rows] = self.side_hub[slot]
+            dist[rows] = self.side_dist[slot]
+            wlev[rows] = self.side_wlev[slot]
+        return LabelArena(hub=hub, dist=dist, wlev=wlev,
+                          tile_base=self.tile_base, tile_cnt=self.tile_cnt,
+                          tile_lo=self.tile_lo, tile_hi=self.tile_hi)
 
 
 class PackedLabelsBuilder:

@@ -113,6 +113,42 @@ def multi_row_gather_psum_scatter(shards, rows, axes, rows_per_shard: int):
     return tuple(jnp.split(out, bounds, axis=-1)) if bounds else (out,)
 
 
+def ragged_tile_gather(shards, rows, axes, rows_per_shard: int):
+    """Worklist tile gather behind the ROW-SHARDED ragged dispatch: fetch
+    the arena tiles named by a replicated per-device worklist out of
+    tile-row-sharded arrays, delivering each device exactly ITS slice.
+
+    ``rows`` is the concatenation of every device's tile worklist in
+    linear device order (length = n_shards * per_device_worklist), so the
+    reduce-scatter's natural batch split hands device k precisely the
+    tiles its own ragged launch will walk — the whole flush needs ONE
+    collective (`multi_row_gather_psum_scatter`) per dtype width.
+
+    Unlike the int32-only fused gather, the compressed arena mixes int16
+    hub deltas, bf16/fp16 distances, and int8 levels. Same-width arrays
+    are grouped per collective — floats travel bitcast to the matching
+    int type (a psum whose addends are one real contribution plus zeros
+    is exact for any bit pattern, but bitcasting keeps float special
+    values out of the reduction entirely). The uncompressed int32 triple
+    stays a single collective."""
+    out = [None] * len(shards)
+    groups: dict = {}
+    for i, sh in enumerate(shards):
+        if sh.dtype in (jnp.bfloat16, jnp.float16):
+            view = jax.lax.bitcast_convert_type(sh, jnp.int16)
+        else:
+            view = sh
+        groups.setdefault(jnp.dtype(view.dtype), []).append((i, view))
+    for members in groups.values():
+        got = multi_row_gather_psum_scatter(
+            tuple(v for _, v in members), rows, axes, rows_per_shard)
+        for (i, _), g in zip(members, got):
+            if shards[i].dtype in (jnp.bfloat16, jnp.float16):
+                g = jax.lax.bitcast_convert_type(g, shards[i].dtype)
+            out[i] = g
+    return tuple(out)
+
+
 def distributed_lse_decode(q, k_shard, v_shard, axis: str,
                            kv_valid_mask=None):
     """q: [B, Hkv, G, Dh]; k_shard/v_shard: [B, Skv_local, Hkv, Dh] (the

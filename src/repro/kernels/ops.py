@@ -160,6 +160,46 @@ def wcsd_profile_ragged(hub, dist, wlev, tile_lo, tile_hi,
     return jnp.where(prof >= DEV_INF, INF_DIST, prof).astype(jnp.int32)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def wcsd_query_ragged_compressed(hub_delta, dist, wlev, tile_lo, tile_hi,
+                                 qidx, stile, ttile, first, wq, *,
+                                 interpret: bool = True,
+                                 use_kernel: bool = True):
+    """`wcsd_query_ragged` over the COMPRESSED arena (CompressedArena
+    fields; decode happens in-kernel / in the oracle). Same worklist and
+    output contract; callers must route overflowed stores to the
+    uncompressed path."""
+    if use_kernel:
+        best = _wq.wcsd_query_ragged_compressed(
+            hub_delta, dist, wlev, tile_lo, tile_hi,
+            qidx, stile, ttile, first, wq, interpret=interpret)
+    else:
+        best = _ref.wcsd_query_ragged_compressed_ref(
+            hub_delta, dist, wlev, tile_lo, qidx, stile, ttile, wq)
+    return jnp.where(best >= DEV_INF, INF_DIST, best).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "num_levels",
+                                             "interpret", "use_kernel"))
+def wcsd_profile_ragged_compressed(hub_delta, dist, wlev, tile_lo, tile_hi,
+                                   qidx, stile, ttile, first, *,
+                                   num_rows: int, num_levels: int,
+                                   interpret: bool = True,
+                                   use_kernel: bool = True):
+    """`wcsd_profile_ragged` over the COMPRESSED arena."""
+    if use_kernel:
+        bucket = _wq.wcsd_profile_ragged_compressed(
+            hub_delta, dist, wlev, tile_lo, tile_hi,
+            qidx, stile, ttile, first, num_rows=num_rows,
+            num_levels=num_levels, interpret=interpret)
+    else:
+        bucket = _ref.wcsd_profile_ragged_compressed_ref(
+            hub_delta, dist, wlev, tile_lo, qidx, stile, ttile,
+            num_rows, num_levels)
+    prof = jax.lax.cummin(bucket, axis=1, reverse=True)
+    return jnp.where(prof >= DEV_INF, INF_DIST, prof).astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("num_levels", "interpret",
                                              "use_kernel"))
 def wcsd_profile_segmented(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,

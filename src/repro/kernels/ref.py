@@ -78,6 +78,50 @@ def wcsd_profile_ragged_ref(hub, dist, wlev, qidx, stile, ttile,
     return out.at[qidx].min(bucket)
 
 
+def _decode_tiles_ref(hub_delta, dist, wlev, tile_lo, tiles):
+    """Oracle twin of the in-kernel compressed-tile decode
+    (`wcsd_query._decode_cells`): gather [len(tiles), lane] tiles and
+    widen — hub = tile_lo + delta (sign is the pad flag), float dist
+    clamped at DEV_INF and rounded to int32, int8 wlev widened."""
+    hd = hub_delta[tiles].astype(jnp.int32)
+    h = jnp.where(hd >= 0, tile_lo[tiles][:, None] + hd, -1)
+    d = (jnp.minimum(dist[tiles].astype(jnp.float32), float(DEV_INF))
+         + 0.5).astype(jnp.int32)
+    w = wlev[tiles].astype(jnp.int32)
+    return h, d, w
+
+
+def wcsd_query_ragged_compressed_ref(hub_delta, dist, wlev, tile_lo,
+                                     qidx, stile, ttile, wq):
+    """`wcsd_query_ragged_ref` over the compressed arena: decode the
+    gathered tiles, then the identical join + scatter-min."""
+    wqe = wq[qidx]
+    hs, ds0, ws = _decode_tiles_ref(hub_delta, dist, wlev, tile_lo, stile)
+    ht, dt0, wt = _decode_tiles_ref(hub_delta, dist, wlev, tile_lo, ttile)
+    ds = jnp.where(ws >= wqe[:, None], ds0, DEV_INF)
+    dt = jnp.where(wt >= wqe[:, None], dt0, DEV_INF)
+    eq = hs[:, :, None] == ht[:, None, :]
+    best = jnp.where(eq, ds[:, :, None] + dt[:, None, :], DEV_INF).min(
+        axis=(1, 2))
+    out = jnp.full((wq.shape[0],), DEV_INF, dtype=jnp.int32)
+    return out.at[qidx].min(best)
+
+
+def wcsd_profile_ragged_compressed_ref(hub_delta, dist, wlev, tile_lo,
+                                       qidx, stile, ttile,
+                                       num_rows: int, num_levels: int):
+    """`wcsd_profile_ragged_ref` over the compressed arena."""
+    hs, ds, ws = _decode_tiles_ref(hub_delta, dist, wlev, tile_lo, stile)
+    ht, dt, wt = _decode_tiles_ref(hub_delta, dist, wlev, tile_lo, ttile)
+    eq = hs[:, :, None] == ht[:, None, :]
+    dsum = jnp.where(eq, ds[:, :, None] + dt[:, None, :], DEV_INF)
+    mw = jnp.minimum(ws[:, :, None], wt[:, None, :])
+    bucket = jnp.stack([jnp.where(mw == lev, dsum, DEV_INF).min(axis=(1, 2))
+                        for lev in range(num_levels + 1)], axis=1)
+    out = jnp.full((num_rows, num_levels + 1), DEV_INF, dtype=jnp.int32)
+    return out.at[qidx].min(bucket)
+
+
 def wcsd_profile_segmented_ref(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
                                srow, trow, num_levels: int):
     """Profile-path oracle, mirroring the kernel's bucket-minima contract:

@@ -325,6 +325,162 @@ def wcsd_profile_ragged(hub, dist, wlev, tile_lo, tile_hi,
       hub, dist, wlev, hub, dist, wlev)
 
 
+# ------------------------------------------------- ragged, compressed arena
+def _decode_cells(hd, d, w, lo):
+    """In-register decode of one compressed arena tile (CompressedArena,
+    docs/index-format.md §6): int16 hub deltas rebuilt against the tile's
+    lo rank (the sign is the pad flag, so -1 sentinels survive), float
+    distances clamped at DEV_INF — the +inf pad encoding saturates there,
+    so no isfinite test is needed — and rounded back to int32 (+0.5 then
+    truncate; exact for every in-range integer the float format holds),
+    int8 quality levels widened."""
+    hub = jnp.where(hd >= 0, lo + hd.astype(jnp.int32), -1)
+    dist = (jnp.minimum(d.astype(jnp.float32), float(DEV_INF))
+            + 0.5).astype(jnp.int32)
+    return hub, dist, w.astype(jnp.int32)
+
+
+def _ragged_kernel_c(qidx_ref, stile_ref, ttile_ref, first_ref, wq_ref,
+                     lo_ref, hi_ref,
+                     hs_ref, ds_ref, ws_ref, ht_ref, dt_ref, wt_ref,
+                     out_ref):
+    k = pl.program_id(0)
+
+    @pl.when(first_ref[k] == 1)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, DEV_INF)
+
+    s_tile = stile_ref[k]
+    t_tile = ttile_ref[k]
+    meet = (lo_ref[s_tile] <= hi_ref[t_tile]) & \
+        (lo_ref[t_tile] <= hi_ref[s_tile])
+
+    @pl.when(meet)
+    def _join():
+        wq = wq_ref[qidx_ref[k]]
+        hs, ds0, ws = _decode_cells(hs_ref[...], ds_ref[...], ws_ref[...],
+                                    lo_ref[s_tile])
+        ht, dt0, wt = _decode_cells(ht_ref[...], dt_ref[...], wt_ref[...],
+                                    lo_ref[t_tile])
+        ds = jnp.where(ws >= wq, ds0, DEV_INF)
+        dt = jnp.where(wt >= wq, dt0, DEV_INF)
+        eq = hs[0, :, None] == ht[0, None, :]
+        best = jnp.where(eq, ds[0, :, None] + dt[0, None, :], DEV_INF).min()
+        out_ref[0, 0] = jnp.minimum(out_ref[0, 0], best)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wcsd_query_ragged_compressed(hub_delta, dist, wlev, tile_lo, tile_hi,
+                                 qidx, stile, ttile, first, wq, *,
+                                 interpret: bool = True):
+    """`wcsd_query_ragged` over the COMPRESSED arena: identical worklist
+    and output contract, but the tiles arrive as int16 hub deltas /
+    bf16-or-fp16 distances / int8 levels and are decoded in-register
+    (`_decode_cells`), so the DMA per work item shrinks with the store.
+    Callers must not pass overflowed stores (CompressedArena.overflow) —
+    the engines fall back to the uncompressed arena for those."""
+    WL = qidx.shape[0]
+    Q = wq.shape[0]
+    lane = hub_delta.shape[1]
+
+    def s_spec():
+        return pl.BlockSpec(
+            (1, lane), lambda k, qidx, stile, ttile, first, wq, lo, hi:
+            (stile[k], 0))
+
+    def t_spec():
+        return pl.BlockSpec(
+            (1, lane), lambda k, qidx, stile, ttile, first, wq, lo, hi:
+            (ttile[k], 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(WL,),
+        in_specs=[s_spec(), s_spec(), s_spec(),
+                  t_spec(), t_spec(), t_spec()],
+        out_specs=pl.BlockSpec(
+            (1, 1), lambda k, qidx, stile, ttile, first, wq, lo, hi:
+            (qidx[k], 0)),
+    )
+    out = pl.pallas_call(
+        _ragged_kernel_c,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+        interpret=interpret,
+    )(qidx, stile, ttile, first, wq, tile_lo, tile_hi,
+      hub_delta, dist, wlev, hub_delta, dist, wlev)
+    return out[:, 0]
+
+
+def _profile_ragged_kernel_c(qidx_ref, stile_ref, ttile_ref, first_ref,
+                             lo_ref, hi_ref,
+                             hs_ref, ds_ref, ws_ref, ht_ref, dt_ref, wt_ref,
+                             out_ref):
+    k = pl.program_id(0)
+
+    @pl.when(first_ref[k] == 1)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, DEV_INF)
+
+    s_tile = stile_ref[k]
+    t_tile = ttile_ref[k]
+    meet = (lo_ref[s_tile] <= hi_ref[t_tile]) & \
+        (lo_ref[t_tile] <= hi_ref[s_tile])
+
+    @pl.when(meet)
+    def _join():
+        hs, ds, ws = _decode_cells(hs_ref[...], ds_ref[...], ws_ref[...],
+                                   lo_ref[s_tile])
+        ht, dt, wt = _decode_cells(ht_ref[...], dt_ref[...], wt_ref[...],
+                                   lo_ref[t_tile])
+        eq = hs[0, :, None] == ht[0, None, :]
+        dsum = jnp.where(eq, ds[0, :, None] + dt[0, None, :], DEV_INF)
+        mw = jnp.minimum(ws[0, :, None], wt[0, None, :])
+        for lev in range(out_ref.shape[1]):  # static unroll: W + 1 is tiny
+            best = jnp.where(mw == lev, dsum, DEV_INF).min()
+            out_ref[0, lev] = jnp.minimum(out_ref[0, lev], best)
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "num_levels",
+                                             "interpret"))
+def wcsd_profile_ragged_compressed(hub_delta, dist, wlev, tile_lo, tile_hi,
+                                   qidx, stile, ttile, first, *,
+                                   num_rows: int, num_levels: int,
+                                   interpret: bool = True):
+    """`wcsd_profile_ragged` over the COMPRESSED arena (see
+    `wcsd_query_ragged_compressed` for the decode contract)."""
+    WL = qidx.shape[0]
+    lane = hub_delta.shape[1]
+    Lp = int(num_levels) + 1
+
+    def s_spec():
+        return pl.BlockSpec(
+            (1, lane), lambda k, qidx, stile, ttile, first, lo, hi:
+            (stile[k], 0))
+
+    def t_spec():
+        return pl.BlockSpec(
+            (1, lane), lambda k, qidx, stile, ttile, first, lo, hi:
+            (ttile[k], 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(WL,),
+        in_specs=[s_spec(), s_spec(), s_spec(),
+                  t_spec(), t_spec(), t_spec()],
+        out_specs=pl.BlockSpec(
+            (1, Lp), lambda k, qidx, stile, ttile, first, lo, hi:
+            (qidx[k], 0)),
+    )
+    return pl.pallas_call(
+        _profile_ragged_kernel_c,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_rows, Lp), jnp.int32),
+        interpret=interpret,
+    )(qidx, stile, ttile, first, tile_lo, tile_hi,
+      hub_delta, dist, wlev, hub_delta, dist, wlev)
+
+
 # ----------------------------------------------------------------- profile
 def _profile_kernel(srow_ref, trow_ref,
                     hs_ref, ds_ref, ws_ref, ht_ref, dt_ref, wt_ref,

@@ -125,25 +125,37 @@ def run_serve(quick: bool) -> None:
                                   exp_prof):
                 raise SystemExit(f"MISMATCH V={V} layout={layout} "
                                  "device profile vs per-level loop")
+            # the compressed arena rides the csr-ragged legs only (it is
+            # the megakernel's format); hop distances here stay below the
+            # bf16 exact-integer range, so even compressed answers are
+            # bit-identical to the uncompressed expectation
+            comp_legs = ((False, True) if (layout, dispatch)
+                         == ("csr", "ragged") else (False,))
             for multi_pod in (False, True):
                 mesh = make_serving_mesh(multi_pod=multi_pod)
                 for budget in (None, 1):  # replicated / sharded_labels
-                    eng = ShardedQueryEngine(
-                        idx, mesh=mesh, layout=layout,
-                        use_pallas=cfg.use_pallas, interpret=cfg.interpret,
-                        device_budget_bytes=budget, dispatch=dispatch)
-                    got = np.asarray(eng.query(s, t, wl))
-                    tag = (f"V={V} layout={layout} dispatch={eng.dispatch} "
-                           f"mesh={'2x4' if multi_pod else '8'} "
-                           f"mode={eng.mode}")
-                    if not np.array_equal(got, exp):
-                        raise SystemExit(f"MISMATCH {tag}: "
-                                         f"{np.flatnonzero(got != exp)[:8]}")
-                    got_prof = np.asarray(eng.query_profile(s, t))
-                    if not np.array_equal(got_prof, exp_prof):
-                        raise SystemExit(f"MISMATCH profile {tag}")
-                    print(f"OK {tag}: {len(s)} queries + profiles "
-                          "bit-identical", flush=True)
+                    for compressed in comp_legs:
+                        eng = ShardedQueryEngine(
+                            idx, mesh=mesh, layout=layout,
+                            use_pallas=cfg.use_pallas,
+                            interpret=cfg.interpret,
+                            device_budget_bytes=budget, dispatch=dispatch,
+                            compressed=compressed)
+                        got = np.asarray(eng.query(s, t, wl))
+                        tag = (f"V={V} layout={layout} "
+                               f"dispatch={eng.dispatch} "
+                               f"mesh={'2x4' if multi_pod else '8'} "
+                               f"mode={eng.mode}"
+                               + (" compressed" if eng.compressed else ""))
+                        if not np.array_equal(got, exp):
+                            raise SystemExit(
+                                f"MISMATCH {tag}: "
+                                f"{np.flatnonzero(got != exp)[:8]}")
+                        got_prof = np.asarray(eng.query_profile(s, t))
+                        if not np.array_equal(got_prof, exp_prof):
+                            raise SystemExit(f"MISMATCH profile {tag}")
+                        print(f"OK {tag}: {len(s)} queries + profiles "
+                              "bit-identical", flush=True)
         # async double-buffered server over the sharded backend
         srv = WCSDServer(idx, mesh=make_serving_mesh(),
                          **{**cfg.server_kwargs(), "max_batch": 64})

@@ -39,6 +39,16 @@ def test_serving_suite_conforms_and_carries_profile_rows(serving_rows):
     assert by_algo["profile_speedup"] == pytest.approx(
         by_algo["profile_loop_us_per_query"]
         / by_algo["profile_us_per_query"], rel=1e-6)
+    # the row-sharded ragged + compressed-arena rows exist and are sane;
+    # the >= 2x / >= 1.8x acceptance floors are enforced on the real
+    # bench config by run.py --check (bytes ratio is machine-independent,
+    # so it is asserted here too)
+    assert {"rowsharded_ragged_us_per_query",
+            "rowsharded_bucket_pair_us_per_query",
+            "rowsharded_ragged_speedup", "compressed_bytes_ratio"} <= algos
+    assert by_algo["rowsharded_ragged_us_per_query"] > 0
+    assert by_algo["rowsharded_ragged_speedup"] > 0
+    assert by_algo["compressed_bytes_ratio"] >= 1.8
 
 
 def test_row_keys_are_the_csv_header():
@@ -119,6 +129,14 @@ def test_gate_tables_are_wired():
         assert suite in BASELINE_FILES, suite
     assert CHECK_FLOORS["serving"]["ragged_speedup"] >= 2.0
     assert CHECK_FLOORS["serving"]["ragged_buckets"] >= 8.0
+    # row-sharded ragged acceptance: >= 2x over the bucket-pair loop on
+    # the SAME row-sharded placement, and the compressed arena's >= 1.8x
+    # rows-per-byte claim — both hard floors, not baseline-relative
+    assert CHECK_FLOORS["serving"]["rowsharded_ragged_speedup"] >= 2.0
+    assert CHECK_FLOORS["serving"]["compressed_bytes_ratio"] >= 1.8
     assert {"ragged_speedup", "ragged_us_per_query",
             "bucket_pair_us_per_query",
             "ragged_buckets"} <= REQUIRED_ALGOS["serving"]
+    assert {"rowsharded_ragged_speedup", "rowsharded_ragged_us_per_query",
+            "rowsharded_bucket_pair_us_per_query",
+            "compressed_bytes_ratio"} <= REQUIRED_ALGOS["serving"]

@@ -1,0 +1,243 @@
+"""CompressedArena property + adversarial suite (docs/index-format.md §6).
+
+Four guarantees, each pinned by its own tests:
+
+  1. Round-trip: compress -> decode reproduces the uncompressed
+     `LabelArena` tile for tile on real stores (hypothesis property over
+     random graphs; hop distances sit in bfloat16's exact-integer range,
+     so even the float leg is bit-exact here).
+  2. Hub ids and quality levels are ALWAYS bit-exact — including
+     adversarial hub-rank gaps right at the int16 delta boundary.
+  3. Overflow is flagged, never silent: a tile the narrow format cannot
+     hold goes verbatim into the int32 side tables, `decode` restores it
+     exactly, and the engines refuse `compressed=True` for that store
+     (``compressed is False``, ``compression_overflow is True``) while
+     still answering bit-identically from the uncompressed arena.
+  4. The documented distance bound holds against the int32 oracle:
+     bfloat16 exact <= 256 / relative error <= 2^-8 beyond; float16
+     exact <= 2048 / relative error <= 2^-11 beyond (up to its 65000
+     finite headroom, past which the tile overflows instead).
+"""
+import numpy as np
+import pytest
+from _hypo_shim import given, settings, st  # hypothesis or fallback
+
+from repro.core.baselines import constrained_distance_grid
+from repro.core.generators import erdos_renyi
+from repro.core.query import DeviceQueryEngine, ShardedQueryEngine
+from repro.core.wc_index import (INF_DIST, CompressedArena, PackedLabels,
+                                 PackedWCIndex, build_wc_index)
+
+_I16_MAX = np.iinfo(np.int16).max   # 32767, the hub-delta ceiling
+_I8_MAX = np.iinfo(np.int8).max     # 127, the wlev ceiling
+
+
+def _assert_arenas_equal(got, exp):
+    np.testing.assert_array_equal(got.hub, exp.hub)
+    np.testing.assert_array_equal(got.dist, exp.dist)
+    np.testing.assert_array_equal(got.wlev, exp.wlev)
+    np.testing.assert_array_equal(got.tile_base, exp.tile_base)
+    np.testing.assert_array_equal(got.tile_cnt, exp.tile_cnt)
+    np.testing.assert_array_equal(got.tile_lo, exp.tile_lo)
+    np.testing.assert_array_equal(got.tile_hi, exp.tile_hi)
+
+
+def _full_grid(V, W):
+    s, t, w = np.meshgrid(np.arange(V), np.arange(V), np.arange(W + 1),
+                          indexing="ij")
+    return (s.ravel().astype(np.int32), t.ravel().astype(np.int32),
+            w.ravel().astype(np.int32))
+
+
+# ------------------------------------------------------------- round-trip
+@pytest.mark.parametrize("lane", [128, 8])
+@given(st.sampled_from([8, 12, 20]), st.sampled_from([2.5, 4.0]),
+       st.sampled_from([2, 4]), st.integers(0, 100_000))
+@settings(max_examples=20, deadline=None, derandomize=True)
+def test_roundtrip_property_on_real_stores(lane, n, deg, levels, seed):
+    """compress -> decode == the uncompressed arena, tile for tile, for
+    both float formats. lane=8 forces multi-tile rows so tile_lo deltas
+    are exercised across tile boundaries, not just at offset 0."""
+    idx = build_wc_index(erdos_renyi(n, deg, num_levels=levels, seed=seed))
+    packed = idx.packed(lane=lane)
+    ar = packed.arena(lane=lane)
+    for dtype in ("bfloat16", "float16"):
+        comp = CompressedArena.from_arena(ar, dtype=dtype)
+        assert comp.num_overflow_tiles == 0
+        _assert_arenas_equal(comp.decode(), ar)
+    # the per-store cache hands back the same object per (lane, dtype)
+    assert packed.compressed_arena(lane=lane) is \
+        packed.compressed_arena(lane=lane)
+
+
+# ------------------------------------------- adversarial int16 delta gaps
+def _gap_store(gap: int, lane: int = 8, extra_wlev: int = 2):
+    """Two vertices sharing hub ranks {0, gap}: one tile per row, so the
+    in-tile hub delta IS the gap. Rows stay hub-sorted (invariant I1)."""
+    hub = np.array([0, gap, 0, gap], np.int32)
+    dist = np.array([3, 5, 4, 6], np.int32)
+    wlev = np.array([extra_wlev, 1, extra_wlev, 1], np.int32)
+    offsets = np.array([0, 2, 4], np.int64)
+    return PackedLabels.from_flat(hub, dist, wlev, offsets, lane=lane)
+
+
+@given(st.integers(_I16_MAX - 600, _I16_MAX + 600))
+@settings(max_examples=25, deadline=None, derandomize=True)
+def test_delta_boundary_flags_exactly_past_int16(gap):
+    """Hub gaps straddling 32767: delta == int16 max still compresses;
+    one past it flags the tile — and decode is exact on BOTH sides."""
+    packed = _gap_store(gap)
+    ar = packed.arena(lane=8)
+    comp = CompressedArena.from_arena(ar)
+    if gap > _I16_MAX:
+        assert comp.num_overflow_tiles == ar.num_tiles  # every tile gaps
+        assert comp.overflow.all()
+    else:
+        assert comp.num_overflow_tiles == 0
+        # the widest representable delta really is stored as a delta
+        assert int(comp.hub_delta.max()) == gap
+    _assert_arenas_equal(comp.decode(), ar)
+
+
+def test_wlev_and_fp16_range_overflow_are_flagged():
+    """The other two overflow triggers: a quality level past int8, and
+    (float16 only) a finite distance past the format's headroom."""
+    ar_w = _gap_store(5, extra_wlev=_I8_MAX + 1).arena(lane=8)
+    comp_w = CompressedArena.from_arena(ar_w)
+    assert comp_w.num_overflow_tiles == ar_w.num_tiles
+    _assert_arenas_equal(comp_w.decode(), ar_w)
+
+    hub = np.array([0, 1], np.int32)
+    dist = np.array([70_000, 2], np.int32)      # finite, > 65000
+    wlev = np.array([1, 1], np.int32)
+    packed = PackedLabels.from_flat(hub, dist, wlev,
+                                    np.array([0, 2], np.int64), lane=8)
+    ar = packed.arena(lane=8)
+    assert CompressedArena.from_arena(ar, dtype="bfloat16") \
+        .num_overflow_tiles == 0                # bf16 range is fine
+    comp16 = CompressedArena.from_arena(ar, dtype="float16")
+    assert comp16.num_overflow_tiles == 1
+    _assert_arenas_equal(comp16.decode(), ar)
+
+    with pytest.raises(ValueError, match="dtype"):
+        CompressedArena.from_arena(ar, dtype="float32")
+
+
+def test_overflow_store_is_served_uncompressed_and_flagged():
+    """An engine asked for compressed=True on an overflowing store must
+    NOT silently corrupt hub ids: it serves the uncompressed arena and
+    says so via ``compression_overflow``. Answers stay bit-identical."""
+    gap = _I16_MAX + 10
+    packed = _gap_store(gap)
+    pidx = PackedWCIndex(order=np.arange(2, dtype=np.int64),
+                         rank=np.arange(2, dtype=np.int64),
+                         levels=np.array([1.0, 2.0, 3.0]), labels=packed)
+    s, t, wl = _full_grid(2, pidx.num_levels)
+    kw = dict(layout="csr", dispatch="ragged", use_pallas=True,
+              interpret=True, lane=8)
+    plain = DeviceQueryEngine(pidx, **kw)
+    eng = DeviceQueryEngine(pidx, compressed=True, **kw)
+    assert eng.compressed is False
+    assert eng.compression_overflow is True
+    np.testing.assert_array_equal(np.asarray(eng.query(s, t, wl)),
+                                  np.asarray(plain.query(s, t, wl)))
+    np.testing.assert_array_equal(np.asarray(eng.query_profile(s, t)),
+                                  np.asarray(plain.query_profile(s, t)))
+    # sanity: both hubs are joinable, so the gap actually matters
+    assert int(np.asarray(plain.query(
+        np.array([0], np.int32), np.array([1], np.int32),
+        np.array([0], np.int32)))[0]) == 7
+
+    from repro.launch.mesh import make_serving_mesh
+    sh = ShardedQueryEngine(pidx, mesh=make_serving_mesh(),
+                            compressed=True, device_budget_bytes=1, **kw)
+    assert sh.compressed is False and sh.compression_overflow is True
+    np.testing.assert_array_equal(np.asarray(sh.query(s, t, wl)),
+                                  np.asarray(plain.query(s, t, wl)))
+
+
+def test_compressed_requires_csr_ragged():
+    idx = build_wc_index(erdos_renyi(8, 2.5, num_levels=2, seed=3))
+    with pytest.raises(ValueError, match="csr"):
+        DeviceQueryEngine(idx, layout="padded", compressed=True)
+    with pytest.raises(ValueError, match="csr"):
+        DeviceQueryEngine(idx, layout="csr", dispatch="bucket_pair",
+                          compressed=True)
+
+
+# ----------------------------------------------- documented distance bound
+def _dist_store(dists: np.ndarray, lane: int = 16) -> PackedLabels:
+    n = len(dists)
+    hub = np.arange(n, dtype=np.int32)          # hub-sorted single row
+    wlev = np.ones(n, dtype=np.int32)
+    return PackedLabels.from_flat(hub, dists.astype(np.int32), wlev,
+                                  np.array([0, n], np.int64), lane=lane)
+
+
+@pytest.mark.parametrize("dtype,exact_to,rel_bound,dmax", [
+    ("bfloat16", 256, 2.0 ** -8, 1_000_000),
+    ("float16", 2048, 2.0 ** -11, 60_000),
+])
+def test_documented_distance_bound_vs_int32_oracle(dtype, exact_to,
+                                                   rel_bound, dmax):
+    """The docstring's precision claim, asserted: distances <= exact_to
+    round-trip bit-exactly; beyond that the decoded value stays within
+    rel_bound of the int32 oracle. INF_DIST always survives exactly."""
+    rng = np.random.default_rng(7)
+    dists = np.concatenate([
+        np.arange(exact_to + 1),                       # the exact range
+        rng.integers(exact_to + 1, dmax, 4096),        # the rounded range
+        [INF_DIST],                                    # no-path sentinel
+    ]).astype(np.int64)
+    packed = _dist_store(dists)
+    ar = packed.arena(lane=16)
+    comp = CompressedArena.from_arena(ar, dtype=dtype)
+    assert comp.num_overflow_tiles == 0
+    dec = comp.decode()
+    np.testing.assert_array_equal(dec.hub, ar.hub)     # ids: always exact
+    np.testing.assert_array_equal(dec.wlev, ar.wlev)
+    real = ar.hub >= 0
+    orig = ar.dist[real].astype(np.int64)
+    got = dec.dist[real].astype(np.int64)
+    inf = orig == INF_DIST
+    np.testing.assert_array_equal(got[inf], orig[inf])
+    small = ~inf & (orig <= exact_to)
+    np.testing.assert_array_equal(got[small], orig[small])
+    big = ~inf & (orig > exact_to)
+    assert big.any()
+    err = np.abs(got[big] - orig[big])
+    assert (err <= orig[big] * rel_bound).all(), int(err.max())
+
+
+# --------------------------------------------------------- bytes-per-row
+def test_memory_ratio_beats_1p8x():
+    """The capacity claim behind ``device_budget_bytes``: the compressed
+    store holds >= 1.8x the rows per byte of the int32 arena (per-cell
+    the encoding is 12 -> 5 bytes; shared index tables dilute it)."""
+    from benchmarks.bench_wcsd import make_skewed_store
+    pidx, _ = make_skewed_store(lane=32, rng=np.random.default_rng(11))
+    packed = pidx.packed(lane=32)
+    ratio = packed.arena(lane=32).memory_bytes() \
+        / packed.compressed_arena(lane=32).memory_bytes()
+    assert ratio >= 1.8, ratio
+    assert packed.compressed_arena(lane=32).num_overflow_tiles == 0
+
+
+# ------------------------------------------------- end-to-end engine legs
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_compressed_engine_matches_uncompressed_and_bfs(use_pallas):
+    """Full (s, t, w) grid + profiles on a real graph: the compressed
+    device engine (kernel and jnp decode paths) == uncompressed == BFS.
+    Hop distances < 256 here, so bf16 makes this bit-exact, not approx."""
+    g = erdos_renyi(12, 3.5, num_levels=3, seed=41)
+    idx = build_wc_index(g)
+    s, t, wl = _full_grid(g.num_nodes, g.num_levels)
+    exp = constrained_distance_grid(g)[s, t, wl]
+    kw = dict(layout="csr", dispatch="ragged", use_pallas=use_pallas,
+              interpret=True, lane=16)
+    eng = DeviceQueryEngine(idx, compressed=True, **kw)
+    assert eng.compressed is True and eng.compression_overflow is False
+    np.testing.assert_array_equal(np.asarray(eng.query(s, t, wl)), exp)
+    plain = DeviceQueryEngine(idx, **kw)
+    np.testing.assert_array_equal(np.asarray(eng.query_profile(s, t)),
+                                  np.asarray(plain.query_profile(s, t)))

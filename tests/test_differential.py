@@ -284,6 +284,92 @@ def test_unreachable_and_identity_on_packed_index():
     assert np.any(D[:, :, 0] == INF_DIST)  # the generator made islands
 
 
+# ------------------------------------------- row-sharded ragged (8 devices)
+_SHARDED_DIFFERENTIAL_PROG = r'''
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+# the 200 instances reuse a handful of grid shapes (V in {8,10,12}, W in
+# {2,3}); the persistent cache turns the per-instance engine compiles into
+# disk hits, keeping the full sweep CI-sized
+jax.config.update("jax_compilation_cache_dir",
+                  tempfile.mkdtemp(prefix="wcsd-diff-cache"))
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+import numpy as np
+from repro.core.baselines import constrained_distance_grid
+from repro.core.generators import erdos_renyi
+from repro.core.query import ShardedQueryEngine
+from repro.core.wc_index import build_wc_index
+from repro.launch.mesh import make_serving_mesh
+
+assert len(jax.devices()) == 8
+mesh = make_serving_mesh()
+N_BLOCKS, EXAMPLES = 8, 25
+ran = 0
+for block in range(N_BLOCKS):
+    rng = np.random.default_rng(0)  # deterministic, shim-style draws
+    for _ in range(EXAMPLES):
+        n = [8, 10, 12][int(rng.integers(3))]
+        deg = [2.5, 3.5, 4.5][int(rng.integers(3))]
+        levels = [2, 3][int(rng.integers(2))]
+        seed = int(rng.integers(0, 100_001))
+        g = erdos_renyi(n, deg, num_levels=levels, seed=seed + 7919 * block)
+        V, W = g.num_nodes, g.num_levels
+        idx = build_wc_index(g)
+        s, t, w = np.meshgrid(np.arange(V), np.arange(V),
+                              np.arange(W + 1), indexing="ij")
+        s, t, w = (a.ravel().astype(np.int32) for a in (s, t, w))
+        D = constrained_distance_grid(g)
+        exp = D[s, t, w]
+        ps, pt = s[::W + 1], t[::W + 1]          # the (s, t) pair grid
+        exp_prof = D[ps, pt, :]
+        kernel = ran % 10 == 0   # interpret-Pallas leg; jnp decode otherwise
+        eng = ShardedQueryEngine(
+            idx, mesh=mesh, layout="csr", dispatch="ragged",
+            device_budget_bytes=1, use_pallas=kernel, interpret=True,
+            compressed=(ran % 2 == 0))           # both stores, alternating
+        assert eng.mode == "sharded_labels" and eng.dispatch == "ragged"
+        assert eng.compressed is (ran % 2 == 0)
+        np.testing.assert_array_equal(np.asarray(eng.query(s, t, w)), exp)
+        np.testing.assert_array_equal(
+            np.asarray(eng.query_profile(ps, pt)), exp_prof)
+        if ran % 5 == 0:        # the row-sharded bucket-pair loop agrees too
+            bp = ShardedQueryEngine(
+                idx, mesh=mesh, layout="csr", dispatch="bucket_pair",
+                device_budget_bytes=1, use_pallas=kernel, interpret=True)
+            assert bp.mode == "sharded_labels" and bp.dispatch == "bucket_pair"
+            np.testing.assert_array_equal(np.asarray(bp.query(s, t, w)), exp)
+            np.testing.assert_array_equal(
+                np.asarray(bp.query_profile(ps, pt)), exp_prof)
+        ran += 1
+assert ran == N_BLOCKS * EXAMPLES == 200
+print(f"OK sharded differential {ran} instances")
+'''
+
+
+def test_sharded_ragged_differential_200_instances_on_8_devices():
+    """The sharded-ragged differential leg: the full 200-instance harness
+    grid re-run with ROW-SHARDED (device_budget_bytes=1) engines on 8
+    virtual devices — ragged dispatch (compressed and uncompressed stores,
+    jnp decode and interpret-Pallas kernels) vs the BFS sweep on every
+    instance, and vs the row-sharded bucket-pair loop on a rotating
+    subset; query AND profile answers bit-identical. Hop distances stay
+    inside bfloat16's exact-integer range, so the compressed legs are
+    exact, not approximate. Subprocess: the parent pins one CPU device."""
+    import os
+    import subprocess
+    import sys
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = {**os.environ, "PYTHONPATH": src, "JAX_PLATFORMS": "cpu"}
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SHARDED_DIFFERENTIAL_PROG],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "OK sharded differential 200 instances" in r.stdout
+
+
 def test_differential_coverage_target():
     """Acceptance: the harness is configured for >= 200 generated instances
     (asserted statically so the check holds under any test subselection);

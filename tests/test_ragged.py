@@ -128,8 +128,10 @@ def test_ragged_adversarial_skewed_lengths(seed, buckets):
 def test_sharded_ragged_matches_device_engine():
     """ShardedQueryEngine(dispatch="ragged") == DeviceQueryEngine bit for
     bit (1-device mesh in-process; the 8-virtual-device sweep runs in
-    launch.dryrun --serve), and the row-sharded fallback silently routes
-    to bucket_pair."""
+    launch.dryrun --serve) — in BOTH placements: replicated arena, and
+    the row-sharded store (which used to silently fall back to
+    bucket_pair and now keeps the megakernel via the worklist tile
+    gather), compressed arena included."""
     from repro.launch.mesh import make_serving_mesh
     g = erdos_renyi(40, 3.5, num_levels=3, seed=9)
     idx = build_wc_index(g)
@@ -139,17 +141,24 @@ def test_sharded_ragged_matches_device_engine():
     wl = rng.integers(0, 4, 300).astype(np.int32)
     dev = DeviceQueryEngine(idx, layout="csr", use_pallas=True)
     exp = np.asarray(dev.query(s, t, wl))
+    exp_prof = np.asarray(dev.query_profile(s, t))
     sh = ShardedQueryEngine(idx, mesh=make_serving_mesh(), layout="csr",
                             use_pallas=True)
     assert sh.dispatch == "ragged"
     np.testing.assert_array_equal(np.asarray(sh.query(s, t, wl)), exp)
     np.testing.assert_array_equal(np.asarray(sh.query_profile(s, t)),
-                                  np.asarray(dev.query_profile(s, t)))
-    # vertex-sharded labels cannot host the arena megakernel: fallback
-    fb = ShardedQueryEngine(idx, mesh=make_serving_mesh(), layout="csr",
-                            device_budget_bytes=1, dispatch="ragged")
-    assert fb.mode == "sharded_labels" and fb.dispatch == "bucket_pair"
-    np.testing.assert_array_equal(np.asarray(fb.query(s, t, wl)), exp)
+                                  exp_prof)
+    # row-sharded labels keep the ragged megakernel: the flush gathers
+    # each device's worklist tiles with ONE reduce-scatter
+    for compressed in (False, True):
+        rs = ShardedQueryEngine(idx, mesh=make_serving_mesh(), layout="csr",
+                                device_budget_bytes=1, dispatch="ragged",
+                                use_pallas=True, compressed=compressed)
+        assert rs.mode == "sharded_labels" and rs.dispatch == "ragged"
+        assert rs.compressed is compressed
+        np.testing.assert_array_equal(np.asarray(rs.query(s, t, wl)), exp)
+        np.testing.assert_array_equal(np.asarray(rs.query_profile(s, t)),
+                                      exp_prof)
 
 
 # ------------------------------------------------------------ launch count
@@ -205,6 +214,84 @@ def test_one_pallas_launch_per_flush():
     np.testing.assert_array_equal(got, exp)
     np.testing.assert_array_equal(got2, exp)
     np.testing.assert_array_equal(exp_bp, exp)
+
+
+def test_rowsharded_one_launch_one_collective_per_flush():
+    """Acceptance for the ROW-SHARDED ragged path, on 8 virtual devices
+    (subprocess — the device count must be fixed before jax initializes):
+    a mixed-bucket flush with the label store tile-row-sharded traces
+    EXACTLY ONE ragged `pallas_call` (the per-device launch is one SPMD
+    trace) plus ONE `psum_scatter` (the fused worklist tile gather), a
+    repeat flush traces nothing new, and the answers are bit-identical to
+    the single-device engine."""
+    import os
+    import subprocess
+    import sys
+
+    prog = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+import repro.kernels.wcsd_query as wq
+from repro.core.generators import erdos_renyi
+from repro.core.query import DeviceQueryEngine, ShardedQueryEngine
+from repro.core.wc_index import build_wc_index
+from repro.launch.mesh import make_serving_mesh
+
+g = erdos_renyi(60, 4.0, num_levels=4, seed=77)
+idx = build_wc_index(g)
+lane = 16
+assert idx.packed(lane=lane).num_buckets >= 2, "config no longer mixes buckets"
+rng = np.random.default_rng(3)
+B = 1024
+s = rng.integers(0, g.num_nodes, B).astype(np.int32)
+t = rng.integers(0, g.num_nodes, B).astype(np.int32)
+wl = rng.integers(0, g.num_levels + 1, B).astype(np.int32)
+dev = DeviceQueryEngine(idx, layout="csr", use_pallas=True, lane=lane)
+exp = np.asarray(dev.query(s, t, wl))
+exp_prof = np.asarray(dev.query_profile(s, t))
+
+pallas_traces, coll_traces = [], []
+real_pc, real_ps = wq.pl.pallas_call, jax.lax.psum_scatter
+def counting_pc(*a, **k):
+    pallas_traces.append(a)
+    return real_pc(*a, **k)
+def counting_ps(*a, **k):
+    coll_traces.append(a)
+    return real_ps(*a, **k)
+wq.pl.pallas_call = counting_pc
+jax.lax.psum_scatter = counting_ps
+try:
+    eng = ShardedQueryEngine(idx, mesh=make_serving_mesh(), layout="csr",
+                             lane=lane, use_pallas=True,
+                             device_budget_bytes=1, dispatch="ragged")
+    assert eng.mode == "sharded_labels" and eng.dispatch == "ragged"
+    got = np.asarray(eng.query(s, t, wl))
+    assert len(pallas_traces) == 1, f"{len(pallas_traces)} pallas traces"
+    assert len(coll_traces) == 1, f"{len(coll_traces)} collective traces"
+    # same flush shape again: compiled call reused, nothing re-traced
+    got2 = np.asarray(eng.query(s, t, wl))
+    assert len(pallas_traces) == 1 and len(coll_traces) == 1
+    # the profile flush pays the same budget: one launch + one gather
+    pallas_traces.clear(); coll_traces.clear()
+    prof = np.asarray(eng.query_profile(s, t))
+    assert len(pallas_traces) == 1, f"{len(pallas_traces)} pallas traces"
+    assert len(coll_traces) == 1, f"{len(coll_traces)} collective traces"
+finally:
+    wq.pl.pallas_call = real_pc
+    jax.lax.psum_scatter = real_ps
+np.testing.assert_array_equal(got, exp)
+np.testing.assert_array_equal(got2, exp)
+np.testing.assert_array_equal(prof, exp_prof)
+print("OK one launch one collective")
+"""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = {**os.environ, "PYTHONPATH": src, "JAX_PLATFORMS": "cpu"}
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, env=env, timeout=420)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "OK one launch one collective" in r.stdout
 
 
 def test_ragged_flush_never_calls_host_planner(monkeypatch):
@@ -336,6 +423,38 @@ def test_engines_resolve_interpret_through_ops(monkeypatch):
     assert DeviceQueryEngine(idx, use_pallas=True).interpret is False
     assert DeviceQueryEngine(idx, use_pallas=True,
                              interpret=True).interpret is True
+
+
+def test_rowsharded_engine_resolves_interpret_once_through_ops(monkeypatch):
+    """The sharded engine resolves the interpret flag EXACTLY ONCE, at
+    construction, through `kernels.ops.resolve_interpret` — and the
+    row-sharded ragged flush consumes that resolved bool (it used to
+    bypass the kernels entirely on the jnp fallback, so neither
+    `interpret` nor `use_pallas` reached the flush). Locked in both
+    placements; the resolution TABLE itself is locked by
+    `test_resolve_interpret_table`."""
+    from repro.launch.mesh import make_serving_mesh
+    g = erdos_renyi(12, 2.5, num_levels=2, seed=6)
+    idx = build_wc_index(g)
+    calls = []
+    real = ops.resolve_interpret
+
+    def counting(arg):
+        calls.append(arg)
+        return real(arg)
+
+    monkeypatch.setattr(ops, "resolve_interpret", counting)
+    for budget in (None, 1):
+        calls.clear()
+        eng = ShardedQueryEngine(idx, mesh=make_serving_mesh(),
+                                 layout="csr", dispatch="ragged",
+                                 use_pallas=True, device_budget_bytes=budget)
+        assert calls == [None], f"resolved {len(calls)}x at construction"
+        assert eng.interpret is True        # CPU test host: None -> True
+        v = np.arange(12, dtype=np.int32)
+        np.testing.assert_array_equal(
+            np.asarray(eng.query(v, v, np.zeros(12, np.int32))), 0)
+        assert calls == [None], "flush re-resolved the interpret flag"
 
 
 def test_ragged_harness_coverage_target():
