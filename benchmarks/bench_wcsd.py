@@ -287,7 +287,57 @@ def bench_serving(batch=4096, n_nodes=3000):
     rows += _bench_profile_vs_loop(idx, s[:batch], t[:batch], name)
     rows += _bench_ragged_dispatch()
     rows += _bench_rowsharded_ragged()
+    rows += _bench_dynamic_updates(g, idx, name, batch=min(batch, 1024))
     return rows
+
+
+def _bench_dynamic_updates(g, idx, name, batch=1024):
+    """Dynamic-index serving rows: the cost of folding a graph update into
+    the delta label store (``update_apply_us``), of compacting the delta
+    back into a fresh packed base (``compact_us``), and the ragged-query
+    tax of serving through a NON-EMPTY delta-extended arena relative to
+    the static store (``delta_query_overhead``). The overhead ratio is
+    the gated acceptance trend (run.py --check ceiling 1.15x): the delta
+    only redirects tile pointers inside the one ragged launch per flush,
+    so a non-empty delta must not cost a second kernel launch or a
+    disproportionately wider worklist."""
+    from repro.core.wc_index import DynamicWCIndex
+
+    s, t, wl = random_queries(g, batch, seed=29)
+
+    dyn = DynamicWCIndex(idx, g)
+    lv = float(g.levels[len(g.levels) // 2])
+    u0, v0 = int(g.edges_src[0]), int(g.edges_dst[0])
+    dt_upd, _ = _time(lambda: dyn.apply_updates(
+        inserts=[(0, g.num_nodes // 2, lv)], deletes=[(u0, v0)]))
+    assert not dyn.delta.is_empty(), \
+        "dynamic bench update produced an empty delta; overhead row " \
+        "would measure the static path twice"
+
+    static_eng = DeviceQueryEngine(idx, layout="csr", dispatch="ragged")
+    dyn_eng = DeviceQueryEngine(dyn, layout="csr", dispatch="ragged")
+    np.asarray(static_eng.query(s, t, wl))      # warmup compiles
+    np.asarray(dyn_eng.query(s, t, wl))         # retrace: new tile count
+    # the gated metric is a RATIO of two wall-clocks: interleave the
+    # trials and keep each side's best, so a load transient on a shared
+    # CI runner hits both sides instead of skewing the quotient
+    t_static = t_delta = float("inf")
+    for _ in range(5):
+        t_static = min(t_static, _time(
+            lambda: np.asarray(static_eng.query(s, t, wl)), repeat=3)[0])
+        t_delta = min(t_delta, _time(
+            lambda: np.asarray(dyn_eng.query(s, t, wl)), repeat=3)[0])
+
+    dt_cmp, _ = _time(lambda: dyn.compact(ordering="degree",
+                                          use_kernel=False))
+    return [
+        dict(table="serving", dataset=name, algo="update_apply_us",
+             value=dt_upd * 1e6),
+        dict(table="serving", dataset=name, algo="compact_us",
+             value=dt_cmp * 1e6),
+        dict(table="serving", dataset=name, algo="delta_query_overhead",
+             value=t_delta / max(t_static, 1e-12)),
+    ]
 
 
 def make_skewed_store(V=2048, W=6, lane=32, buckets=8, seed=17, rng=None):

@@ -36,7 +36,8 @@ REQUIRED_ALGOS = {
                 "bucket_pair_us_per_query", "ragged_speedup",
                 "rowsharded_ragged_us_per_query",
                 "rowsharded_bucket_pair_us_per_query",
-                "rowsharded_ragged_speedup", "compressed_bytes_ratio"},
+                "rowsharded_ragged_speedup", "compressed_bytes_ratio",
+                "update_apply_us", "compact_us", "delta_query_overhead"},
     "label_store": {"entries", "padded_bytes", "csr_bytes",
                     "dense_us_per_query", "seg_us_per_query"},
 }
@@ -74,6 +75,15 @@ CHECK_FLOORS = {
     "serving": {"ragged_speedup": 2.0, "ragged_buckets": 8.0,
                 "rowsharded_ragged_speedup": 2.0,
                 "compressed_bytes_ratio": 1.8},
+}
+
+# absolute ceilings, the floors' smaller-is-better mirror: serving
+# through a NON-EMPTY delta-extended arena must stay within 1.15x of the
+# static ragged path (observed ~1.0x: the delta only redirects tile
+# pointers inside the one launch per flush). Like the floors, ceilings
+# are same-run ratios, so machine speed cancels.
+CHECK_CEILINGS = {
+    "serving": {"delta_query_overhead": 1.15},
 }
 
 # which committed artifact holds each suite's baseline rows
@@ -120,6 +130,12 @@ def check_against_baseline(suite: str, rows, base_rows,
             if v < floor:
                 failures.append(f"{suite} {algo}: {v:.6g} under the "
                                 f"absolute floor {floor}")
+    for algo, ceiling in CHECK_CEILINGS.get(suite, {}).items():
+        vals = [v for k, v in fresh.items() if k[2] == algo]
+        for v in vals:
+            if v > ceiling:
+                failures.append(f"{suite} {algo}: {v:.6g} over the "
+                                f"absolute ceiling {ceiling}")
     return failures
 
 

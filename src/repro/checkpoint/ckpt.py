@@ -93,3 +93,165 @@ class CheckpointManager:
         for s in steps[:-self.keep]:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
                           ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# On-disk WC-Index persistence (docs/dynamic-index.md §on-disk layout).
+#
+# Single-file format, designed for mmap zero-copy loads so sharded serving
+# replicas warm-start without rebuilding (and without even reading the whole
+# file eagerly):
+#
+#   [ 8B magic "WCSDIDX\x01" ][ 8B little-endian header length H ]
+#   [ H bytes JSON header ][ zero pad to 64 ][ raw array blobs, 64-aligned ]
+#
+# The JSON header carries the format version, the graph version the index
+# was built against, num_nodes / num_levels, and for every array its dtype,
+# shape, absolute byte offset and length, plus the expected payload end —
+# a truncation check that does not require hashing the payload. Loads go
+# through numpy memmaps: `PackedLabels.from_flat` keeps contiguous int32
+# views as-is, so the arena pages in lazily on first query.
+
+WCX_MAGIC = b"WCSDIDX\x01"
+WCX_VERSION = 1
+_WCX_ALIGN = 64
+
+
+class IndexPersistenceError(RuntimeError):
+    """Base class: a persisted index file cannot be served."""
+
+
+class IndexHeaderError(IndexPersistenceError):
+    """Bad magic or unparseable header — not a WC-Index file."""
+
+
+class IndexVersionError(IndexPersistenceError):
+    """The file's format version is not one this reader understands."""
+
+
+class IndexTruncatedError(IndexPersistenceError):
+    """The payload ends before the header says it should (torn write,
+    partial copy, mid-write crash)."""
+
+
+def _wcx_arrays(idx) -> dict:
+    labels = idx.labels
+    return {
+        "order": np.ascontiguousarray(idx.order, dtype=np.int32),
+        "rank": np.ascontiguousarray(idx.rank, dtype=np.int32),
+        "levels": np.ascontiguousarray(idx.levels, dtype=np.float64),
+        "hub_rank": np.ascontiguousarray(labels.hub_rank, dtype=np.int32),
+        "dist": np.ascontiguousarray(labels.dist, dtype=np.int32),
+        "wlev": np.ascontiguousarray(labels.wlev, dtype=np.int32),
+        "offsets": np.ascontiguousarray(labels.offsets, dtype=np.int64),
+    }
+
+
+def save_packed_index(path: str, idx, *, graph_version: int = 0,
+                      _open=open) -> str:
+    """Persist a `PackedWCIndex` (or anything `as_packed_index` accepts).
+
+    Atomic: writes to ``path + ".tmp"`` then `os.replace`, so readers never
+    observe a half-written file under ``path`` — a crash mid-write leaves at
+    most a stale tmp file behind. ``_open`` is injectable for fault tests
+    (checkpoint/fault.py `crashing_open`)."""
+    from ..core.wc_index import as_packed_index
+    idx = as_packed_index(idx)
+    arrays = _wcx_arrays(idx)
+    table = {}
+    base = 0  # filled once the header length is known
+    blobs = []
+    off = 0
+    for name, a in arrays.items():
+        off = -(-off // _WCX_ALIGN) * _WCX_ALIGN
+        table[name] = {"dtype": str(a.dtype), "shape": list(a.shape),
+                       "offset": off, "nbytes": int(a.nbytes)}
+        blobs.append((off, a))
+        off += int(a.nbytes)
+    header = {
+        "version": WCX_VERSION,
+        "graph_version": int(graph_version),
+        "num_nodes": int(idx.num_nodes),
+        "num_levels": int(idx.num_levels),
+        "arrays": table,
+        "payload_bytes": off,
+    }
+    hjson = json.dumps(header, sort_keys=True).encode()
+    base = len(WCX_MAGIC) + 8 + len(hjson)
+    base = -(-base // _WCX_ALIGN) * _WCX_ALIGN
+    tmp = path + ".tmp"
+    with _open(tmp, "wb") as f:
+        f.write(WCX_MAGIC)
+        f.write(len(hjson).to_bytes(8, "little"))
+        f.write(hjson)
+        f.write(b"\0" * (base - len(WCX_MAGIC) - 8 - len(hjson)))
+        at = 0
+        for off, a in blobs:
+            if off > at:
+                f.write(b"\0" * (off - at))
+                at = off
+            f.write(a.tobytes())
+            at += a.nbytes
+    os.replace(tmp, path)
+    return path
+
+
+def load_packed_index(path: str, *, mmap: bool = True):
+    """Load a persisted index; returns ``(PackedWCIndex, header_dict)``.
+
+    Validates magic, format version and payload length BEFORE constructing
+    anything — a truncated or foreign file raises the typed error and never
+    yields a partially-loaded arena. With ``mmap=True`` (default) array
+    blobs are `np.memmap` views: zero-copy, paged in on first touch."""
+    from ..core.wc_index import PackedLabels, PackedWCIndex
+    try:
+        size = os.path.getsize(path)
+    except OSError as e:
+        raise IndexPersistenceError(f"cannot stat {path!r}: {e}") from e
+    with open(path, "rb") as f:
+        magic = f.read(len(WCX_MAGIC))
+        if magic != WCX_MAGIC:
+            raise IndexHeaderError(
+                f"{path!r} is not a WC-Index file (magic {magic!r})")
+        raw = f.read(8)
+        if len(raw) < 8:
+            raise IndexTruncatedError(f"{path!r}: truncated header length")
+        hlen = int.from_bytes(raw, "little")
+        hjson = f.read(hlen)
+        if len(hjson) < hlen:
+            raise IndexTruncatedError(f"{path!r}: truncated header")
+        try:
+            header = json.loads(hjson)
+        except ValueError as e:
+            raise IndexHeaderError(f"{path!r}: unparseable header") from e
+    version = header.get("version")
+    if version != WCX_VERSION:
+        raise IndexVersionError(
+            f"{path!r}: format version {version!r}, reader supports "
+            f"{WCX_VERSION}")
+    base = len(WCX_MAGIC) + 8 + hlen
+    base = -(-base // _WCX_ALIGN) * _WCX_ALIGN
+    expected = base + int(header["payload_bytes"])
+    if size < expected:
+        raise IndexTruncatedError(
+            f"{path!r}: {size} bytes on disk, header promises {expected}")
+    out = {}
+    for name, spec in header["arrays"].items():
+        shape = tuple(spec["shape"])
+        dtype = np.dtype(spec["dtype"])
+        off = base + int(spec["offset"])
+        if mmap:
+            out[name] = np.memmap(path, mode="r", dtype=dtype, shape=shape,
+                                  offset=off)
+        else:
+            with open(path, "rb") as f:
+                f.seek(off)
+                buf = f.read(int(spec["nbytes"]))
+            if len(buf) < int(spec["nbytes"]):
+                raise IndexTruncatedError(f"{path!r}: short read of {name}")
+            out[name] = np.frombuffer(buf, dtype=dtype).reshape(shape)
+    labels = PackedLabels.from_flat(out["hub_rank"], out["dist"],
+                                    out["wlev"], out["offsets"])
+    idx = PackedWCIndex(order=out["order"], rank=out["rank"],
+                        levels=out["levels"], labels=labels)
+    return idx, header

@@ -116,3 +116,52 @@ class FaultTolerantRunner:
                 self.ckpt.save(self.step, {"params": self.params,
                                            "opt_state": self.opt_state})
         return self.log
+
+
+# ---------------------------------------------------------------------------
+# Write-path fault injection for the persisted WC-Index
+# (`ckpt.save_packed_index`). The saver takes an injectable ``_open``; this
+# one returns files that die after a byte budget, simulating a crash in the
+# middle of the tmp-file write. The contract under test: the target path is
+# either absent or a complete previous version — never a torn file — because
+# the saver only `os.replace`s a fully-written tmp.
+
+
+class MidWriteCrash(RuntimeError):
+    """Injected crash while bytes were still being written."""
+
+
+def crashing_open(fail_after_bytes: int):
+    """An ``open()`` substitute whose writes raise `MidWriteCrash` once
+    ``fail_after_bytes`` have been flushed (the partial prefix IS written,
+    like a real torn write)."""
+
+    class _CrashingFile:
+        def __init__(self, f):
+            self._f = f
+            self._left = int(fail_after_bytes)
+
+        def write(self, data):
+            if len(data) > self._left:
+                self._f.write(data[:self._left])
+                self._f.flush()
+                self._left = 0
+                raise MidWriteCrash(
+                    f"injected crash after {fail_after_bytes} bytes")
+            self._left -= len(data)
+            return self._f.write(data)
+
+        def __enter__(self):
+            return self
+
+        def __exit__(self, *exc):
+            self._f.close()
+            return False
+
+        def __getattr__(self, name):
+            return getattr(self._f, name)
+
+    def _open(path, mode="wb"):
+        return _CrashingFile(open(path, mode))
+
+    return _open

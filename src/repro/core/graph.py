@@ -41,6 +41,11 @@ class Graph:
     edges_src: np.ndarray
     edges_dst: np.ndarray
     edges_level: np.ndarray
+    # monotone mutation counter: `mutate_edges` returns a graph with
+    # version + 1, and the dynamic index / serving staleness flags (and the
+    # test fixtures' session caches) key on it. A freshly built graph is
+    # version 0.
+    version: int = 0
 
     # ---------------------------------------------------------------- build
     @staticmethod
@@ -142,6 +147,66 @@ class Graph:
         return int(self.indptr.nbytes + self.nbr.nbytes + self.nbr_level.nbytes
                    + self.edges_src.nbytes + self.edges_dst.nbytes
                    + self.edges_level.nbytes + self.levels.nbytes)
+
+
+def mutate_edges(g: Graph, inserts=(), deletes=()) -> Graph:
+    """New `Graph` with ``deletes`` removed and ``inserts`` added/upserted.
+
+    ``inserts`` is an iterable of ``(u, v, quality)``; ``deletes`` of
+    ``(u, v)`` (orientation-insensitive). The GLOBAL level table is
+    preserved verbatim — level indices keep their meaning for any index
+    built over ``g`` — so an inserted quality must already be a member of
+    ``g.levels`` (a genuinely new quality value changes what every stored
+    ``wlev`` means and requires a full rebuild; we refuse instead of
+    silently re-binning). Inserting over an existing edge replaces its
+    quality (upsert). The result carries ``version = g.version + 1``.
+    """
+    half = g.edges_src < g.edges_dst
+    u = g.edges_src[half].astype(np.int64)
+    v = g.edges_dst[half].astype(np.int64)
+    lvl = g.edges_level[half].copy()
+    drop = set()
+    for a, b in deletes:
+        drop.add((min(int(a), int(b)), max(int(a), int(b))))
+    ins_u, ins_v, ins_l = [], [], []
+    for a, b, q in inserts:
+        a, b = int(a), int(b)
+        if a == b:
+            raise ValueError(f"self loop ({a}, {b}) cannot be inserted")
+        li = int(np.searchsorted(g.levels, q, side="left"))
+        if li >= len(g.levels) or g.levels[li] != q:
+            raise ValueError(
+                f"inserted quality {q!r} is not in the graph's level table "
+                f"{g.levels.tolist()}; a new quality value re-bins every "
+                "label level — rebuild the index instead")
+        drop.add((min(a, b), max(a, b)))  # upsert: replace, don't dedup-max
+        ins_u.append(a)
+        ins_v.append(b)
+        ins_l.append(li)
+    if drop:
+        lo, hi = np.minimum(u, v), np.maximum(u, v)
+        keys = lo * g.num_nodes + hi
+        drop_keys = np.array([a * g.num_nodes + b for a, b in drop],
+                             dtype=np.int64)
+        keep = ~np.isin(keys, drop_keys)
+        u, v, lvl = u[keep], v[keep], lvl[keep]
+    u2 = np.concatenate([u, np.asarray(ins_u, dtype=np.int64)])
+    v2 = np.concatenate([v, np.asarray(ins_v, dtype=np.int64)])
+    l2 = np.concatenate([lvl, np.asarray(ins_l, dtype=np.int32)])
+    g2 = Graph.from_edges(g.num_nodes, u2.astype(np.int32),
+                          v2.astype(np.int32), g.levels[l2])
+    # from_edges re-derives levels from the surviving quality multiset;
+    # restore the global table (same trick as `filtered`)
+    if len(g2.levels) != len(g.levels) or not np.array_equal(g2.levels,
+                                                             g.levels):
+        lut = np.searchsorted(g.levels, g2.levels).astype(np.int32)
+        g2 = dataclasses.replace(
+            g2,
+            nbr_level=lut[g2.nbr_level] if len(g2.nbr_level) else g2.nbr_level,
+            edges_level=(lut[g2.edges_level] if len(g2.edges_level)
+                         else g2.edges_level),
+            levels=g.levels.copy())
+    return dataclasses.replace(g2, version=g.version + 1)
 
 
 def expand_frontier_csr(g: Graph, nodes: np.ndarray

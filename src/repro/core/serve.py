@@ -41,7 +41,8 @@ from typing import Optional
 import numpy as np
 
 from .query import DeviceQueryEngine, PendingResult, ShardedQueryEngine
-from .wc_index import PackedWCIndex, WCIndex, round_to_pow2
+from .wc_index import (DynamicWCIndex, PackedWCIndex, WCIndex,
+                       round_to_pow2)
 
 
 @dataclasses.dataclass
@@ -62,7 +63,9 @@ class WCSDServer:
                  backend: str = "device", engine=None, mesh=None,
                  device_budget_bytes: int | None = None,
                  multi_pod: bool = False, dispatch: str = "ragged",
-                 compressed: bool = False):
+                 compressed: bool = False, graph=None,
+                 compact_threshold: float | None = 0.25,
+                 compact_kwargs: dict | None = None):
         # layout="csr" serves from the CSR-packed store; dispatch="ragged"
         # (default) answers each flush with ONE megakernel launch over the
         # lane-tiled arena — flush_async is plan-free on host — while
@@ -78,25 +81,35 @@ class WCSDServer:
         # d(s, t) != d(t, s) and the swap would alias distinct answers.
         # interpret=None resolves via kernels.ops.resolve_interpret —
         # compiled kernels on TPU, interpret emulation elsewhere.
+        # graph= turns the server dynamic: idx wraps into a `DynamicWCIndex`
+        # and `apply_updates` / `compact` become available; every answer is
+        # stamped with the graph version it was computed against, and
+        # `result_with_staleness` exposes the stamp (docs/dynamic-index.md).
+        # compact_threshold triggers `compact()` when the delta grows past
+        # that fraction of the base store (None disables auto-compaction).
+        self.index = None
+        self.compact_threshold = compact_threshold
+        self._compact_kwargs = dict(compact_kwargs or {})
         if engine is not None:
+            if graph is not None:
+                raise ValueError("graph= (dynamic serving) cannot be "
+                                 "combined with an injected engine= — the "
+                                 "server must be able to rebuild the engine "
+                                 "after an update")
             self.engine = engine
         elif idx is None:
             raise ValueError("WCSDServer needs an index (idx=) or a "
                              "prebuilt engine (engine=)")
-        elif backend == "device":
-            self.engine = DeviceQueryEngine(idx, use_pallas=use_pallas,
-                                            interpret=interpret,
-                                            layout=layout, dispatch=dispatch,
-                                            compressed=compressed)
-        elif backend == "sharded":
-            self.engine = ShardedQueryEngine(
-                idx, mesh=mesh, use_pallas=use_pallas, interpret=interpret,
-                layout=layout, device_budget_bytes=device_budget_bytes,
-                multi_pod=multi_pod, dispatch=dispatch,
-                compressed=compressed)
         else:
-            raise ValueError(f"unknown backend: {backend!r} "
-                             "(expected 'device' or 'sharded')")
+            if graph is not None and not isinstance(idx, DynamicWCIndex):
+                idx = DynamicWCIndex(idx, graph)
+            self.index = idx
+            self._engine_config = dict(
+                backend=backend, use_pallas=use_pallas, interpret=interpret,
+                layout=layout, dispatch=dispatch, compressed=compressed,
+                mesh=mesh, device_budget_bytes=device_budget_bytes,
+                multi_pod=multi_pod)
+            self.engine = self._make_engine()
         self.max_batch = int(max_batch)
         self.undirected = bool(undirected)
         self.memo: collections.OrderedDict[tuple, int] = collections.OrderedDict()
@@ -122,7 +135,71 @@ class WCSDServer:
         self._inflight_prof_pos: dict[tuple, int] = {}
         self._inflight_prof_extra: list[tuple[int, int]] = []
         self._next_rid = 0
+        # graph version each delivered answer was computed against
+        # (popped together with the answer; backs the staleness flags)
+        self.result_versions: dict[int, int] = {}
+        self.profile_result_versions: dict[int, int] = {}
         self.stats = ServeStats()
+
+    # ------------------------------------------------------------- dynamic
+    def _make_engine(self):
+        cfg = self._engine_config
+        if cfg["backend"] == "device":
+            return DeviceQueryEngine(
+                self.index, use_pallas=cfg["use_pallas"],
+                interpret=cfg["interpret"], layout=cfg["layout"],
+                dispatch=cfg["dispatch"], compressed=cfg["compressed"])
+        if cfg["backend"] == "sharded":
+            return ShardedQueryEngine(
+                self.index, mesh=cfg["mesh"], use_pallas=cfg["use_pallas"],
+                interpret=cfg["interpret"], layout=cfg["layout"],
+                device_budget_bytes=cfg["device_budget_bytes"],
+                multi_pod=cfg["multi_pod"], dispatch=cfg["dispatch"],
+                compressed=cfg["compressed"])
+        raise ValueError(f"unknown backend: {cfg['backend']!r} "
+                         "(expected 'device' or 'sharded')")
+
+    @property
+    def graph_version(self) -> int:
+        return int(getattr(self.index, "graph_version", 0))
+
+    def apply_updates(self, inserts=(), deletes=()) -> dict:
+        """Mutate the served graph and fold the label corrections into the
+        delta store (`DynamicWCIndex.apply_updates`). In-flight and pending
+        requests are flushed FIRST: their answers stay valid for the graph
+        version they were stamped with, and read back as stale. The scalar
+        and profile memos are dropped (their entries answer the old graph)
+        and the engine is rebuilt over the delta-extended store. Crossing
+        ``compact_threshold`` triggers `compact` before returning."""
+        if not isinstance(self.index, DynamicWCIndex):
+            raise ValueError("apply_updates requires a dynamic server — "
+                             "construct WCSDServer(idx, graph=g, ...)")
+        self.flush()
+        stats = self.index.apply_updates(inserts=inserts, deletes=deletes)
+        self.memo.clear()
+        self.profile_memo.clear()
+        self.engine = self._make_engine()
+        stats["compacted"] = False
+        if (self.compact_threshold is not None
+                and self.index.delta_ratio() >= self.compact_threshold):
+            self.compact()
+            stats["compacted"] = True
+        return stats
+
+    def compact(self, **build_kwargs) -> dict:
+        """Fold the delta into a fresh immutable base store (fused Pareto
+        pass + arena re-pack; byte-identical to a from-scratch build on the
+        current graph) and rebuild the engine over it. Answers are unchanged
+        by construction, so the memos survive compaction."""
+        if not isinstance(self.index, DynamicWCIndex):
+            raise ValueError("compact requires a dynamic server — "
+                             "construct WCSDServer(idx, graph=g, ...)")
+        self.flush()
+        kw = dict(self._compact_kwargs)
+        kw.update(build_kwargs)
+        stats = self.index.compact(**kw)
+        self.engine = self._make_engine()
+        return stats
 
     def _memo_key(self, s: int, t: int, w_level: int) -> tuple:
         if self.undirected and s > t:
@@ -147,6 +224,7 @@ class WCSDServer:
         if key in self.memo:
             self.memo.move_to_end(key)
             self.results[rid] = self.memo[key]
+            self.result_versions[rid] = self.graph_version
             self.stats.memo_hits += 1
         elif (pkey in self.profile_memo
               and 0 <= w_level <= getattr(self.engine, "num_levels", -1)):
@@ -155,6 +233,7 @@ class WCSDServer:
             # level into the scalar memo so exact repeats stay O(1)
             self.profile_memo.move_to_end(pkey)
             self.results[rid] = int(self.profile_memo[pkey][w_level])
+            self.result_versions[rid] = self.graph_version
             self._memo_put(key, self.results[rid])
             self.stats.memo_hits += 1
         elif key in self._inflight_pos:
@@ -186,6 +265,7 @@ class WCSDServer:
         if key in self.profile_memo:
             self.profile_memo.move_to_end(key)
             self.profile_results[rid] = self.profile_memo[key].copy()
+            self.profile_result_versions[rid] = self.graph_version
             self.stats.memo_hits += 1
         elif key in self._inflight_prof_pos:
             self._inflight_prof_extra.append(
@@ -277,6 +357,7 @@ class WCSDServer:
         if self._inflight is None and self._inflight_prof is None:
             return
         t0 = time.perf_counter()
+        ver = self.graph_version
         if self._inflight is not None:
             handle, rids, keys = self._inflight
             extra = self._inflight_extra
@@ -287,9 +368,11 @@ class WCSDServer:
             out = handle.wait()[:len(rids)]
             for rid, key, d in zip(rids, keys, out):
                 self.results[rid] = int(d)
+                self.result_versions[rid] = ver
                 self._memo_put(key, int(d))
             for rid, pos in extra:   # duplicates submitted while in flight
                 self.results[rid] = int(out[pos])
+                self.result_versions[rid] = ver
         if self._inflight_prof is not None:
             handle, rids, keys = self._inflight_prof
             extra = self._inflight_prof_extra
@@ -304,12 +387,14 @@ class WCSDServer:
                 # aliasing what profile_result hands out as caller-owned)
                 arr = np.array(prof, dtype=np.int32)
                 self.profile_results[rid] = arr.copy()
+                self.profile_result_versions[rid] = ver
                 self.profile_memo[key] = arr
                 if len(self.profile_memo) > self.memo_capacity:
                     self.profile_memo.popitem(last=False)
             for rid, pos in extra:
                 self.profile_results[rid] = np.array(out[pos],
                                                      dtype=np.int32)
+                self.profile_result_versions[rid] = ver
         self.stats.flush_time_s += time.perf_counter() - t0
 
     def flush(self) -> None:
@@ -324,26 +409,55 @@ class WCSDServer:
         so per-request state cannot accumulate across a server's lifetime.
         Unknown (or already-delivered) rids return None without disturbing
         the pending queue."""
+        return self._pop_result(rid)[0]
+
+    def _pop_result(self, rid: int):
+        if rid not in self.results:
+            if rid in self._inflight_rids:
+                self._drain()
+            elif rid in self._pending_rids:
+                self.flush()
         if rid in self.results:
-            return self.results.pop(rid)
-        if rid in self._inflight_rids:
-            self._drain()
-        elif rid in self._pending_rids:
-            self.flush()
-        return self.results.pop(rid, None)
+            return (self.results.pop(rid),
+                    self.result_versions.pop(rid, self.graph_version))
+        return None, None
+
+    def result_with_staleness(self, rid: int):
+        """`result`, plus whether the answer predates the served graph:
+        ``(value, stale)`` where ``stale`` is True iff the answer was
+        computed against an earlier graph version than the server now
+        holds (it was in flight or pending when `apply_updates` ran).
+        Unknown rids return ``(None, False)``."""
+        value, ver = self._pop_result(rid)
+        if value is None:
+            return None, False
+        return value, ver < self.graph_version
 
     def profile_result(self, rid: int) -> Optional[np.ndarray]:
         """Deliver (and evict) the ``[num_levels + 1]`` staircase for a
         `submit_profile` rid — the same read-once contract as `result`.
         The delivered array is the caller's to keep (the memo holds its
         own copy)."""
+        return self._pop_profile_result(rid)[0]
+
+    def _pop_profile_result(self, rid: int):
+        if rid not in self.profile_results:
+            if rid in self._inflight_prof_rids:
+                self._drain()
+            elif rid in self._pending_prof_rids:
+                self.flush()
         if rid in self.profile_results:
-            return self.profile_results.pop(rid)
-        if rid in self._inflight_prof_rids:
-            self._drain()
-        elif rid in self._pending_prof_rids:
-            self.flush()
-        return self.profile_results.pop(rid, None)
+            return (self.profile_results.pop(rid),
+                    self.profile_result_versions.pop(rid, self.graph_version))
+        return None, None
+
+    def profile_result_with_staleness(self, rid: int):
+        """`profile_result` + the staleness flag (see
+        `result_with_staleness`)."""
+        value, ver = self._pop_profile_result(rid)
+        if value is None:
+            return None, False
+        return value, ver < self.graph_version
 
     # convenience: synchronous bulk APIs
     def query_many(self, s, t, w_level) -> np.ndarray:

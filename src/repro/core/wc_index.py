@@ -718,6 +718,301 @@ class PackedWCIndex:
                        hub_rank=hub, dist=dist, wlev=wlev, count=count)
 
 
+def as_packed_index(idx: "WCIndex | PackedWCIndex") -> "PackedWCIndex":
+    """Canonicalize either index flavor to the CSR-packed form (the base
+    format the dynamic layer maintains)."""
+    if isinstance(idx, PackedWCIndex):
+        return idx
+    return PackedWCIndex(order=idx.order, rank=idx.rank, levels=idx.levels,
+                         labels=idx.packed())
+
+
+def _row_key(hub: np.ndarray, dist: np.ndarray, wlev: np.ndarray) -> set:
+    """Hashable entry set of one label row (diff/tombstone accounting)."""
+    return set(zip(hub.tolist(), dist.tolist(), wlev.tolist()))
+
+
+@dataclasses.dataclass
+class DeltaLabelStore:
+    """Correction layer over an immutable base `PackedLabels` store
+    (docs/dynamic-index.md; the delta-file + explicit-staleness design of
+    the JN Index template in SNIPPETS.md).
+
+    ``rows`` maps a touched vertex to its full corrected label row
+    (hub-sorted, self-entry-terminated — the same row invariants I1-I3 as
+    the base store). A corrected row REPLACES the vertex's base row at
+    serve time, which realizes ``min(main_arena, delta_arena)``: surviving
+    base entries are carried into the corrected row, invalidated base
+    entries are simply absent from it. The base store is never written —
+    its entries for touched vertices become *tombstoned* behind
+    ``graph_version``: still physically present in the main arena, no
+    longer referenced by any tile pointer, reclaimed at the next
+    compaction.
+
+    ``tombstoned`` / ``corrections`` count base entries invalidated and
+    delta entries added since the last compaction; their ratio against the
+    base size is the compaction trigger (`DynamicWCIndex.delta_ratio`).
+    """
+
+    graph_version: int = 0
+    rows: dict = dataclasses.field(default_factory=dict)
+    tombstoned: int = 0
+    corrections: int = 0
+
+    def is_empty(self) -> bool:
+        return not self.rows
+
+    def delta_entries(self) -> int:
+        """Total entries resident in the delta arena (full corrected rows,
+        self entries included)."""
+        return int(sum(len(h) for h, _, _ in self.rows.values()))
+
+    def record(self, base: "PackedLabels", new_rows: dict) -> None:
+        """Fold freshly recomputed rows in: rows identical to the BASE row
+        drop out of the delta (nothing to correct any more); the counters
+        track the symmetric difference against the base store."""
+        for v, (h, d, w) in new_rows.items():
+            bh, bd, bw = base.row(v)
+            if (len(bh) == len(h) and np.array_equal(bh, h)
+                    and np.array_equal(bd, d) and np.array_equal(bw, w)):
+                self.rows.pop(v, None)
+                continue
+            self.rows[v] = (np.ascontiguousarray(h, dtype=np.int32),
+                            np.ascontiguousarray(d, dtype=np.int32),
+                            np.ascontiguousarray(w, dtype=np.int32))
+        self.tombstoned = 0
+        self.corrections = 0
+        for v, (h, d, w) in self.rows.items():
+            bset = _row_key(*base.row(v))
+            nset = _row_key(h, d, w)
+            self.tombstoned += len(bset - nset)
+            self.corrections += len(nset - bset)
+
+    def reset(self) -> None:
+        """Drop every correction (post-compaction: the new base absorbs
+        them). ``graph_version`` survives — it counts graph mutations, not
+        delta generations."""
+        self.rows.clear()
+        self.tombstoned = 0
+        self.corrections = 0
+
+    # -------------------------------------------------------- serving views
+    def extend_arena(self, base_arena: "LabelArena",
+                     lane: int | None = None) -> "LabelArena":
+        """The dual-arena serving layout: the base arena's tiles verbatim
+        (byte-identical — tombstoned tiles just lose their pointers), with
+        one lane-tiled DELTA REGION appended past them holding every
+        corrected row; touched vertices' ``tile_base`` redirect into it.
+        The ragged worklist thus covers both arenas in ONE flat tile
+        space — a flush over main + delta stays a single `pallas_call`
+        (delta tiles are ordinary worklist items; locked by
+        tests/test_ragged.py)."""
+        lane = base_arena.lane if lane is None else int(lane)
+        assert lane == base_arena.lane
+        if not self.rows:
+            return base_arena
+        touched = sorted(self.rows)
+        cnts = np.array([max(-(-len(self.rows[v][0]) // lane), 1)
+                         for v in touched], dtype=np.int64)
+        Td = int(cnts.sum())
+        dh = np.full((Td, lane), -1, dtype=np.int32)
+        dd = np.full((Td, lane), INF_DIST, dtype=np.int32)
+        dw = np.full((Td, lane), -1, dtype=np.int32)
+        tile_base = base_arena.tile_base.copy()
+        tile_cnt = base_arena.tile_cnt.copy()
+        T0 = base_arena.num_tiles
+        at = 0
+        for v, c in zip(touched, cnts):
+            h, d, w = self.rows[v]
+            n = len(h)
+            flat = dh[at:at + c].reshape(-1)
+            flat[:n] = h
+            dd[at:at + c].reshape(-1)[:n] = d
+            dw[at:at + c].reshape(-1)[:n] = w
+            tile_base[v] = T0 + at
+            tile_cnt[v] = int(c)
+            at += int(c)
+        tile_lo = dh[:, 0].copy()
+        tile_hi = dh.max(axis=1).astype(np.int32)
+        return LabelArena(
+            hub=np.concatenate([base_arena.hub, dh]),
+            dist=np.concatenate([base_arena.dist, dd]),
+            wlev=np.concatenate([base_arena.wlev, dw]),
+            tile_base=tile_base, tile_cnt=tile_cnt,
+            tile_lo=np.concatenate([base_arena.tile_lo, tile_lo]),
+            tile_hi=np.concatenate([base_arena.tile_hi, tile_hi]))
+
+    def merged_flat(self, base: "PackedLabels"):
+        """Merged flat CSR arrays (hub, dist, wlev, offsets): base rows for
+        untouched vertices, corrected rows for touched ones — the store the
+        bucket-pair / padded serving paths and the host oracles read."""
+        V = base.num_nodes
+        count = (base.offsets[1:] - base.offsets[:-1]).astype(np.int64)
+        for v, (h, _, _) in self.rows.items():
+            count[v] = len(h)
+        offsets = np.zeros(V + 1, dtype=np.int64)
+        np.cumsum(count, out=offsets[1:])
+        E = int(offsets[-1])
+        hub = np.empty(E, dtype=np.int32)
+        dist = np.empty(E, dtype=np.int32)
+        wlev = np.empty(E, dtype=np.int32)
+        untouched = np.ones(V, dtype=bool)
+        if self.rows:
+            untouched[np.fromiter(self.rows, dtype=np.int64,
+                                  count=len(self.rows))] = False
+        uv = np.flatnonzero(untouched)
+        lens = count[uv]
+        pos = np.repeat(offsets[uv], lens) + _concat_ranges(lens)
+        src = np.repeat(base.offsets[uv], lens) + _concat_ranges(lens)
+        hub[pos] = base.hub_rank[src]
+        dist[pos] = base.dist[src]
+        wlev[pos] = base.wlev[src]
+        for v, (h, d, w) in self.rows.items():
+            o = int(offsets[v])
+            hub[o:o + len(h)] = h
+            dist[o:o + len(h)] = d
+            wlev[o:o + len(h)] = w
+        return hub, dist, wlev, offsets
+
+
+class DynamicWCIndex:
+    """A WC-Index that follows a mutating graph: an immutable base
+    `PackedWCIndex` plus a `DeltaLabelStore` of corrected rows, re-derived
+    per update by re-running the pruned rank-ordered BFS rounds for the
+    affected roots only (`wc_index_batched.rebuild_affected_rows`).
+
+    Duck-types the engine interface (``packed()`` /
+    ``padded_device_arrays()`` / ``num_levels``), so `DeviceQueryEngine`,
+    `ShardedQueryEngine` and `WCSDServer` serve it like any static index —
+    under the ragged dispatch the arena it hands out is the base tile
+    arena with the delta region appended (`DeltaLabelStore.extend_arena`),
+    so every flush stays one kernel launch.
+
+    `compact()` re-runs the fused Pareto build
+    (`build_wc_index_batched_packed`) on the current graph and re-packs a
+    fresh base arena — byte-identical to building from scratch on the
+    mutated graph (locked by tests/test_dynamic.py).
+    """
+
+    def __init__(self, base: "WCIndex | PackedWCIndex", graph):
+        self.base = as_packed_index(base)
+        self.graph = graph
+        self.delta = DeltaLabelStore(graph_version=int(
+            getattr(graph, "version", 0)))
+        self._packed_cache: dict = {}
+
+    # ------------------------------------------------------------- proxies
+    @property
+    def order(self):
+        return self.base.order
+
+    @property
+    def rank(self):
+        return self.base.rank
+
+    @property
+    def levels(self):
+        return self.base.levels
+
+    @property
+    def num_levels(self) -> int:
+        return self.base.num_levels
+
+    @property
+    def num_nodes(self) -> int:
+        return self.base.num_nodes
+
+    @property
+    def graph_version(self) -> int:
+        return self.delta.graph_version
+
+    def level_of(self, w: float) -> int:
+        return self.base.level_of(w)
+
+    def size_entries(self) -> int:
+        return self.packed().size_entries()
+
+    def delta_ratio(self) -> float:
+        """Compaction trigger: delta-resident entries (corrected rows)
+        relative to the base store size."""
+        return self.delta.delta_entries() / max(self.base.size_entries(), 1)
+
+    # ------------------------------------------------------------- updates
+    def apply_updates(self, inserts=(), deletes=()) -> dict:
+        """Mutate the graph and fold the label corrections into the delta
+        store. Exact: serving equals a from-scratch rebuild on the mutated
+        graph, for every level (differential-locked). Returns stats."""
+        from .graph import mutate_edges
+        from .wc_index_batched import affected_vertices, rebuild_affected_rows
+
+        g_old = self.graph
+        g_new = mutate_edges(g_old, inserts=inserts, deletes=deletes)
+        endpoints = sorted({int(x) for e in inserts for x in e[:2]}
+                          | {int(x) for e in deletes for x in e[:2]})
+        affected = affected_vertices(g_old, g_new, endpoints)
+        new_rows = rebuild_affected_rows(
+            g_new, self.base.order, self.base.rank,
+            num_levels=self.num_levels,
+            merged_flat=self.delta.merged_flat(self.base.labels),
+            affected=affected)
+        self.delta.record(self.base.labels, new_rows)
+        self.delta.graph_version += 1
+        self.graph = g_new
+        self._packed_cache.clear()
+        return {"affected_roots": int(len(affected)),
+                "touched_rows": int(len(new_rows)),
+                "delta_rows": int(len(self.delta.rows)),
+                "delta_entries": self.delta.delta_entries(),
+                "tombstoned": int(self.delta.tombstoned),
+                "corrections": int(self.delta.corrections),
+                "graph_version": self.graph_version}
+
+    def compact(self, **build_kwargs) -> dict:
+        """Re-run the fused Pareto build + CSR re-pack on the current
+        graph; the delta folds into a fresh immutable base. Byte-identical
+        to `build_wc_index_batched_packed` on the mutated graph."""
+        from .wc_index_batched import build_wc_index_batched_packed
+        idx, stats = build_wc_index_batched_packed(self.graph, **build_kwargs)
+        self.base = idx
+        self.delta.reset()
+        self._packed_cache.clear()
+        return stats
+
+    # ----------------------------------------------------- engine interface
+    def packed(self, lane: int = LANE) -> "PackedLabels":
+        """The merged serving store. With an empty delta this is the base
+        store itself; otherwise a merged `PackedLabels` whose ragged arena
+        view is the base arena + appended delta region (NOT a repack of
+        the base tiles — see `DeltaLabelStore.extend_arena`)."""
+        if self.delta.is_empty():
+            return self.base.packed(lane=lane)
+        if lane not in self._packed_cache:
+            merged = PackedLabels.from_flat(
+                *self.delta.merged_flat(self.base.labels), lane=lane)
+            base_packed = self.base.packed(lane=lane)
+            merged.__dict__["_arena_cache"] = {
+                lane: self.delta.extend_arena(base_packed.arena(lane=lane),
+                                              lane=lane)}
+            self._packed_cache[lane] = merged
+        return self._packed_cache[lane]
+
+    def padded_device_arrays(self, cap: int | None = None):
+        return self.packed().to_padded(cap)
+
+    def to_index(self) -> "WCIndex":
+        hub, dist, wlev, count = self.packed().to_padded()
+        return WCIndex(order=self.order, rank=self.rank, levels=self.levels,
+                       hub_rank=hub, dist=dist, wlev=wlev, count=count)
+
+    # ------------------------------------------------------------- queries
+    def query_one(self, s: int, t: int, w_level: int) -> int:
+        store = self.packed()
+        return merge_query_rows(*store.row(s), *store.row(t), w_level)
+
+    def query_batch(self, s, t, w_level) -> np.ndarray:
+        return self.to_index().query_batch(s, t, w_level)
+
+
 def _ensure_capacity(idx_arrays, count, need):
     """Grow padded label arrays so every vertex in `need` fits one more."""
     hub, dist, wlev = idx_arrays

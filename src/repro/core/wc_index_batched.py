@@ -47,10 +47,11 @@ import jax
 import jax.numpy as jnp
 
 from .dominance import pareto_filter_grouped
-from .graph import Graph, INF_DIST
+from .graph import Graph, INF_DIST, expand_frontier_csr
 from .ordering import make_order
 from .wc_index import (PackedLabelsBuilder, PackedWCIndex, WCIndex,
-                       _concat_ranges, append_self_entries, round_to_pow2)
+                       _concat_ranges, _ensure_capacity, append_self_entries,
+                       round_to_pow2)
 
 DEV_INF = 1 << 29
 
@@ -498,3 +499,177 @@ def clean_index(idx: WCIndex) -> tuple[WCIndex, int]:
     out = WCIndex(order=idx.order, rank=idx.rank, levels=idx.levels,
                   hub_rank=hub, dist=dist, wlev=wlev, count=count)
     return out, removed_total
+
+
+# --------------------------------------------------------------------------
+# Incremental maintenance (docs/dynamic-index.md). The delta layer of
+# `core.wc_index.DynamicWCIndex` calls these two functions per update batch:
+# `affected_vertices` bounds the blast radius of an edge change, and
+# `rebuild_affected_rows` re-runs the pruned rank-ordered rounds for exactly
+# those roots, seeded with the current serving rows.
+
+
+def affected_vertices(g_old: Graph, g_new: Graph, endpoints) -> np.ndarray:
+    """Vertices whose label row may change when ``g_old`` becomes ``g_new``.
+
+    The connected-component closure of the touched ``endpoints`` at level 0
+    (all edges), over the UNION of the two graphs. Conservative but provably
+    sufficient: a root in a different component (in both graphs) explores an
+    unchanged subgraph, seeds its hub table from labels whose hubs live in
+    that unchanged component, and prunes against rows of vertices it can
+    reach there — every input to its BFS is unchanged, so its emissions are
+    too. Conversely every emission of an affected root targets a vertex of
+    the closure, so label corrections never escape the returned set.
+    """
+    V = g_new.num_nodes
+    seen = np.zeros(V, dtype=bool)
+    f = np.unique(np.asarray(list(endpoints), dtype=np.int64))
+    f = f[(f >= 0) & (f < V)]
+    seen[f] = True
+    f = f.astype(np.int32)
+    while len(f):
+        nxt = [expand_frontier_csr(g, f)[1] for g in (g_old, g_new)]
+        nxt = np.unique(np.concatenate(nxt).astype(np.int64))
+        nxt = nxt[~seen[nxt]]
+        seen[nxt] = True
+        f = nxt.astype(np.int32)
+    return np.flatnonzero(seen).astype(np.int32)
+
+
+def rebuild_affected_rows(g: Graph, order: np.ndarray, rank: np.ndarray,
+                          num_levels: int, merged_flat, affected) -> dict:
+    """Recompute the label rows of ``affected`` vertices on the mutated graph.
+
+    Re-runs the sequential Algorithm-3 loop of `wc_index.build_wc_index` for
+    the affected ROOTS only (ascending rank), seeded with the current
+    serving rows (``merged_flat``: flat hub/dist/wlev + offsets) minus every
+    entry whose hub is an affected root and minus the trailing self entries
+    (the loop emulates the root's self entry via ``T[k, :] = 0``, exactly
+    like the from-scratch build). Soundness of the seeded pruning: at root
+    ``k``, unaffected seed entries with hub < k are exactly what a
+    from-scratch run over ``g`` would have emitted by then (closure
+    argument in `affected_vertices`), affected hubs < k were re-run earlier
+    in this very loop, and entries with hub >= k are masked out of the hub
+    table so pruning never consults a lower-priority witness.
+
+    Returns ``{vertex: (hub, dist, wlev)}`` — full replacement rows
+    (hub-sorted, staircase-minimal per hub group, self-entry-terminated)
+    for every vertex whose row may have changed.
+    """
+    V, W = g.num_nodes, int(num_levels)
+    order = np.asarray(order, dtype=np.int32)
+    rank = np.asarray(rank, dtype=np.int32)
+    fhub, fdist, fwlev, offs = merged_flat
+    affected = np.asarray(affected, dtype=np.int64)
+    aff_ranks = np.sort(rank[affected].astype(np.int64))
+    is_aff_rank = np.zeros(V, dtype=bool)
+    is_aff_rank[aff_ranks] = True
+
+    # ---- seed padded working rows from the current serving store ----------
+    lens = (offs[1:] - offs[:-1]).astype(np.int64)
+    rows_of = np.repeat(np.arange(V, dtype=np.int64), lens)
+    keep = ~is_aff_rank[np.clip(fhub, 0, V - 1)]
+    keep[offs[1:] - 1] = False  # every row terminates with its self entry
+    krows = rows_of[keep]
+    count = np.bincount(krows, minlength=V).astype(np.int32)
+    cap = max(int(count.max()) if V else 1, 8)
+    hub = np.full((V, cap), -1, dtype=np.int32)
+    dist = np.full((V, cap), INF_DIST, dtype=np.int32)
+    wlev = np.full((V, cap), -1, dtype=np.int32)
+    cols = _concat_ranges(count.astype(np.int64))
+    hub[krows, cols] = fhub[keep]
+    dist[krows, cols] = fdist[keep]
+    wlev[krows, cols] = fwlev[keep]
+    # rows that lost an entry are stale even if the re-run emits nothing back
+    dropped = ~keep
+    dropped[offs[1:] - 1] = False  # self entries are re-appended, not drops
+    touched = np.zeros(V, dtype=bool)
+    touched[affected] = True
+    touched[rows_of[dropped]] = True
+
+    # ---- re-run the pruned rank-ordered rounds for affected roots ---------
+    T = np.full((V, W + 1), INF_DIST, dtype=np.int32)
+    touched_T: list[np.ndarray] = []
+    R = np.full(V, -1, dtype=np.int32)
+    touched_R: list[np.ndarray] = []
+    for k in aff_ranks:
+        k = int(k)
+        root = int(order[k])
+        c = int(count[root])
+        if c:
+            hr, dr, wr = hub[root, :c], dist[root, :c], wlev[root, :c]
+            pre = hr < k  # only hubs the from-scratch run would know by now
+            hr, dr, wr = hr[pre], dr[pre], wr[pre]
+            if len(hr):
+                reps = (wr + 1).astype(np.int64)
+                rows = np.repeat(hr.astype(np.int64), reps)
+                np.minimum.at(T.reshape(-1),
+                              rows * (W + 1) + _concat_ranges(reps),
+                              np.repeat(dr, reps))
+                touched_T.append(hr.copy())
+        T[k, :] = 0
+        touched_T.append(np.array([k], dtype=np.int32))
+        R[root] = W
+        touched_R.append(np.array([root], dtype=np.int32))
+
+        frontier_v = np.array([root], dtype=np.int32)
+        frontier_w = np.array([W], dtype=np.int32)
+        d = 0
+        while len(frontier_v):
+            if d > 0:
+                capn = hub.shape[1]
+                col = np.arange(capn)
+                m = (col[None, :] < count[frontier_v, None]) & \
+                    (wlev[frontier_v] >= frontier_w[:, None])
+                hubs = hub[frontier_v]
+                # hubs >= k stay INF in T: never prune on a lower-priority
+                # witness (they may not exist in the from-scratch run yet)
+                tv = T[np.clip(hubs, 0, V - 1), frontier_w[:, None]]
+                cand = np.where(
+                    m, dist[frontier_v].astype(np.int64) + tv, INF_DIST)
+                survive = cand.min(axis=1) > d
+                frontier_v = frontier_v[survive]
+                frontier_w = frontier_w[survive]
+                if len(frontier_v) == 0:
+                    break
+                hub, dist, wlev = _ensure_capacity((hub, dist, wlev), count,
+                                                   frontier_v)
+                pos = count[frontier_v]
+                hub[frontier_v, pos] = k
+                dist[frontier_v, pos] = d
+                wlev[frontier_v, pos] = frontier_w
+                count[frontier_v] += 1
+                touched[frontier_v] = True
+            src_pos, nbrs, lvls = expand_frontier_csr(g, frontier_v)
+            w_new = np.minimum(frontier_w[src_pos], lvls)
+            valid = (rank[nbrs] > k) & (w_new > R[nbrs])
+            nbrs, w_new = nbrs[valid], w_new[valid]
+            if len(nbrs):
+                np.maximum.at(R, nbrs, w_new)
+                cands = np.unique(nbrs)
+                touched_R.append(cands)
+                frontier_v = cands
+                frontier_w = R[cands].copy()
+            else:
+                frontier_v = np.zeros(0, dtype=np.int32)
+                frontier_w = np.zeros(0, dtype=np.int32)
+            d += 1
+        for arr in touched_T:
+            T[arr] = INF_DIST
+        touched_T.clear()
+        for arr in touched_R:
+            R[arr] = -1
+        touched_R.clear()
+
+    # ---- assemble full replacement rows (hub-sorted + self entry) ---------
+    out = {}
+    for v in np.flatnonzero(touched):
+        v = int(v)
+        c = int(count[v])
+        h, dd, w = hub[v, :c], dist[v, :c], wlev[v, :c]
+        o = np.lexsort((dd, h))
+        h, dd, w = h[o], dd[o], w[o]
+        out[v] = (np.append(h, rank[v]).astype(np.int32),
+                  np.append(dd, 0).astype(np.int32),
+                  np.append(w, W).astype(np.int32))
+    return out

@@ -14,17 +14,28 @@ def built_indices():
     tests: every case that needs "a built index over graph X" shares one
     construction per distinct (generator, kwargs) key instead of paying
     the build per parametrization — the profile suite runs its whole
-    layout x kernel matrix against two builds, not a dozen."""
+    layout x kernel matrix against two builds, not a dozen.
+
+    The cache keys on the graph VERSION as well as the generator kwargs:
+    a dynamic test that mutates a cached graph (`mutate_edges` bumps
+    ``version``) gets a fresh (graph, index) pair instead of poisoning the
+    static suite's fixture — and the static suite never sees an index that
+    was built over a mutated graph (regression-locked in
+    tests/test_dynamic.py)."""
     cache = {}
 
     def get(family: str, **kwargs):
         from repro.core import generators
         from repro.core.wc_index import build_wc_index
         key = (family, tuple(sorted(kwargs.items())))
-        if key not in cache:
-            g = getattr(generators, family)(**kwargs)
-            cache[key] = (g, build_wc_index(g, ordering="degree"))
-        return cache[key]
+        if key in cache:
+            g, idx, built_version = cache[key]
+            if getattr(g, "version", 0) == built_version:
+                return g, idx
+        g = getattr(generators, family)(**kwargs)
+        idx = build_wc_index(g, ordering="degree")
+        cache[key] = (g, idx, getattr(g, "version", 0))
+        return g, idx
 
     return get
 

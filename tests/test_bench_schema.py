@@ -13,8 +13,8 @@ import numpy as np
 import pytest
 
 from benchmarks import bench_wcsd
-from benchmarks.run import (BASELINE_FILES, CHECK_FLOORS, CHECK_GATES,
-                            REQUIRED_ALGOS, ROW_KEYS,
+from benchmarks.run import (BASELINE_FILES, CHECK_CEILINGS, CHECK_FLOORS,
+                            CHECK_GATES, REQUIRED_ALGOS, ROW_KEYS,
                             check_against_baseline, validate_rows)
 
 
@@ -49,6 +49,13 @@ def test_serving_suite_conforms_and_carries_profile_rows(serving_rows):
     assert by_algo["rowsharded_ragged_us_per_query"] > 0
     assert by_algo["rowsharded_ragged_speedup"] > 0
     assert by_algo["compressed_bytes_ratio"] >= 1.8
+    # the dynamic-index rows exist and are sane; the <= 1.15x overhead
+    # ceiling is enforced on the real bench config by run.py --check
+    assert {"update_apply_us", "compact_us",
+            "delta_query_overhead"} <= algos
+    assert by_algo["update_apply_us"] > 0
+    assert by_algo["compact_us"] > 0
+    assert by_algo["delta_query_overhead"] > 0
 
 
 def test_row_keys_are_the_csv_header():
@@ -122,10 +129,19 @@ def test_check_against_baseline_enforces_floors_and_presence():
     assert len(fails) == 1 and "missing" in fails[0]
 
 
+def test_check_against_baseline_enforces_ceilings():
+    # the <= 1.15x delta serving tax holds independent of the baseline
+    fails = check_against_baseline(
+        "serving", [_row("delta_query_overhead", 1.4)], [])
+    assert len(fails) == 1 and "absolute ceiling" in fails[0]
+    assert check_against_baseline(
+        "serving", [_row("delta_query_overhead", 1.02)], []) == []
+
+
 def test_gate_tables_are_wired():
     """Every gated/floored suite maps to a committed baseline artifact,
     and the ragged acceptance metrics are actually gated."""
-    for suite in set(CHECK_GATES) | set(CHECK_FLOORS):
+    for suite in set(CHECK_GATES) | set(CHECK_FLOORS) | set(CHECK_CEILINGS):
         assert suite in BASELINE_FILES, suite
     assert CHECK_FLOORS["serving"]["ragged_speedup"] >= 2.0
     assert CHECK_FLOORS["serving"]["ragged_buckets"] >= 8.0
@@ -140,3 +156,8 @@ def test_gate_tables_are_wired():
     assert {"rowsharded_ragged_speedup", "rowsharded_ragged_us_per_query",
             "rowsharded_bucket_pair_us_per_query",
             "compressed_bytes_ratio"} <= REQUIRED_ALGOS["serving"]
+    # dynamic-index serving: the delta overhead ceiling is wired and the
+    # update/compact cost rows are tracked in the artifact
+    assert CHECK_CEILINGS["serving"]["delta_query_overhead"] <= 1.15
+    assert {"update_apply_us", "compact_us",
+            "delta_query_overhead"} <= REQUIRED_ALGOS["serving"]

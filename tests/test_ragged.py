@@ -294,6 +294,127 @@ print("OK one launch one collective")
     assert "OK one launch one collective" in r.stdout
 
 
+def test_delta_serving_one_pallas_launch_per_flush():
+    """Acceptance (dynamic serving): a flush over the main + delta arenas
+    still traces EXACTLY ONE ragged `pallas_call` — the delta region is
+    appended tiles in the SAME arena, its worklist items ride the same
+    launch (docs/dynamic-index.md) — and the answers are bit-identical to
+    the BFS sweep on the mutated graph."""
+    import repro.kernels.wcsd_query as wq
+    from repro.core.wc_index import DynamicWCIndex
+
+    g = erdos_renyi(60, 4.0, num_levels=4, seed=77)
+    idx = build_wc_index(g)
+    lane = 16
+    base_tiles = idx.packed(lane=lane).arena(lane=lane).num_tiles
+    dyn = DynamicWCIndex(idx, g)
+    dyn.apply_updates(
+        inserts=[(0, 30, float(g.levels[1]))],
+        deletes=[(int(g.edges_src[0]), int(g.edges_dst[0]))])
+    assert not dyn.delta.is_empty()
+    ext = dyn.packed(lane=lane).arena(lane=lane)
+    assert ext.num_tiles > base_tiles, "no delta region appended"
+
+    D = constrained_distance_grid(dyn.graph)
+    rng = np.random.default_rng(3)
+    B = 4096
+    s = rng.integers(0, g.num_nodes, B).astype(np.int32)
+    t = rng.integers(0, g.num_nodes, B).astype(np.int32)
+    wl = rng.integers(0, g.num_levels + 1, B).astype(np.int32)
+    exp = D[s, t, wl]
+
+    calls = []
+    real = wq.pl.pallas_call
+
+    def counting(*a, **k):
+        calls.append(a)
+        return real(*a, **k)
+
+    wq.pl.pallas_call = counting
+    try:
+        eng = DeviceQueryEngine(dyn, layout="csr", use_pallas=True,
+                                lane=lane)
+        got = np.asarray(eng.query(s, t, wl))
+        assert len(calls) == 1, \
+            f"expected ONE launch over main+delta, traced {len(calls)}"
+        got2 = np.asarray(eng.query(s, t, wl))
+        assert len(calls) == 1  # compiled call reused
+    finally:
+        wq.pl.pallas_call = real
+    np.testing.assert_array_equal(got, exp)
+    np.testing.assert_array_equal(got2, exp)
+
+
+def test_rowsharded_delta_one_launch_one_collective_per_flush():
+    """The row-sharded flavor of the delta launch lock, on 8 virtual
+    devices (subprocess): one `pallas_call` trace + one `psum_scatter`
+    trace per flush with the delta-extended arena tile-sharded over the
+    mesh, answers bit-identical to the single-device dynamic engine."""
+    import os
+    import subprocess
+    import sys
+
+    prog = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+import repro.kernels.wcsd_query as wq
+from repro.core.generators import erdos_renyi
+from repro.core.query import DeviceQueryEngine, ShardedQueryEngine
+from repro.core.wc_index import DynamicWCIndex, build_wc_index
+from repro.launch.mesh import make_serving_mesh
+
+g = erdos_renyi(60, 4.0, num_levels=4, seed=77)
+idx = build_wc_index(g)
+lane = 16
+dyn = DynamicWCIndex(idx, g)
+dyn.apply_updates(inserts=[(0, 30, float(g.levels[1]))],
+                  deletes=[(int(g.edges_src[0]), int(g.edges_dst[0]))])
+assert not dyn.delta.is_empty()
+rng = np.random.default_rng(3)
+B = 1024
+s = rng.integers(0, g.num_nodes, B).astype(np.int32)
+t = rng.integers(0, g.num_nodes, B).astype(np.int32)
+wl = rng.integers(0, g.num_levels + 1, B).astype(np.int32)
+dev = DeviceQueryEngine(dyn, layout="csr", use_pallas=True, lane=lane)
+exp = np.asarray(dev.query(s, t, wl))
+
+pallas_traces, coll_traces = [], []
+real_pc, real_ps = wq.pl.pallas_call, jax.lax.psum_scatter
+def counting_pc(*a, **k):
+    pallas_traces.append(a)
+    return real_pc(*a, **k)
+def counting_ps(*a, **k):
+    coll_traces.append(a)
+    return real_ps(*a, **k)
+wq.pl.pallas_call = counting_pc
+jax.lax.psum_scatter = counting_ps
+try:
+    eng = ShardedQueryEngine(dyn, mesh=make_serving_mesh(), layout="csr",
+                             lane=lane, use_pallas=True,
+                             device_budget_bytes=1, dispatch="ragged")
+    assert eng.mode == "sharded_labels" and eng.dispatch == "ragged"
+    got = np.asarray(eng.query(s, t, wl))
+    assert len(pallas_traces) == 1, f"{len(pallas_traces)} pallas traces"
+    assert len(coll_traces) == 1, f"{len(coll_traces)} collective traces"
+    got2 = np.asarray(eng.query(s, t, wl))
+    assert len(pallas_traces) == 1 and len(coll_traces) == 1
+finally:
+    wq.pl.pallas_call = real_pc
+    jax.lax.psum_scatter = real_ps
+np.testing.assert_array_equal(got, exp)
+np.testing.assert_array_equal(got2, exp)
+print("OK delta one launch one collective")
+"""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = {**os.environ, "PYTHONPATH": src, "JAX_PLATFORMS": "cpu"}
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, env=env, timeout=420)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "OK delta one launch one collective" in r.stdout
+
+
 def test_ragged_flush_never_calls_host_planner(monkeypatch):
     """The ragged path's batch plan is emitted on device: the host
     bucket-pair planner must not run on any flush (that is what makes
