@@ -37,7 +37,8 @@ REQUIRED_ALGOS = {
                 "rowsharded_ragged_us_per_query",
                 "rowsharded_bucket_pair_us_per_query",
                 "rowsharded_ragged_speedup", "compressed_bytes_ratio",
-                "update_apply_us", "compact_us", "delta_query_overhead"},
+                "update_apply_us", "compact_us", "delta_query_overhead",
+                "serve_p50_us", "serve_p99_us", "dma_overlap_speedup"},
     "label_store": {"entries", "padded_bytes", "csr_bytes",
                     "dense_us_per_query", "seg_us_per_query"},
 }
@@ -70,20 +71,36 @@ CHECK_GATES = {
 # the >= 8-bucket skewed store (observed 5.8-11.6x), including with the
 # store row-sharded (one tile gather + one launch per device vs the
 # per-bucket-pair collective loop), and the compressed arena must keep
-# >= 1.8x the rows per byte of the uncompressed one (observed ~2.35x)
+# >= 1.8x the rows per byte of the uncompressed one (observed ~2.35x).
+# dma_overlap_speedup (quad-buffered tile-DMA ring vs the nbuf=1
+# single-buffer baseline, same worklist, same run) is a real overlap
+# ratio only on TPU; under CI's interpret emulation the copies are
+# synchronous either way (observed ~0.7-1.1x with interpret-loop timing
+# noise), so its floor of 0.5 only guards the ring against ADDING
+# overhead — a 2x collapse, not jitter.
 CHECK_FLOORS = {
     "serving": {"ragged_speedup": 2.0, "ragged_buckets": 8.0,
                 "rowsharded_ragged_speedup": 2.0,
-                "compressed_bytes_ratio": 1.8},
+                "compressed_bytes_ratio": 1.8,
+                "dma_overlap_speedup": 0.5},
 }
 
 # absolute ceilings, the floors' smaller-is-better mirror: serving
 # through a NON-EMPTY delta-extended arena must stay within 1.15x of the
 # static ragged path (observed ~1.0x: the delta only redirects tile
 # pointers inside the one launch per flush). Like the floors, ceilings
-# are same-run ratios, so machine speed cancels.
+# are same-run ratios, so machine speed cancels — with one exception:
+# serve_p99_us is an absolute wall-clock SLO guard on the continuous-
+# batching epoch (enqueue->deliver p99). It is deliberately slack (CI
+# observes low single-digit ms, but one interpret-mode compile of an
+# unseen padded batch shape landing in-band costs ~300ms) because
+# runner speed varies; what it catches is pathological serialization —
+# a flush re-running the whole backlog, a deadline that never fires, a
+# request parked until epoch end — which shows up as many seconds, not
+# percent.
 CHECK_CEILINGS = {
-    "serving": {"delta_query_overhead": 1.15},
+    "serving": {"delta_query_overhead": 1.15,
+                "serve_p99_us": 1_000_000.0},
 }
 
 # which committed artifact holds each suite's baseline rows

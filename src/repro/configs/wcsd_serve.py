@@ -36,7 +36,14 @@ class ServeConfig:
     ~2.4x the rows per device under the same ``device_budget_bytes``; hub
     ids exact, distances within the documented bound. The same stack
     serves profile (staircase) queries — `WCSDServer.submit_profile`
-    needs no extra configuration; its level count comes from the index."""
+    needs no extra configuration; its level count comes from the index.
+
+    ``max_wait_us``/``min_batch`` enable continuous batching
+    (docs/serving.md §1a): with a deadline set, a flush fires as soon as
+    ``min_batch`` requests are queued and the in-flight slot is free, or
+    when the oldest queued request has waited ``max_wait_us`` — so a
+    trickle of traffic is never starved waiting for ``max_batch``.
+    ``max_wait_us=None`` (default) keeps the epoch-flush behavior."""
 
     backend: str = "sharded"          # "device" | "sharded"
     layout: str = "csr"               # "padded" | "csr"
@@ -49,6 +56,8 @@ class ServeConfig:
     multi_pod: bool = False           # ("pod", "data") batch axes
     device_budget_bytes: int | None = None
     compressed: bool = False          # CompressedArena store (csr + ragged)
+    max_wait_us: float | None = None  # continuous-batching deadline
+    min_batch: int = 1                # admission floor for early flushes
 
     def server_kwargs(self) -> dict:
         return dict(backend=self.backend, layout=self.layout,
@@ -58,14 +67,16 @@ class ServeConfig:
                     memo_capacity=self.memo_capacity,
                     undirected=self.undirected,
                     device_budget_bytes=self.device_budget_bytes,
-                    multi_pod=self.multi_pod, compressed=self.compressed)
+                    multi_pod=self.multi_pod, compressed=self.compressed,
+                    max_wait_us=self.max_wait_us, min_batch=self.min_batch)
 
 
 def serve_config() -> ServeConfig:
     """Production shape: compiled kernels (interpret auto-resolves False on
     accelerators), CSR store, ragged single-launch dispatch, sharded
-    batch."""
-    return ServeConfig(use_pallas=True, max_batch=4096)
+    batch, 500µs admission deadline (continuous batching)."""
+    return ServeConfig(use_pallas=True, max_batch=4096,
+                       max_wait_us=500.0, min_batch=32)
 
 
 def smoke_serve_config() -> ServeConfig:

@@ -298,11 +298,25 @@ class PendingResult:
     Device work is already dispatched when the handle is created; `wait()`
     materializes the answers on host (once — the handle caches). This is
     what lets `WCSDServer` overlap host-side planning of batch k+1 with
-    device execution of batch k."""
+    device execution of batch k. ``deps`` are the in-flight device arrays
+    the finalizer will read: `ready()` probes them without blocking, which
+    is what lets the server dispatch opportunistically the moment the
+    in-flight slot's device work finishes."""
 
-    def __init__(self, finalize):
+    def __init__(self, finalize, deps=()):
         self._finalize = finalize
+        self._deps = tuple(deps)
         self._out = None
+
+    def ready(self) -> bool:
+        """Non-blocking: True once every declared device dependency has
+        its data on host reach (so `wait()` would not block on the
+        device). Handles with no declared deps — synchronous stubs, or
+        already-waited handles — report ready."""
+        if self._finalize is None:
+            return True
+        return all(d.is_ready() for d in self._deps
+                   if hasattr(d, "is_ready"))
 
     def wait(self) -> np.ndarray:
         if self._finalize is not None:
@@ -366,7 +380,7 @@ class _QueryEngineBase:
             for pos, res in parts:
                 out[pos] = np.asarray(res)[:len(pos)]
             return out
-        return PendingResult(assemble)
+        return PendingResult(assemble, deps=[r for _, r in parts])
 
     def _plan_profile(self, s, t, pad_len, dispatch) -> PendingResult:
         """Profile variant of `_plan_segmented`: no per-query level — every
@@ -392,7 +406,7 @@ class _QueryEngineBase:
             for pos, res in parts:
                 out[pos] = np.asarray(res)[:len(pos)]
             return out
-        return PendingResult(assemble)
+        return PendingResult(assemble, deps=[r for _, r in parts])
 
     # ----------------------------------------------------- ragged dispatch
     def _stage_ragged(self, s, t, w_level=None):
@@ -523,7 +537,7 @@ class DeviceQueryEngine(_QueryEngineBase):
                 return self._query_ragged_async(s, t, w_level)
             return self._query_segmented_async(s, t, w_level)
         res = self._query_dense(s, t, w_level)
-        return PendingResult(lambda: res)
+        return PendingResult(lambda: res, deps=(res,))
 
     def _query_dense(self, s, t, w_level) -> jax.Array:
         s = jnp.asarray(s, jnp.int32)
@@ -550,7 +564,7 @@ class DeviceQueryEngine(_QueryEngineBase):
                                  interpret=self.interpret,
                                  use_kernel=self.use_pallas,
                                  compressed=self.compressed)
-        return PendingResult(lambda: np.asarray(res)[:n])
+        return PendingResult(lambda: np.asarray(res)[:n], deps=(res,))
 
     def _query_segmented_async(self, s, t, w_level) -> PendingResult:
         from ..kernels import ops as kops
@@ -580,7 +594,7 @@ class DeviceQueryEngine(_QueryEngineBase):
                 return self._profile_ragged_async(s, t)
             return self._profile_segmented_async(s, t)
         res = self._profile_dense(s, t)
-        return PendingResult(lambda: res)
+        return PendingResult(lambda: res, deps=(res,))
 
     def _profile_dense(self, s, t) -> jax.Array:
         # the padded layout profiles on the XLA path for either kernel
@@ -603,7 +617,7 @@ class DeviceQueryEngine(_QueryEngineBase):
                                    interpret=self.interpret,
                                    use_kernel=self.use_pallas,
                                    compressed=self.compressed)
-        return PendingResult(lambda: np.asarray(res)[:n])
+        return PendingResult(lambda: np.asarray(res)[:n], deps=(res,))
 
     def _profile_segmented_async(self, s, t) -> PendingResult:
         from ..kernels import ops as kops
@@ -858,7 +872,7 @@ class ShardedQueryEngine(_QueryEngineBase):
         if self.layout == "csr":
             return self._query_csr_async(s, t, w_level)
         res, n = self._dispatch_padded(s, t, w_level)
-        return PendingResult(lambda: np.asarray(res)[:n])
+        return PendingResult(lambda: np.asarray(res)[:n], deps=(res,))
 
     def _batch_pad(self, n: int) -> int:
         """Power-of-two batch padding, rounded up to a device multiple so
@@ -1057,10 +1071,10 @@ class ShardedQueryEngine(_QueryEngineBase):
                 out[perm] = np.asarray(res)
                 return out[:n]
 
-            return PendingResult(finalize)
+            return PendingResult(finalize, deps=(res,))
         fn = self._ragged_fn(self._shard_worklist_len(stq), profile=False)
         res = fn(*self._arena, self._put_staged(stq))
-        return PendingResult(lambda: np.asarray(res)[:n])
+        return PendingResult(lambda: np.asarray(res)[:n], deps=(res,))
 
     def _ragged_fn(self, worklist_len: int, profile: bool,
                    gather_cap: int | None = None):
@@ -1236,7 +1250,7 @@ class ShardedQueryEngine(_QueryEngineBase):
 
             return self._plan_profile(s, t, self._batch_pad, dispatch)
         res, n = self._dispatch_padded_profile(s, t)
-        return PendingResult(lambda: np.asarray(res)[:n])
+        return PendingResult(lambda: np.asarray(res)[:n], deps=(res,))
 
     def _profile_ragged_async(self, s, t) -> PendingResult:
         n = len(s)
@@ -1255,10 +1269,10 @@ class ShardedQueryEngine(_QueryEngineBase):
                 out[perm] = r
                 return out[:n]
 
-            return PendingResult(finalize)
+            return PendingResult(finalize, deps=(res,))
         fn = self._ragged_fn(self._shard_worklist_len(stq), profile=True)
         res = fn(*self._arena, self._put_staged(stq))
-        return PendingResult(lambda: np.asarray(res)[:n])
+        return PendingResult(lambda: np.asarray(res)[:n], deps=(res,))
 
     def _dispatch_padded_profile(self, s, t):
         n = len(s)

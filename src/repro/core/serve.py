@@ -21,6 +21,16 @@ Production shape:
     bucket-pair dispatch still plans on host (`plan_query_batch`). At most
     one batch is in flight; launching the next one (or any
     result()/flush()) drains it.
+  * continuous batching — with ``max_wait_us`` set, a flush no longer
+    waits for ``max_batch``: once ``min_batch`` requests are queued, the
+    batch dispatches as soon as the in-flight slot is free (or its device
+    work is done — `PendingResult.ready` probes without blocking), and a
+    trickle that never fills ``min_batch``-sized bursts is bounded by the
+    ``max_wait_us`` deadline on the OLDEST queued request (checked on
+    every submit and on `poll`). Per-request enqueue→deliver latency is
+    recorded (`latency_summary` reports p50/p99 µs) and host flush time
+    is split into dispatch vs drain-wait (`ServeStats`), so SLO math sees
+    launch overhead and device wait separately.
   * read-once results — `result(rid)` pops the delivered answer, so a
     long-running server's result dict stays bounded by what is queued or
     in flight instead of growing one entry per request forever. Callers
@@ -51,8 +61,19 @@ class ServeStats:
     profile_requests: int = 0
     batches: int = 0
     memo_hits: int = 0
-    flush_time_s: float = 0.0   # host time in launch + drain
+    dispatch_time_s: float = 0.0  # host time launching batches (flush_async)
+    drain_wait_s: float = 0.0     # host time blocked on device results
     max_batch: int = 0
+    deadline_flushes: int = 0     # flushes fired by the max_wait_us deadline
+    opportunistic_flushes: int = 0  # flushes fired by a free in-flight slot
+
+    @property
+    def flush_time_s(self) -> float:
+        # the pre-split lump (launch + drain), kept for bench-schema
+        # compatibility; SLO math should use the two components — drain
+        # wait is device time the host merely observes, dispatch time is
+        # host overhead a faster frontend could shrink
+        return self.dispatch_time_s + self.drain_wait_s
 
 
 class WCSDServer:
@@ -65,7 +86,8 @@ class WCSDServer:
                  multi_pod: bool = False, dispatch: str = "ragged",
                  compressed: bool = False, graph=None,
                  compact_threshold: float | None = 0.25,
-                 compact_kwargs: dict | None = None):
+                 compact_kwargs: dict | None = None,
+                 max_wait_us: float | None = None, min_batch: int = 1):
         # layout="csr" serves from the CSR-packed store; dispatch="ragged"
         # (default) answers each flush with ONE megakernel launch over the
         # lane-tiled arena — flush_async is plan-free on host — while
@@ -87,6 +109,11 @@ class WCSDServer:
         # `result_with_staleness` exposes the stamp (docs/dynamic-index.md).
         # compact_threshold triggers `compact()` when the delta grows past
         # that fraction of the base store (None disables auto-compaction).
+        # max_wait_us/min_batch turn on continuous batching: once
+        # min_batch requests are queued a flush fires when the in-flight
+        # slot is free/finished (opportunistic) or when the oldest queued
+        # request has waited max_wait_us (deadline) — max_batch remains
+        # the hard cap. max_wait_us=None keeps the epoch-flush behavior.
         self.index = None
         self.compact_threshold = compact_threshold
         self._compact_kwargs = dict(compact_kwargs or {})
@@ -111,11 +138,19 @@ class WCSDServer:
                 multi_pod=multi_pod)
             self.engine = self._make_engine()
         self.max_batch = int(max_batch)
+        self.max_wait_us = None if max_wait_us is None else float(max_wait_us)
+        self.min_batch = max(1, int(min_batch))
         self.undirected = bool(undirected)
         self.memo: collections.OrderedDict[tuple, int] = collections.OrderedDict()
         self.memo_capacity = memo_capacity
         self.pending: list[tuple[int, int, int, int]] = []  # (rid, s, t, wl)
         self._pending_rids: set[int] = set()  # O(1) result() membership
+        # pending-batch dedup: key -> position in self.pending, plus the
+        # piggyback rids riding that position (mirrors _inflight_extra) —
+        # a hot key submitted twice before a flush must occupy ONE device
+        # slot, not two
+        self._pending_pos: dict[tuple, int] = {}
+        self._pending_extra: list[tuple[int, int]] = []
         self.results: dict[int, int] = {}
         # the (single) in-flight batch: (handle, rids, keys) or None
         self._inflight: Optional[tuple[PendingResult, list, list]] = None
@@ -129,6 +164,8 @@ class WCSDServer:
             collections.OrderedDict()
         self.pending_profiles: list[tuple[int, int, int]] = []  # (rid, s, t)
         self._pending_prof_rids: set[int] = set()
+        self._pending_prof_pos: dict[tuple, int] = {}
+        self._pending_prof_extra: list[tuple[int, int]] = []
         self.profile_results: dict[int, np.ndarray] = {}
         self._inflight_prof: Optional[tuple[PendingResult, list, list]] = None
         self._inflight_prof_rids: set[int] = set()
@@ -139,6 +176,11 @@ class WCSDServer:
         # (popped together with the answer; backs the staleness flags)
         self.result_versions: dict[int, int] = {}
         self.profile_result_versions: dict[int, int] = {}
+        # enqueue→deliver latency: stamped per rid at submit, recorded
+        # (µs) the moment the answer lands in the result dict
+        self._enqueue_t: dict[int, float] = {}
+        self.latencies_us: list[float] = []
+        self._pending_since: float | None = None  # oldest queued enqueue
         self.stats = ServeStats()
 
     # ------------------------------------------------------------- dynamic
@@ -214,6 +256,13 @@ class WCSDServer:
         return (s, t)
 
     # ------------------------------------------------------------- requests
+    def _deliver(self, rid: int) -> None:
+        """Record the enqueue→deliver latency of a rid whose answer just
+        landed in the result dict."""
+        t0 = self._enqueue_t.pop(rid, None)
+        if t0 is not None:
+            self.latencies_us.append((time.perf_counter() - t0) * 1e6)
+
     def submit(self, s: int, t: int, w_level: int) -> int:
         """Queue one request; returns a request id."""
         rid = self._next_rid
@@ -221,11 +270,13 @@ class WCSDServer:
         key = self._memo_key(s, t, w_level)
         pkey = self._profile_key(s, t)
         self.stats.requests += 1
+        self._enqueue_t[rid] = time.perf_counter()
         if key in self.memo:
             self.memo.move_to_end(key)
             self.results[rid] = self.memo[key]
             self.result_versions[rid] = self.graph_version
             self.stats.memo_hits += 1
+            self._deliver(rid)
         elif (pkey in self.profile_memo
               and 0 <= w_level <= getattr(self.engine, "num_levels", -1)):
             # a cached profile answers EVERY level of its pair: read the
@@ -236,6 +287,7 @@ class WCSDServer:
             self.result_versions[rid] = self.graph_version
             self._memo_put(key, self.results[rid])
             self.stats.memo_hits += 1
+            self._deliver(rid)
         elif key in self._inflight_pos:
             # the answer is already being computed in the in-flight batch:
             # piggyback on it instead of re-queueing the hot key (counted
@@ -243,14 +295,19 @@ class WCSDServer:
             self._inflight_extra.append((rid, self._inflight_pos[key]))
             self._inflight_rids.add(rid)
             self.stats.memo_hits += 1
+        elif key in self._pending_pos:
+            # already queued but not yet dispatched: ride the queued
+            # request's batch slot instead of occupying a second one
+            self._pending_extra.append((rid, self._pending_pos[key]))
+            self._pending_rids.add(rid)
+            self.stats.memo_hits += 1
         else:
+            if not self.pending and not self.pending_profiles:
+                self._pending_since = time.perf_counter()
+            self._pending_pos[key] = len(self.pending)
             self.pending.append((rid, s, t, w_level))
             self._pending_rids.add(rid)
-            if len(self.pending) + len(self.pending_profiles) \
-                    >= self.max_batch:
-                # async: dispatch only — the device chews on this batch
-                # while the host accepts and plans the next one
-                self.flush_async()
+            self._maybe_flush()
         return rid
 
     def submit_profile(self, s: int, t: int) -> int:
@@ -262,23 +319,84 @@ class WCSDServer:
         self._next_rid += 1
         key = self._profile_key(s, t)
         self.stats.profile_requests += 1
+        self._enqueue_t[rid] = time.perf_counter()
         if key in self.profile_memo:
             self.profile_memo.move_to_end(key)
             self.profile_results[rid] = self.profile_memo[key].copy()
             self.profile_result_versions[rid] = self.graph_version
             self.stats.memo_hits += 1
+            self._deliver(rid)
         elif key in self._inflight_prof_pos:
             self._inflight_prof_extra.append(
                 (rid, self._inflight_prof_pos[key]))
             self._inflight_prof_rids.add(rid)
             self.stats.memo_hits += 1
+        elif key in self._pending_prof_pos:
+            self._pending_prof_extra.append(
+                (rid, self._pending_prof_pos[key]))
+            self._pending_prof_rids.add(rid)
+            self.stats.memo_hits += 1
         else:
+            if not self.pending and not self.pending_profiles:
+                self._pending_since = time.perf_counter()
+            self._pending_prof_pos[key] = len(self.pending_profiles)
             self.pending_profiles.append((rid, s, t))
             self._pending_prof_rids.add(rid)
-            if len(self.pending) + len(self.pending_profiles) \
-                    >= self.max_batch:
-                self.flush_async()
+            self._maybe_flush()
         return rid
+
+    def _slot_done(self) -> bool:
+        """True iff a batch is in flight AND its device work has finished
+        (a drain would not block)."""
+        if self._inflight is None and self._inflight_prof is None:
+            return False
+        return ((self._inflight is None or self._inflight[0].ready())
+                and (self._inflight_prof is None
+                     or self._inflight_prof[0].ready()))
+
+    def _maybe_flush(self) -> None:
+        """Continuous-batching admission: fire a flush when the hard cap
+        is hit, or — with ``max_wait_us`` enabled and at least
+        ``min_batch`` queued — when the in-flight slot is free/finished
+        (opportunistic) or the oldest queued request has aged past the
+        deadline."""
+        npend = len(self.pending) + len(self.pending_profiles)
+        if npend >= self.max_batch:
+            # async: dispatch only — the device chews on this batch
+            # while the host accepts and plans the next one
+            self.flush_async()
+            return
+        if self.max_wait_us is None or npend < self.min_batch:
+            return
+        if self._inflight is None and self._inflight_prof is None \
+                or self._slot_done():
+            self.stats.opportunistic_flushes += 1
+            self.flush_async()
+        elif (self._pending_since is not None
+              and (time.perf_counter() - self._pending_since) * 1e6
+              >= self.max_wait_us):
+            self.stats.deadline_flushes += 1
+            self.flush_async()
+
+    def poll(self) -> None:
+        """Deadline tick for continuous batching: harvest the in-flight
+        batch if its device work is done (delivering its results without
+        blocking) and re-check the flush triggers. Callers with gaps
+        between submissions call this to bound queueing delay; `submit`
+        runs the same checks on every enqueue."""
+        if self._slot_done():
+            self._drain()
+        self._maybe_flush()
+
+    def latency_summary(self) -> dict:
+        """p50/p99 (µs) of enqueue→deliver latency over every delivered
+        request so far (memo hits included — they deliver at enqueue)."""
+        if not self.latencies_us:
+            return {"count": 0, "p50_us": 0.0, "p99_us": 0.0}
+        arr = np.asarray(self.latencies_us)
+        return {"count": int(arr.size),
+                "p50_us": float(np.percentile(arr, 50)),
+                "p99_us": float(np.percentile(arr, 99))}
 
     def _memo_put(self, key: tuple, value: int) -> None:
         self.memo[key] = value
@@ -292,6 +410,13 @@ class WCSDServer:
         batch k+1 first drains batch k (by then typically long finished).
         A flush dispatches the pending scalar batch AND the pending profile
         batch (either may be empty); together they form the in-flight slot.
+
+        Failure semantics: the pending queue is cleared only AFTER its
+        dispatch returns — if the engine raises (sharded gather OOM, a
+        poisoned compile cache, ...), every queued request stays pending
+        and the exception propagates; a later flush retries the same
+        batch and `result(rid)` still blocks-and-answers instead of
+        returning None forever.
         """
         if not self.pending and not self.pending_profiles:
             return
@@ -305,8 +430,6 @@ class WCSDServer:
                     and not isinstance(self.engine, ShardedQueryEngine))
         if self.pending:
             batch = self.pending
-            self.pending = []
-            self._pending_rids.clear()
             n = len(batch)
             padded = round_to_pow2(n) if pad_here else n
             s = np.zeros(padded, dtype=np.int32)
@@ -316,6 +439,7 @@ class WCSDServer:
             t[:n] = [b[2] for b in batch]
             wl[:n] = [b[3] for b in batch]
             qa = getattr(self.engine, "query_async", None)
+            # dispatch BEFORE the queue is cleared (see docstring)
             if qa is not None:
                 handle = qa(s, t, wl)
             else:  # engine exposes only a blocking query (tests stub this)
@@ -323,14 +447,18 @@ class WCSDServer:
                 handle = PendingResult(lambda: res)
             keys = [self._memo_key(b[1], b[2], b[3]) for b in batch]
             self._inflight = (handle, [b[0] for b in batch], keys)
-            self._inflight_rids = {b[0] for b in batch}
+            # pending piggybacks ride over: positions are batch positions
+            self._inflight_rids = ({b[0] for b in batch}
+                                   | {r for r, _ in self._pending_extra})
             self._inflight_pos = {k: i for i, k in enumerate(keys)}
-            self._inflight_extra = []
+            self._inflight_extra = list(self._pending_extra)
+            self.pending = []
+            self._pending_rids = set()
+            self._pending_pos = {}
+            self._pending_extra = []
             self.stats.max_batch = max(self.stats.max_batch, n)
         if self.pending_profiles:
             batch = self.pending_profiles
-            self.pending_profiles = []
-            self._pending_prof_rids.clear()
             n = len(batch)
             padded = round_to_pow2(n) if pad_here else n
             s = np.zeros(padded, dtype=np.int32)
@@ -345,12 +473,19 @@ class WCSDServer:
                 handle = PendingResult(lambda: res)
             keys = [self._profile_key(b[1], b[2]) for b in batch]
             self._inflight_prof = (handle, [b[0] for b in batch], keys)
-            self._inflight_prof_rids = {b[0] for b in batch}
+            self._inflight_prof_rids = ({b[0] for b in batch}
+                                        | {r for r, _ in
+                                           self._pending_prof_extra})
             self._inflight_prof_pos = {k: i for i, k in enumerate(keys)}
-            self._inflight_prof_extra = []
+            self._inflight_prof_extra = list(self._pending_prof_extra)
+            self.pending_profiles = []
+            self._pending_prof_rids = set()
+            self._pending_prof_pos = {}
+            self._pending_prof_extra = []
             self.stats.max_batch = max(self.stats.max_batch, n)
+        self._pending_since = None
         self.stats.batches += 1
-        self.stats.flush_time_s += time.perf_counter() - t0
+        self.stats.dispatch_time_s += time.perf_counter() - t0
 
     def _drain(self) -> None:
         """Materialize the in-flight batch into results + memos."""
@@ -370,9 +505,11 @@ class WCSDServer:
                 self.results[rid] = int(d)
                 self.result_versions[rid] = ver
                 self._memo_put(key, int(d))
+                self._deliver(rid)
             for rid, pos in extra:   # duplicates submitted while in flight
                 self.results[rid] = int(out[pos])
                 self.result_versions[rid] = ver
+                self._deliver(rid)
         if self._inflight_prof is not None:
             handle, rids, keys = self._inflight_prof
             extra = self._inflight_prof_extra
@@ -391,11 +528,13 @@ class WCSDServer:
                 self.profile_memo[key] = arr
                 if len(self.profile_memo) > self.memo_capacity:
                     self.profile_memo.popitem(last=False)
+                self._deliver(rid)
             for rid, pos in extra:
                 self.profile_results[rid] = np.array(out[pos],
                                                      dtype=np.int32)
                 self.profile_result_versions[rid] = ver
-        self.stats.flush_time_s += time.perf_counter() - t0
+                self._deliver(rid)
+        self.stats.drain_wait_s += time.perf_counter() - t0
 
     def flush(self) -> None:
         """Synchronous flush: dispatch anything pending and drain."""

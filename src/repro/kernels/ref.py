@@ -1,6 +1,12 @@
 """Pure-jnp oracles for every Pallas kernel in this package. Tests sweep
 shapes/dtypes and assert_allclose kernel-vs-oracle (exact for the int32
-kernels)."""
+kernels).
+
+The oracles model only the kernels' input/output contract. Execution
+strategy knobs that cannot change results — in particular the ragged
+kernels' multi-buffered DMA ring depth (``nbuf``), which only reorders
+when arena tiles are fetched — have no counterpart here: every ``nbuf``
+must match the same oracle bit-for-bit."""
 from __future__ import annotations
 
 import jax

@@ -165,51 +165,134 @@ def wcsd_query_segmented(hub_s, dist_s, wlev_s, hub_t, dist_t, wlev_t,
 
 
 # ------------------------------------------------------------------ ragged
-def _ragged_kernel(qidx_ref, stile_ref, ttile_ref, first_ref, wq_ref,
-                   lo_ref, hi_ref,
-                   hs_ref, ds_ref, ws_ref, ht_ref, dt_ref, wt_ref, out_ref):
-    k = pl.program_id(0)
-
-    @pl.when(first_ref[k] == 1)
-    def _init():
-        out_ref[...] = jnp.full_like(out_ref, DEV_INF)
-
-    s_tile = stile_ref[k]
-    t_tile = ttile_ref[k]
-    # Thm.-3 rows are hub-sorted, so each arena tile covers one hub-rank
-    # interval [lo, hi]; disjoint intervals cannot meet -> skip the
-    # O(lane^2) join for this work item (the DMA already happened, the
-    # saving is compute — and on skewed stores most cross-tile pairs of a
-    # long x long query are disjoint).
-    meet = (lo_ref[s_tile] <= hi_ref[t_tile]) & \
-        (lo_ref[t_tile] <= hi_ref[s_tile])
-
-    @pl.when(meet)
-    def _join():
-        wq = wq_ref[qidx_ref[k]]
-        hs = hs_ref[...]                                    # [1, lane]
-        ds = jnp.where(ws_ref[...] >= wq,
-                       jnp.minimum(ds_ref[...], DEV_INF), DEV_INF)
-        ht = ht_ref[...]                                    # [1, lane]
-        dt = jnp.where(wt_ref[...] >= wq,
-                       jnp.minimum(dt_ref[...], DEV_INF), DEV_INF)
-        eq = hs[0, :, None] == ht[0, None, :]               # [lane, lane]
-        best = jnp.where(eq, ds[0, :, None] + dt[0, None, :], DEV_INF).min()
-        out_ref[0, 0] = jnp.minimum(out_ref[0, 0], best)
+#
+# The ragged kernels fetch their arena tiles MANUALLY: the arena stays in
+# HBM (`memory_space=ANY`) and each work item's six (1, lane) tiles are
+# DMA'd into a quad-buffered VMEM scratch ring (`_RAGGED_NBUF` slots x six
+# buffers, one DMA semaphore per copy). The automatic BlockSpec pipeline
+# only double-buffers and serializes its prefetch one grid step ahead;
+# with the explicit ring the copy for worklist entry k + 4 is issued the
+# moment slot k % 4 frees, so on skewed stores the O(lane^2) join of entry
+# k overlaps the HBM latency of the next THREE entries — deep enough to
+# hide a full tile fetch behind one join (the ROADMAP quad-buffering
+# item). Worklist scalars and tile spans still ride scalar prefetch; the
+# output side keeps its (qidx[k], 0) BlockSpec, so revisit-pipelining of
+# consecutive work items of one query is unchanged — and the whole flush
+# is still exactly ONE `pallas_call`.
+_RAGGED_NBUF = 4
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fetch_ring(stile_ref, ttile_ref, srcs, bufs, sems):
+    """DMA-descriptor factory for one worklist entry: six async copies
+    (s-side and t-side hub/dist/wlev tiles) into ring slot ``slot``.
+
+    Start/wait calls must balance per (slot, copy) semaphore: every entry
+    k is started exactly once (warmup for k < NBUF, else the prefetch at
+    step k - NBUF) and waited exactly once (step k)."""
+    def copies(slot, entry):
+        s = stile_ref[entry]
+        t = ttile_ref[entry]
+        idxs = (s, s, s, t, t, t)
+        return [pltpu.make_async_copy(src.at[pl.ds(ix, 1)],
+                                      buf.at[slot], sems.at[slot, j])
+                for j, (src, ix, buf) in enumerate(zip(srcs, idxs, bufs))]
+    return copies
+
+
+def _fetch_wait(k, WL, copies, nbuf=_RAGGED_NBUF):
+    """Warmup (step 0 issues the first ``nbuf`` entries), then block on
+    this entry's slot. Returns the slot index owning entry ``k``'s
+    tiles."""
+    @pl.when(k == 0)
+    def _warmup():
+        for i in range(min(nbuf, WL)):
+            for c in copies(i, i):
+                c.start()
+
+    slot = jax.lax.rem(k, nbuf)
+    for c in copies(slot, k):
+        c.wait()
+    return slot
+
+
+def _fetch_next(k, WL, slot, copies, nbuf=_RAGGED_NBUF):
+    """Reuse the slot just consumed for entry ``k + nbuf`` (clamped read:
+    the guard keeps the copy from running, the clamp keeps the scalar
+    load in bounds)."""
+    if WL > nbuf:
+        @pl.when(k + nbuf < WL)
+        def _prefetch():
+            nxt = jnp.minimum(k + nbuf, WL - 1)
+            for c in copies(slot, nxt):
+                c.start()
+
+
+def _ragged_scratch(lane, dtypes, nbuf=_RAGGED_NBUF):
+    """Six (nbuf, 1, lane) VMEM ring buffers + the (nbuf, 6) DMA
+    semaphore array; ``dtypes`` is the (hub, dist, wlev) dtype triple
+    (int32 x3 uncompressed, int16/float/int8 compressed)."""
+    return ([pltpu.VMEM((nbuf, 1, lane), dt)
+             for dt in (*dtypes, *dtypes)]
+            + [pltpu.SemaphoreType.DMA((nbuf, 6))])
+
+
+def _ragged_kernel(WL, nbuf=_RAGGED_NBUF):
+    def kernel(qidx_ref, stile_ref, ttile_ref, first_ref, wq_ref,
+               lo_ref, hi_ref, hub_ref, dist_ref, wlev_ref, out_ref,
+               hs_buf, ds_buf, ws_buf, ht_buf, dt_buf, wt_buf, sems):
+        k = pl.program_id(0)
+        copies = _fetch_ring(stile_ref, ttile_ref,
+                             (hub_ref, dist_ref, wlev_ref) * 2,
+                             (hs_buf, ds_buf, ws_buf, ht_buf, dt_buf,
+                              wt_buf), sems)
+        slot = _fetch_wait(k, WL, copies, nbuf)
+
+        @pl.when(first_ref[k] == 1)
+        def _init():
+            out_ref[...] = jnp.full_like(out_ref, DEV_INF)
+
+        s_tile = stile_ref[k]
+        t_tile = ttile_ref[k]
+        # Thm.-3 rows are hub-sorted, so each arena tile covers one
+        # hub-rank interval [lo, hi]; disjoint intervals cannot meet ->
+        # skip the O(lane^2) join for this work item (the DMA already
+        # happened, the saving is compute — and on skewed stores most
+        # cross-tile pairs of a long x long query are disjoint).
+        meet = (lo_ref[s_tile] <= hi_ref[t_tile]) & \
+            (lo_ref[t_tile] <= hi_ref[s_tile])
+
+        @pl.when(meet)
+        def _join():
+            wq = wq_ref[qidx_ref[k]]
+            hs = hs_buf[slot]                               # [1, lane]
+            ds = jnp.where(ws_buf[slot] >= wq,
+                           jnp.minimum(ds_buf[slot], DEV_INF), DEV_INF)
+            ht = ht_buf[slot]                               # [1, lane]
+            dt = jnp.where(wt_buf[slot] >= wq,
+                           jnp.minimum(dt_buf[slot], DEV_INF), DEV_INF)
+            eq = hs[0, :, None] == ht[0, None, :]           # [lane, lane]
+            best = jnp.where(eq, ds[0, :, None] + dt[0, None, :],
+                             DEV_INF).min()
+            out_ref[0, 0] = jnp.minimum(out_ref[0, 0], best)
+
+        _fetch_next(k, WL, slot, copies, nbuf)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "nbuf"))
 def wcsd_query_ragged(hub, dist, wlev, tile_lo, tile_hi,
                       qidx, stile, ttile, first, wq, *,
-                      interpret: bool = True):
+                      interpret: bool = True, nbuf: int = _RAGGED_NBUF):
     """Single-launch ragged query path over the lane-tiled label arena.
 
     Collapses the whole bucket-pair dispatch loop into ONE `pallas_call`:
     the grid is a flat worklist of ``(query, s_tile, t_tile)`` work items
     (one per tile pair of a query's two label rows, query-major — see
-    `core.query.emit_ragged_worklist`), and the scalar-prefetch index maps
-    pick ARBITRARY row tiles out of one shared arena, so a batch mixing
-    every bucket length runs in a single launch with zero wasted lanes.
+    `core.query.emit_ragged_worklist`). The arena stays HBM-resident and
+    each entry's tiles are fetched through the quad-buffered DMA ring
+    (see the section comment), so a batch mixing every bucket length runs
+    in a single launch with zero wasted lanes and the tile DMA of entry
+    k + 4 overlapping the join of entry k.
 
     hub/dist/wlev: [T, lane] arena tiles (pad contract hub -1, wlev -1);
     tile_lo/tile_hi: [T] per-tile hub-rank spans (Thm.-3 early-out);
@@ -219,110 +302,101 @@ def wcsd_query_ragged(hub, dist, wlev, tile_lo, tile_hi,
     wq: [Q] per-output-row query levels (worklist pads must point at a
     trash row whose level is infeasible). Returns [Q] int32 best sums
     (>= DEV_INF means infeasible).
+
+    ``nbuf`` sizes the DMA ring (default quad-buffered); ``nbuf=1`` is
+    the no-overlap baseline the serving bench's ``dma_overlap_speedup``
+    row compares against.
     """
     WL = qidx.shape[0]
     Q = wq.shape[0]
     lane = hub.shape[1]
-
-    def s_spec():
-        return pl.BlockSpec(
-            (1, lane), lambda k, qidx, stile, ttile, first, wq, lo, hi:
-            (stile[k], 0))
-
-    def t_spec():
-        return pl.BlockSpec(
-            (1, lane), lambda k, qidx, stile, ttile, first, wq, lo, hi:
-            (ttile[k], 0))
-
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=7,
         grid=(WL,),
-        in_specs=[s_spec(), s_spec(), s_spec(),
-                  t_spec(), t_spec(), t_spec()],
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * 3,
         out_specs=pl.BlockSpec(
             (1, 1), lambda k, qidx, stile, ttile, first, wq, lo, hi:
             (qidx[k], 0)),
+        scratch_shapes=_ragged_scratch(lane, (jnp.int32,) * 3, nbuf),
     )
     out = pl.pallas_call(
-        _ragged_kernel,
+        _ragged_kernel(WL, nbuf),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Q, 1), jnp.int32),
         interpret=interpret,
-    )(qidx, stile, ttile, first, wq, tile_lo, tile_hi,
-      hub, dist, wlev, hub, dist, wlev)
+    )(qidx, stile, ttile, first, wq, tile_lo, tile_hi, hub, dist, wlev)
     return out[:, 0]
 
 
-def _profile_ragged_kernel(qidx_ref, stile_ref, ttile_ref, first_ref,
-                           lo_ref, hi_ref,
-                           hs_ref, ds_ref, ws_ref, ht_ref, dt_ref, wt_ref,
-                           out_ref):
-    k = pl.program_id(0)
+def _profile_ragged_kernel(WL, nbuf=_RAGGED_NBUF):
+    def kernel(qidx_ref, stile_ref, ttile_ref, first_ref, lo_ref, hi_ref,
+               hub_ref, dist_ref, wlev_ref, out_ref,
+               hs_buf, ds_buf, ws_buf, ht_buf, dt_buf, wt_buf, sems):
+        k = pl.program_id(0)
+        copies = _fetch_ring(stile_ref, ttile_ref,
+                             (hub_ref, dist_ref, wlev_ref) * 2,
+                             (hs_buf, ds_buf, ws_buf, ht_buf, dt_buf,
+                              wt_buf), sems)
+        slot = _fetch_wait(k, WL, copies, nbuf)
 
-    @pl.when(first_ref[k] == 1)
-    def _init():
-        out_ref[...] = jnp.full_like(out_ref, DEV_INF)
+        @pl.when(first_ref[k] == 1)
+        def _init():
+            out_ref[...] = jnp.full_like(out_ref, DEV_INF)
 
-    s_tile = stile_ref[k]
-    t_tile = ttile_ref[k]
-    meet = (lo_ref[s_tile] <= hi_ref[t_tile]) & \
-        (lo_ref[t_tile] <= hi_ref[s_tile])
+        s_tile = stile_ref[k]
+        t_tile = ttile_ref[k]
+        meet = (lo_ref[s_tile] <= hi_ref[t_tile]) & \
+            (lo_ref[t_tile] <= hi_ref[s_tile])
 
-    @pl.when(meet)
-    def _join():
-        hs = hs_ref[...]                                    # [1, lane]
-        ds = jnp.minimum(ds_ref[...], DEV_INF)
-        ht = ht_ref[...]
-        dt = jnp.minimum(dt_ref[...], DEV_INF)
-        eq = hs[0, :, None] == ht[0, None, :]               # [lane, lane]
-        dsum = jnp.where(eq, ds[0, :, None] + dt[0, None, :], DEV_INF)
-        mw = jnp.minimum(ws_ref[...][0, :, None], wt_ref[...][0, None, :])
-        for lev in range(out_ref.shape[1]):  # static unroll: W + 1 is tiny
-            best = jnp.where(mw == lev, dsum, DEV_INF).min()
-            out_ref[0, lev] = jnp.minimum(out_ref[0, lev], best)
+        @pl.when(meet)
+        def _join():
+            hs = hs_buf[slot]                               # [1, lane]
+            ds = jnp.minimum(ds_buf[slot], DEV_INF)
+            ht = ht_buf[slot]
+            dt = jnp.minimum(dt_buf[slot], DEV_INF)
+            eq = hs[0, :, None] == ht[0, None, :]           # [lane, lane]
+            dsum = jnp.where(eq, ds[0, :, None] + dt[0, None, :], DEV_INF)
+            mw = jnp.minimum(ws_buf[slot][0, :, None],
+                             wt_buf[slot][0, None, :])
+            for lev in range(out_ref.shape[1]):  # static: W + 1 is tiny
+                best = jnp.where(mw == lev, dsum, DEV_INF).min()
+                out_ref[0, lev] = jnp.minimum(out_ref[0, lev], best)
+
+        _fetch_next(k, WL, slot, copies, nbuf)
+    return kernel
 
 
 @functools.partial(jax.jit, static_argnames=("num_rows", "num_levels",
-                                             "interpret"))
+                                             "interpret", "nbuf"))
 def wcsd_profile_ragged(hub, dist, wlev, tile_lo, tile_hi,
                         qidx, stile, ttile, first, *, num_rows: int,
-                        num_levels: int, interpret: bool = True):
-    """Single-launch ragged PROFILE path: same arena/worklist contract as
-    `wcsd_query_ragged`, no per-query level — each work item bins its hub
-    meets' distance sums by pair level ``min(wlev_s, wlev_t)`` into the
-    query's [num_levels + 1] bucket row (the staircase is the suffix
-    min-scan, applied in ops). Returns [num_rows, num_levels + 1] int32
-    bucket minima; worklist pads must point at trash row num_rows - 1."""
+                        num_levels: int, interpret: bool = True,
+                        nbuf: int = _RAGGED_NBUF):
+    """Single-launch ragged PROFILE path: same arena/worklist contract
+    (and quad-buffered tile fetch) as `wcsd_query_ragged`, no per-query
+    level — each work item bins its hub meets' distance sums by pair
+    level ``min(wlev_s, wlev_t)`` into the query's [num_levels + 1]
+    bucket row (the staircase is the suffix min-scan, applied in ops).
+    Returns [num_rows, num_levels + 1] int32 bucket minima; worklist pads
+    must point at trash row num_rows - 1."""
     WL = qidx.shape[0]
     lane = hub.shape[1]
     Lp = int(num_levels) + 1
-
-    def s_spec():
-        return pl.BlockSpec(
-            (1, lane), lambda k, qidx, stile, ttile, first, lo, hi:
-            (stile[k], 0))
-
-    def t_spec():
-        return pl.BlockSpec(
-            (1, lane), lambda k, qidx, stile, ttile, first, lo, hi:
-            (ttile[k], 0))
-
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=6,
         grid=(WL,),
-        in_specs=[s_spec(), s_spec(), s_spec(),
-                  t_spec(), t_spec(), t_spec()],
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * 3,
         out_specs=pl.BlockSpec(
             (1, Lp), lambda k, qidx, stile, ttile, first, lo, hi:
             (qidx[k], 0)),
+        scratch_shapes=_ragged_scratch(lane, (jnp.int32,) * 3, nbuf),
     )
     return pl.pallas_call(
-        _profile_ragged_kernel,
+        _profile_ragged_kernel(WL, nbuf),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((num_rows, Lp), jnp.int32),
         interpret=interpret,
-    )(qidx, stile, ttile, first, tile_lo, tile_hi,
-      hub, dist, wlev, hub, dist, wlev)
+    )(qidx, stile, ttile, first, tile_lo, tile_hi, hub, dist, wlev)
 
 
 # ------------------------------------------------- ragged, compressed arena
@@ -340,145 +414,145 @@ def _decode_cells(hd, d, w, lo):
     return hub, dist, w.astype(jnp.int32)
 
 
-def _ragged_kernel_c(qidx_ref, stile_ref, ttile_ref, first_ref, wq_ref,
-                     lo_ref, hi_ref,
-                     hs_ref, ds_ref, ws_ref, ht_ref, dt_ref, wt_ref,
-                     out_ref):
-    k = pl.program_id(0)
+def _ragged_kernel_c(WL, nbuf=_RAGGED_NBUF):
+    def kernel(qidx_ref, stile_ref, ttile_ref, first_ref, wq_ref,
+               lo_ref, hi_ref, hub_ref, dist_ref, wlev_ref, out_ref,
+               hs_buf, ds_buf, ws_buf, ht_buf, dt_buf, wt_buf, sems):
+        k = pl.program_id(0)
+        copies = _fetch_ring(stile_ref, ttile_ref,
+                             (hub_ref, dist_ref, wlev_ref) * 2,
+                             (hs_buf, ds_buf, ws_buf, ht_buf, dt_buf,
+                              wt_buf), sems)
+        slot = _fetch_wait(k, WL, copies, nbuf)
 
-    @pl.when(first_ref[k] == 1)
-    def _init():
-        out_ref[...] = jnp.full_like(out_ref, DEV_INF)
+        @pl.when(first_ref[k] == 1)
+        def _init():
+            out_ref[...] = jnp.full_like(out_ref, DEV_INF)
 
-    s_tile = stile_ref[k]
-    t_tile = ttile_ref[k]
-    meet = (lo_ref[s_tile] <= hi_ref[t_tile]) & \
-        (lo_ref[t_tile] <= hi_ref[s_tile])
+        s_tile = stile_ref[k]
+        t_tile = ttile_ref[k]
+        meet = (lo_ref[s_tile] <= hi_ref[t_tile]) & \
+            (lo_ref[t_tile] <= hi_ref[s_tile])
 
-    @pl.when(meet)
-    def _join():
-        wq = wq_ref[qidx_ref[k]]
-        hs, ds0, ws = _decode_cells(hs_ref[...], ds_ref[...], ws_ref[...],
-                                    lo_ref[s_tile])
-        ht, dt0, wt = _decode_cells(ht_ref[...], dt_ref[...], wt_ref[...],
-                                    lo_ref[t_tile])
-        ds = jnp.where(ws >= wq, ds0, DEV_INF)
-        dt = jnp.where(wt >= wq, dt0, DEV_INF)
-        eq = hs[0, :, None] == ht[0, None, :]
-        best = jnp.where(eq, ds[0, :, None] + dt[0, None, :], DEV_INF).min()
-        out_ref[0, 0] = jnp.minimum(out_ref[0, 0], best)
+        @pl.when(meet)
+        def _join():
+            wq = wq_ref[qidx_ref[k]]
+            hs, ds0, ws = _decode_cells(hs_buf[slot], ds_buf[slot],
+                                        ws_buf[slot], lo_ref[s_tile])
+            ht, dt0, wt = _decode_cells(ht_buf[slot], dt_buf[slot],
+                                        wt_buf[slot], lo_ref[t_tile])
+            ds = jnp.where(ws >= wq, ds0, DEV_INF)
+            dt = jnp.where(wt >= wq, dt0, DEV_INF)
+            eq = hs[0, :, None] == ht[0, None, :]
+            best = jnp.where(eq, ds[0, :, None] + dt[0, None, :],
+                             DEV_INF).min()
+            out_ref[0, 0] = jnp.minimum(out_ref[0, 0], best)
+
+        _fetch_next(k, WL, slot, copies, nbuf)
+    return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "nbuf"))
 def wcsd_query_ragged_compressed(hub_delta, dist, wlev, tile_lo, tile_hi,
                                  qidx, stile, ttile, first, wq, *,
-                                 interpret: bool = True):
+                                 interpret: bool = True,
+                                 nbuf: int = _RAGGED_NBUF):
     """`wcsd_query_ragged` over the COMPRESSED arena: identical worklist
     and output contract, but the tiles arrive as int16 hub deltas /
-    bf16-or-fp16 distances / int8 levels and are decoded in-register
-    (`_decode_cells`), so the DMA per work item shrinks with the store.
-    Callers must not pass overflowed stores (CompressedArena.overflow) —
-    the engines fall back to the uncompressed arena for those."""
+    bf16-or-fp16 distances / int8 levels — the quad-buffered ring scratch
+    holds the narrow dtypes, so the DMA per work item shrinks with the
+    store — and are decoded in-register (`_decode_cells`). Callers must
+    not pass overflowed stores (CompressedArena.overflow) — the engines
+    fall back to the uncompressed arena for those."""
     WL = qidx.shape[0]
     Q = wq.shape[0]
     lane = hub_delta.shape[1]
-
-    def s_spec():
-        return pl.BlockSpec(
-            (1, lane), lambda k, qidx, stile, ttile, first, wq, lo, hi:
-            (stile[k], 0))
-
-    def t_spec():
-        return pl.BlockSpec(
-            (1, lane), lambda k, qidx, stile, ttile, first, wq, lo, hi:
-            (ttile[k], 0))
-
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=7,
         grid=(WL,),
-        in_specs=[s_spec(), s_spec(), s_spec(),
-                  t_spec(), t_spec(), t_spec()],
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * 3,
         out_specs=pl.BlockSpec(
             (1, 1), lambda k, qidx, stile, ttile, first, wq, lo, hi:
             (qidx[k], 0)),
+        scratch_shapes=_ragged_scratch(
+            lane, (hub_delta.dtype, dist.dtype, wlev.dtype), nbuf),
     )
     out = pl.pallas_call(
-        _ragged_kernel_c,
+        _ragged_kernel_c(WL, nbuf),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Q, 1), jnp.int32),
         interpret=interpret,
     )(qidx, stile, ttile, first, wq, tile_lo, tile_hi,
-      hub_delta, dist, wlev, hub_delta, dist, wlev)
+      hub_delta, dist, wlev)
     return out[:, 0]
 
 
-def _profile_ragged_kernel_c(qidx_ref, stile_ref, ttile_ref, first_ref,
-                             lo_ref, hi_ref,
-                             hs_ref, ds_ref, ws_ref, ht_ref, dt_ref, wt_ref,
-                             out_ref):
-    k = pl.program_id(0)
+def _profile_ragged_kernel_c(WL, nbuf=_RAGGED_NBUF):
+    def kernel(qidx_ref, stile_ref, ttile_ref, first_ref, lo_ref, hi_ref,
+               hub_ref, dist_ref, wlev_ref, out_ref,
+               hs_buf, ds_buf, ws_buf, ht_buf, dt_buf, wt_buf, sems):
+        k = pl.program_id(0)
+        copies = _fetch_ring(stile_ref, ttile_ref,
+                             (hub_ref, dist_ref, wlev_ref) * 2,
+                             (hs_buf, ds_buf, ws_buf, ht_buf, dt_buf,
+                              wt_buf), sems)
+        slot = _fetch_wait(k, WL, copies, nbuf)
 
-    @pl.when(first_ref[k] == 1)
-    def _init():
-        out_ref[...] = jnp.full_like(out_ref, DEV_INF)
+        @pl.when(first_ref[k] == 1)
+        def _init():
+            out_ref[...] = jnp.full_like(out_ref, DEV_INF)
 
-    s_tile = stile_ref[k]
-    t_tile = ttile_ref[k]
-    meet = (lo_ref[s_tile] <= hi_ref[t_tile]) & \
-        (lo_ref[t_tile] <= hi_ref[s_tile])
+        s_tile = stile_ref[k]
+        t_tile = ttile_ref[k]
+        meet = (lo_ref[s_tile] <= hi_ref[t_tile]) & \
+            (lo_ref[t_tile] <= hi_ref[s_tile])
 
-    @pl.when(meet)
-    def _join():
-        hs, ds, ws = _decode_cells(hs_ref[...], ds_ref[...], ws_ref[...],
-                                   lo_ref[s_tile])
-        ht, dt, wt = _decode_cells(ht_ref[...], dt_ref[...], wt_ref[...],
-                                   lo_ref[t_tile])
-        eq = hs[0, :, None] == ht[0, None, :]
-        dsum = jnp.where(eq, ds[0, :, None] + dt[0, None, :], DEV_INF)
-        mw = jnp.minimum(ws[0, :, None], wt[0, None, :])
-        for lev in range(out_ref.shape[1]):  # static unroll: W + 1 is tiny
-            best = jnp.where(mw == lev, dsum, DEV_INF).min()
-            out_ref[0, lev] = jnp.minimum(out_ref[0, lev], best)
+        @pl.when(meet)
+        def _join():
+            hs, ds, ws = _decode_cells(hs_buf[slot], ds_buf[slot],
+                                       ws_buf[slot], lo_ref[s_tile])
+            ht, dt, wt = _decode_cells(ht_buf[slot], dt_buf[slot],
+                                       wt_buf[slot], lo_ref[t_tile])
+            eq = hs[0, :, None] == ht[0, None, :]
+            dsum = jnp.where(eq, ds[0, :, None] + dt[0, None, :], DEV_INF)
+            mw = jnp.minimum(ws[0, :, None], wt[0, None, :])
+            for lev in range(out_ref.shape[1]):  # static: W + 1 is tiny
+                best = jnp.where(mw == lev, dsum, DEV_INF).min()
+                out_ref[0, lev] = jnp.minimum(out_ref[0, lev], best)
+
+        _fetch_next(k, WL, slot, copies, nbuf)
+    return kernel
 
 
 @functools.partial(jax.jit, static_argnames=("num_rows", "num_levels",
-                                             "interpret"))
+                                             "interpret", "nbuf"))
 def wcsd_profile_ragged_compressed(hub_delta, dist, wlev, tile_lo, tile_hi,
                                    qidx, stile, ttile, first, *,
                                    num_rows: int, num_levels: int,
-                                   interpret: bool = True):
+                                   interpret: bool = True,
+                                   nbuf: int = _RAGGED_NBUF):
     """`wcsd_profile_ragged` over the COMPRESSED arena (see
     `wcsd_query_ragged_compressed` for the decode contract)."""
     WL = qidx.shape[0]
     lane = hub_delta.shape[1]
     Lp = int(num_levels) + 1
-
-    def s_spec():
-        return pl.BlockSpec(
-            (1, lane), lambda k, qidx, stile, ttile, first, lo, hi:
-            (stile[k], 0))
-
-    def t_spec():
-        return pl.BlockSpec(
-            (1, lane), lambda k, qidx, stile, ttile, first, lo, hi:
-            (ttile[k], 0))
-
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=6,
         grid=(WL,),
-        in_specs=[s_spec(), s_spec(), s_spec(),
-                  t_spec(), t_spec(), t_spec()],
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * 3,
         out_specs=pl.BlockSpec(
             (1, Lp), lambda k, qidx, stile, ttile, first, lo, hi:
             (qidx[k], 0)),
+        scratch_shapes=_ragged_scratch(
+            lane, (hub_delta.dtype, dist.dtype, wlev.dtype), nbuf),
     )
     return pl.pallas_call(
-        _profile_ragged_kernel_c,
+        _profile_ragged_kernel_c(WL, nbuf),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((num_rows, Lp), jnp.int32),
         interpret=interpret,
     )(qidx, stile, ttile, first, tile_lo, tile_hi,
-      hub_delta, dist, wlev, hub_delta, dist, wlev)
+      hub_delta, dist, wlev)
 
 
 # ----------------------------------------------------------------- profile

@@ -168,6 +168,24 @@ def run_serve(quick: bool) -> None:
         assert not srv.profile_results, "profile read-once left results"
         print(f"OK V={V} async server (+profiles): {srv.stats.batches} "
               f"batches, {srv.stats.memo_hits} memo hits", flush=True)
+        # continuous-batching epoch: deadline + opportunistic flushes on,
+        # same stream of submissions, answers identical to the epoch-flush
+        # server (docs/serving.md §1a)
+        srv_cb = WCSDServer(idx, mesh=make_serving_mesh(),
+                            **{**cfg.server_kwargs(), "max_batch": 64,
+                               "max_wait_us": 200.0, "min_batch": 4})
+        rids = [srv_cb.submit(int(a), int(b), int(c))
+                for a, b, c in zip(s, t, wl)]
+        srv_cb.flush()
+        got = np.array([srv_cb.result(r) for r in rids], dtype=np.int32)
+        if not np.array_equal(got, exp):
+            raise SystemExit(f"MISMATCH continuous-batching server V={V}")
+        lat = srv_cb.latency_summary()
+        st = srv_cb.stats
+        print(f"OK V={V} continuous batching: {st.batches} batches "
+              f"({st.opportunistic_flushes} opportunistic, "
+              f"{st.deadline_flushes} deadline), p50 {lat['p50_us']:.0f}us "
+              f"p99 {lat['p99_us']:.0f}us", flush=True)
     print(f"serve dryrun PASS on {n_dev} virtual devices "
           f"({time.time() - t0:.1f}s)")
 

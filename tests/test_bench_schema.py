@@ -56,6 +56,14 @@ def test_serving_suite_conforms_and_carries_profile_rows(serving_rows):
     assert by_algo["update_apply_us"] > 0
     assert by_algo["compact_us"] > 0
     assert by_algo["delta_query_overhead"] > 0
+    # the continuous-batching latency rows and the DMA-ring overlap row
+    # exist and are sane; the p99 ceiling / overlap floor are enforced on
+    # the real bench config by run.py --check
+    assert {"serve_p50_us", "serve_p99_us",
+            "dma_overlap_speedup"} <= algos
+    assert 0 < by_algo["serve_p50_us"] <= by_algo["serve_p99_us"]
+    assert by_algo["dma_overlap_speedup"] > 0
+    assert by_algo["dma_worklist_entries"] > 0
 
 
 def test_row_keys_are_the_csv_header():
@@ -161,3 +169,9 @@ def test_gate_tables_are_wired():
     assert CHECK_CEILINGS["serving"]["delta_query_overhead"] <= 1.15
     assert {"update_apply_us", "compact_us",
             "delta_query_overhead"} <= REQUIRED_ALGOS["serving"]
+    # continuous batching: the p99 SLO ceiling and the DMA-ring overlap
+    # floor are wired, and the latency/overlap rows are tracked
+    assert CHECK_CEILINGS["serving"]["serve_p99_us"] > 0
+    assert 0 < CHECK_FLOORS["serving"]["dma_overlap_speedup"] <= 1.0
+    assert {"serve_p50_us", "serve_p99_us",
+            "dma_overlap_speedup"} <= REQUIRED_ALGOS["serving"]

@@ -341,16 +341,328 @@ def test_single_bucket_store_serves(small_index):
 
 def test_duplicate_keys_both_orientations_one_flush(small_index):
     """undirected=True: both orientations of (s, t) plus exact duplicates
-    inside ONE flush canonicalize to a single memo entry and all get the
-    same (correct) answer."""
+    inside ONE flush canonicalize to a single memo entry — and, with
+    pending-batch dedup, a single device slot — and all get the same
+    (correct) answer."""
     srv = WCSDServer(small_index, max_batch=1024, undirected=True)
     exp = int(small_index.query_batch(np.array([7]), np.array([2]),
                                       np.array([0]))[0])
     rids = [srv.submit(7, 2, 0), srv.submit(2, 7, 0),
             srv.submit(7, 2, 0), srv.submit(2, 7, 0)]
-    assert srv.stats.memo_hits == 0          # nothing flushed yet
+    assert srv.stats.memo_hits == 3          # piggybacked on the queued slot
+    assert len(srv.pending) == 1             # ONE device slot for the key
     srv.flush()                              # one batch answers all four
     assert srv.stats.batches == 1
+    assert srv.stats.max_batch == 1          # the batch held one real row
     assert [srv.result(r) for r in rids] == [exp] * 4
     assert (2, 7, 0) in srv.memo and (7, 2, 0) not in srv.memo
     assert len([k for k in srv.memo if k[2] == 0]) == 1
+
+
+# --------------------------------------------------- pending-batch dedup
+def test_pending_dedup_single_device_slot(small_index, serve_layout):
+    """Regression (pending dedup): duplicates of a key submitted BEFORE
+    any flush must ride the queued request's batch slot, not occupy extra
+    device rows — pre-fix, the batch held three rows and memo_hits stayed
+    0 until the flush landed."""
+    srv = WCSDServer(small_index, max_batch=1024, layout=serve_layout)
+    seen = []
+    inner = srv.engine.query_async   # bound class method, pre-stub
+    srv.engine.query_async = None
+    srv.engine.query = lambda s, t, w: (seen.append(len(np.asarray(s)))
+                                        or inner(s, t, w).wait())
+    exp = int(small_index.query_batch(np.array([7]), np.array([2]),
+                                      np.array([0]))[0])
+    rids = [srv.submit(7, 2, 0), srv.submit(2, 7, 0), srv.submit(7, 2, 0)]
+    assert len(srv.pending) == 1           # one slot for the hot key
+    assert srv.stats.memo_hits == 2        # piggybacks count as hits
+    srv.flush()
+    assert seen[-1] == 1                   # device saw ONE row, not three
+    assert [srv.result(r) for r in rids] == [exp] * 3
+
+
+def test_pending_dedup_profiles(small_index, serve_layout):
+    """The profile queue dedups pending pairs the same way (both
+    orientations canonicalize onto one queued staircase)."""
+    srv = WCSDServer(small_index, max_batch=1024, layout=serve_layout)
+    seen = []
+    inner = srv.engine.query_profile_async
+    srv.engine.query_profile_async = None
+    srv.engine.query_profile = lambda s, t: (seen.append(len(np.asarray(s)))
+                                             or inner(s, t).wait())
+    r1 = srv.submit_profile(4, 9)
+    r2 = srv.submit_profile(9, 4)          # canonicalizes onto the queued pair
+    r3 = srv.submit_profile(4, 9)
+    assert len(srv.pending_profiles) == 1
+    assert srv.stats.memo_hits == 2
+    srv.flush()
+    assert seen[-1] == 1
+    a, b, c = (srv.profile_result(r) for r in (r1, r2, r3))
+    assert a is not None and np.array_equal(a, b) and np.array_equal(a, c)
+
+
+# ------------------------------------------------------ dispatch failure
+def test_dispatch_failure_keeps_requests(small_index, serve_layout):
+    """Regression (flush-path request loss): flush_async used to clear the
+    pending queue BEFORE dispatching, so an engine exception silently
+    dropped every queued request — result(rid) returned None forever. Now
+    the queue is cleared only after dispatch returns: the exception
+    propagates, the requests stay pending, and a retry answers them."""
+    srv = WCSDServer(small_index, max_batch=1024, layout=serve_layout)
+    inner = srv.engine.query_async
+    calls = {"n": 0}
+
+    def flaky(s, t, w):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient dispatch failure")
+        return inner(s, t, w)
+
+    srv.engine.query_async = flaky
+    rids = [srv.submit(i, i + 40, 0) for i in range(5)]
+    with pytest.raises(RuntimeError):
+        srv.flush()
+    assert len(srv.pending) == 5            # nothing dropped
+    assert srv._pending_rids == set(rids)
+    assert srv.stats.batches == 0           # the failed dispatch never landed
+    got = np.array([srv.result(r) for r in rids])   # result() retries
+    s = np.arange(5, dtype=np.int32)
+    exp = small_index.query_batch(s, s + 40, np.zeros(5, np.int32))
+    assert np.array_equal(got, exp)
+    assert calls["n"] == 2
+
+
+def test_profile_dispatch_failure_keeps_profiles(small_index, serve_layout):
+    """Partial failure: the scalar half of a mixed flush dispatches, the
+    profile dispatch raises — the profile queue must survive intact and a
+    retry must answer both halves."""
+    srv = WCSDServer(small_index, max_batch=1024, layout=serve_layout)
+    inner = srv.engine.query_profile_async
+    calls = {"n": 0}
+
+    def flaky(s, t):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("profile dispatch failure")
+        return inner(s, t)
+
+    srv.engine.query_profile_async = flaky
+    rs = srv.submit(3, 9, 1)
+    rp = srv.submit_profile(4, 11)
+    with pytest.raises(RuntimeError):
+        srv.flush()
+    assert srv._inflight is not None        # scalar half made it out
+    assert len(srv.pending_profiles) == 1   # profile half still queued
+    prof = srv.profile_result(rp)           # retry via result -> flush
+    assert prof is not None and len(prof) == small_index.num_levels + 1
+    assert srv.result(rs) is not None
+    assert calls["n"] == 2
+
+
+# -------------------------------------------------------- latency stats
+def test_flush_time_split_and_latency(small_index, serve_layout):
+    """flush_time_s is the sum of its two new components (dispatch vs
+    drain wait), and every request gets an enqueue->deliver latency
+    sample — memo hits included."""
+    srv = WCSDServer(small_index, max_batch=16, layout=serve_layout)
+    s, t, wl = random_queries_for(small_index, 64, seed=12)
+    srv.query_many(s, t, wl)
+    st = srv.stats
+    assert st.dispatch_time_s > 0.0 and st.drain_wait_s > 0.0
+    assert st.flush_time_s == pytest.approx(st.dispatch_time_s
+                                            + st.drain_wait_s)
+    lat = srv.latency_summary()
+    assert lat["count"] == 64               # all delivered -> all sampled
+    assert lat["p99_us"] >= lat["p50_us"] >= 0.0
+    assert not srv._enqueue_t               # no stamp leaks
+
+
+# ---------------------------------------------------- continuous batching
+class _Gate:
+    """Controllable readiness probe injected into PendingResult deps, so
+    tests decide when the 'device' looks done without real async work."""
+
+    def __init__(self):
+        self.ready = False
+
+    def is_ready(self):
+        return self.ready
+
+
+def _gate_engine(srv):
+    """Wrap engine.query_async so every dispatched handle reports ready()
+    only once the returned gate is opened (wait() still works)."""
+    from repro.core.query import PendingResult
+    gate = _Gate()
+    inner = srv.engine.query_async
+    srv.engine.query_async = lambda s, t, w: PendingResult(
+        inner(s, t, w).wait, deps=(gate,))
+    return gate
+
+
+def test_opportunistic_flush_below_max_batch(small_index, serve_layout):
+    """With a deadline configured and the in-flight slot free, min_batch
+    queued requests dispatch immediately — no waiting for max_batch."""
+    srv = WCSDServer(small_index, max_batch=1024, layout=serve_layout,
+                     max_wait_us=10_000_000.0, min_batch=3)
+    rids = [srv.submit(i, i + 30, 0) for i in range(3)]
+    assert srv.stats.batches == 1          # fired at min_batch, not 1024
+    assert srv.stats.opportunistic_flushes == 1
+    assert srv.stats.deadline_flushes == 0
+    assert srv._inflight is not None and srv.pending == []
+    assert all(srv.result(r) is not None for r in rids)
+
+
+def test_below_min_batch_never_early_flushes(small_index, serve_layout):
+    """min_batch is an admission floor: under it, even an expired deadline
+    does not fire (max_batch remains the only trigger)."""
+    srv = WCSDServer(small_index, max_batch=1024, layout=serve_layout,
+                     max_wait_us=0.0, min_batch=4)
+    for i in range(3):
+        srv.submit(i, i + 30, 0)
+    assert srv.stats.batches == 0 and len(srv.pending) == 3
+
+
+def test_deadline_flush_with_busy_slot(small_index, serve_layout):
+    """While a batch is in flight and its device work unfinished, newly
+    queued requests flush on the max_wait_us deadline instead of waiting
+    for the slot (or for max_batch)."""
+    srv = WCSDServer(small_index, max_batch=1024, layout=serve_layout,
+                     max_wait_us=0.0, min_batch=2)
+    gate = _gate_engine(srv)
+    first = [srv.submit(i, i + 50, 0) for i in range(2)]
+    assert srv.stats.opportunistic_flushes == 1 and srv.stats.batches == 1
+    assert not gate.ready                  # device "still computing"
+    r5 = srv.submit(40, 90, 1)
+    assert srv.stats.batches == 1          # below min_batch: still queued
+    r6 = srv.submit(41, 91, 1)             # min_batch hit, slot busy, 0µs
+    assert srv.stats.batches == 2
+    assert srv.stats.deadline_flushes == 1
+    gate.ready = True
+    assert all(srv.result(r) is not None for r in first + [r5, r6])
+
+
+def test_poll_harvests_and_flushes(small_index, serve_layout):
+    """poll(): a finished in-flight batch is drained without blocking and
+    the queued requests dispatch opportunistically into the freed slot."""
+    srv = WCSDServer(small_index, max_batch=1024, layout=serve_layout,
+                     max_wait_us=1e9, min_batch=1)
+    gate = _gate_engine(srv)
+    r1 = srv.submit(3, 9, 1)       # min_batch=1, slot free -> dispatches
+    assert srv.stats.opportunistic_flushes == 1
+    r2 = srv.submit(5, 11, 0)      # slot busy, huge deadline -> queued
+    assert srv.stats.batches == 1 and len(srv.pending) == 1
+    srv.poll()                     # busy slot: nothing happens
+    assert srv.stats.batches == 1 and r1 not in srv.results
+    gate.ready = True
+    srv.poll()                     # harvests batch 1, dispatches batch 2
+    assert r1 in srv.results       # delivered without result() blocking
+    assert srv.stats.batches == 2
+    assert srv.stats.opportunistic_flushes == 2
+    assert srv.result(r1) is not None and srv.result(r2) is not None
+
+
+def test_mixed_flush_single_slot_continuous(small_index, serve_layout):
+    """An early flush carries the scalar AND profile queues together as
+    the single in-flight slot (stats.batches counts the pair once)."""
+    srv = WCSDServer(small_index, max_batch=1024, layout=serve_layout,
+                     max_wait_us=0.0, min_batch=2)
+    rs = srv.submit(3, 9, 1)
+    rp = srv.submit_profile(4, 11)         # npend=2 -> early flush
+    assert srv.stats.batches == 1
+    assert srv._inflight is not None and srv._inflight_prof is not None
+    assert srv.result(rs) is not None
+    prof = srv.profile_result(rp)
+    assert prof is not None and len(prof) == small_index.num_levels + 1
+
+
+# ------------------------------------------- continuous-traffic harness
+def _random_mutation(rng, g):
+    """1-2 random inserts/deletes over ``g`` (valid levels only)."""
+    inserts, deletes = [], []
+    for _ in range(int(rng.integers(1, 3))):
+        half = np.flatnonzero(g.edges_src < g.edges_dst)
+        if rng.random() < 0.45 and len(half):
+            e = int(rng.choice(half))
+            deletes.append((int(g.edges_src[e]), int(g.edges_dst[e])))
+        else:
+            u, v = (int(x) for x in rng.choice(g.num_nodes, 2,
+                                               replace=False))
+            inserts.append((u, v, float(rng.choice(g.levels))))
+    return inserts, deletes
+
+
+@pytest.mark.parametrize("mode", ["device", "sharded", "dynamic"])
+def test_continuous_traffic_differential(mode):
+    """Randomized interleaved traffic — submit / submit_profile / result /
+    poll (/ apply_updates in dynamic mode) — under deadline flushes,
+    differentially checked against the BFS oracle grid, then the bulk
+    query_many path over the same stream."""
+    from repro.core.baselines import constrained_distance_grid
+    from repro.core.generators import erdos_renyi
+
+    g = erdos_renyi(40, 3.0, num_levels=3, seed=21)
+    idx = build_wc_index(g, ordering="degree")
+    kw = dict(max_batch=32, max_wait_us=0.0, min_batch=4, layout="csr",
+              use_pallas=True, interpret=True)
+    if mode == "sharded":
+        from repro.launch.mesh import make_serving_mesh
+        srv = WCSDServer(idx, backend="sharded", mesh=make_serving_mesh(),
+                         **kw)
+    elif mode == "dynamic":
+        srv = WCSDServer(idx, graph=g, compact_threshold=None, **kw)
+    else:
+        srv = WCSDServer(idx, **kw)
+
+    rng = np.random.default_rng(77)
+    grid = constrained_distance_grid(g)
+    V, W = g.num_nodes, g.num_levels
+    exp_scalar, exp_prof = {}, {}   # rid -> expectation at submit time
+    out_scalar = {}                 # rid -> value read mid-stream
+    unread = []                     # scalar rids not yet result()-ed
+    submitted = []
+
+    for step in range(160):
+        op = rng.random()
+        if op < 0.55:
+            s, t = int(rng.integers(V)), int(rng.integers(V))
+            wl = int(rng.integers(W))
+            rid = srv.submit(s, t, wl)
+            exp_scalar[rid] = int(grid[s, t, wl])
+            unread.append(rid)
+            submitted.append((s, t, wl))
+        elif op < 0.72:
+            s, t = int(rng.integers(V)), int(rng.integers(V))
+            rid = srv.submit_profile(s, t)
+            exp_prof[rid] = grid[s, t, :].copy()
+        elif op < 0.84 and unread:
+            rid = unread.pop(int(rng.integers(len(unread))))
+            out_scalar[rid] = srv.result(rid)   # may force a flush
+        elif op < 0.90:
+            srv.poll()
+        elif mode == "dynamic" and op < 0.93:
+            ins, dels = _random_mutation(rng, srv.index.graph)
+            srv.apply_updates(inserts=ins, deletes=dels)
+            grid = constrained_distance_grid(srv.index.graph)
+        # else: idle tick
+
+    srv.flush()
+    for rid in unread:
+        out_scalar[rid] = srv.result(rid)
+    for rid, exp in exp_scalar.items():
+        assert out_scalar[rid] == exp, rid
+    for rid, exp in exp_prof.items():
+        got = srv.profile_result(rid)
+        assert got is not None and np.array_equal(got, exp), rid
+
+    # continuous batching actually fired below the hard cap
+    assert srv.stats.opportunistic_flushes + srv.stats.deadline_flushes > 0
+    assert srv.stats.max_batch < kw["max_batch"]
+    lat = srv.latency_summary()
+    assert lat["count"] == srv.stats.requests + srv.stats.profile_requests
+
+    # the epoch-flush bulk path over the same scalar stream agrees with
+    # the (final) oracle grid
+    if submitted:
+        s, t, wl = (np.array(x, np.int32) for x in zip(*submitted))
+        assert np.array_equal(srv.query_many(s, t, wl), grid[s, t, wl])
