@@ -291,6 +291,7 @@ def bench_serving(batch=4096, n_nodes=3000):
     rows += _bench_rowsharded_ragged()
     rows += _bench_dma_overlap()
     rows += _bench_dynamic_updates(g, idx, name, batch=min(batch, 1024))
+    rows += _bench_resilience(g, idx, name, batch=min(batch, 1024))
     return rows
 
 
@@ -439,6 +440,63 @@ def _bench_dynamic_updates(g, idx, name, batch=1024):
         dict(table="serving", dataset=name, algo="delta_query_overhead",
              value=t_delta / max(t_static, 1e-12)),
     ]
+
+
+def _bench_resilience(g, idx, name, batch=1024):
+    """Resilience rows (docs/resilience.md §benchmarks): the wall-clock
+    tax of serving one ladder rung DOWN from the primary engine
+    (``degraded_mode_overhead`` — csr-ragged primary vs its bucket_pair
+    fallback rung, distinct query sets per side so the memo cannot hide
+    either engine), and the per-batch cost of the crash-safe update WAL
+    (``wal_append_us`` — mean fsync'd append of a small update record).
+    Both ceilings gated by run.py --check are coarse SLO guards: the
+    overhead ratio catches a fallback rung that silently became
+    catastrophically slower than its primary (the ladder would then trade
+    an outage for an effective outage), the append ceiling catches a WAL
+    that serializes update ingestion."""
+    import tempfile
+
+    from repro.checkpoint.ckpt import UpdateWAL
+    from repro.core.generators import random_queries
+
+    srv = WCSDServer(idx, layout="csr", dispatch="ragged", max_batch=batch)
+    assert srv.mode == "primary"
+    qsets = [random_queries(g, batch, seed=61 + i) for i in range(4)]
+    for s, t, wl in qsets:                       # warm both rungs' compiles
+        srv.query_many(s, t, wl)
+    assert srv._demote() and srv.mode == "bucket_pair"
+    for s, t, wl in qsets:
+        srv.query_many(s, t, wl)
+    srv.mode_index = 0
+    srv.engine = srv._make_engine()
+    # ratio of two wall-clocks: interleave the trials and keep each
+    # side's best, same pattern as the other gated ratios; fresh query
+    # sets per trial so neither side serves from the memo
+    t_prim = t_deg = float("inf")
+    for i, (s, t, wl) in enumerate(qsets[:2]):
+        sd, td, wld = qsets[2 + i]
+        t_prim = min(t_prim, _time(lambda: srv.query_many(s, t, wl))[0])
+        assert srv._demote()
+        t_deg = min(t_deg, _time(lambda: srv.query_many(sd, td, wld))[0])
+        srv.mode_index = 0
+        srv.engine = srv._make_engine()
+        srv.memo.clear()
+        srv.stats.memo_hits = 0
+    rows = [dict(table="serving", dataset=name, algo="degraded_mode_overhead",
+                 value=t_deg / max(t_prim, 1e-12))]
+    with tempfile.TemporaryDirectory() as tmp:
+        wal = UpdateWAL(f"{tmp}/bench_wal.log", base_version=0)
+        lv = float(g.levels[0])
+        n_app = 32
+        t0 = time.perf_counter()
+        for i in range(n_app):
+            wal.append(inserts=[(i, i + 1, lv)], deletes=[(i + 2, i + 3)],
+                       graph_version=i + 1)
+        dt = time.perf_counter() - t0
+        assert len(wal.records()) == n_app
+    rows.append(dict(table="serving", dataset=name, algo="wal_append_us",
+                     value=dt / n_app * 1e6))
+    return rows
 
 
 def make_skewed_store(V=2048, W=6, lane=32, buckets=8, seed=17, rng=None):

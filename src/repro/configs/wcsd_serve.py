@@ -43,7 +43,15 @@ class ServeConfig:
     ``min_batch`` requests are queued and the in-flight slot is free, or
     when the oldest queued request has waited ``max_wait_us`` — so a
     trickle of traffic is never starved waiting for ``max_batch``.
-    ``max_wait_us=None`` (default) keeps the epoch-flush behavior."""
+    ``max_wait_us=None`` (default) keeps the epoch-flush behavior.
+
+    The resilience knobs (docs/resilience.md) arm the flush watchdog:
+    ``flush_timeout_ms`` is the in-flight deadline (None = wait forever,
+    the pre-watchdog behavior), ``max_retries``/``backoff_base_ms`` the
+    retry budget and backoff base, ``probe_interval`` the number of
+    healthy flushes before a degraded server re-promotes one ladder rung.
+    ``wal_path`` attaches the crash-safe update WAL — every
+    `apply_updates` batch is logged before the index is touched."""
 
     backend: str = "sharded"          # "device" | "sharded"
     layout: str = "csr"               # "padded" | "csr"
@@ -58,6 +66,11 @@ class ServeConfig:
     compressed: bool = False          # CompressedArena store (csr + ragged)
     max_wait_us: float | None = None  # continuous-batching deadline
     min_batch: int = 1                # admission floor for early flushes
+    flush_timeout_ms: float | None = None  # watchdog deadline per flush
+    max_retries: int = 3              # retry budget per flush, per rung
+    backoff_base_ms: float = 1.0      # exponential backoff base (jittered)
+    probe_interval: int = 8           # healthy flushes before re-promotion
+    wal_path: str | None = None       # crash-safe update WAL (None = off)
 
     def server_kwargs(self) -> dict:
         return dict(backend=self.backend, layout=self.layout,
@@ -68,15 +81,23 @@ class ServeConfig:
                     undirected=self.undirected,
                     device_budget_bytes=self.device_budget_bytes,
                     multi_pod=self.multi_pod, compressed=self.compressed,
-                    max_wait_us=self.max_wait_us, min_batch=self.min_batch)
+                    max_wait_us=self.max_wait_us, min_batch=self.min_batch,
+                    flush_timeout_ms=self.flush_timeout_ms,
+                    max_retries=self.max_retries,
+                    backoff_base_ms=self.backoff_base_ms,
+                    probe_interval=self.probe_interval,
+                    wal_path=self.wal_path)
 
 
 def serve_config() -> ServeConfig:
     """Production shape: compiled kernels (interpret auto-resolves False on
     accelerators), CSR store, ragged single-launch dispatch, sharded
-    batch, 500µs admission deadline (continuous batching)."""
+    batch, 500µs admission deadline (continuous batching), 5s flush
+    watchdog (a wedged collective is retried, then absorbed by the
+    fallback ladder instead of hanging every caller)."""
     return ServeConfig(use_pallas=True, max_batch=4096,
-                       max_wait_us=500.0, min_batch=32)
+                       max_wait_us=500.0, min_batch=32,
+                       flush_timeout_ms=5000.0)
 
 
 def smoke_serve_config() -> ServeConfig:

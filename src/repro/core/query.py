@@ -301,12 +301,25 @@ class PendingResult:
     device execution of batch k. ``deps`` are the in-flight device arrays
     the finalizer will read: `ready()` probes them without blocking, which
     is what lets the server dispatch opportunistically the moment the
-    in-flight slot's device work finishes."""
+    in-flight slot's device work finishes.
+
+    ``deadline`` (absolute `time.monotonic()` seconds, or None) is stamped
+    by the flush watchdog at dispatch: a handle past its deadline that is
+    still not `ready()` is treated as wedged and abandoned — device work
+    is not interruptible, so "cancel" means its result is never read and
+    the SAME batch is re-dispatched (core/serve.py retry loop)."""
 
     def __init__(self, finalize, deps=()):
         self._finalize = finalize
         self._deps = tuple(deps)
         self._out = None
+        self.deadline = None
+
+    def expired(self, now: float) -> bool:
+        """True when a deadline is set, has passed, and the handle still
+        is not ready — the watchdog's timeout predicate."""
+        return (self.deadline is not None and now > self.deadline
+                and not self.ready())
 
     def ready(self) -> bool:
         """Non-blocking: True once every declared device dependency has

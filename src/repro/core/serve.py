@@ -51,6 +51,9 @@ from typing import Optional
 import numpy as np
 
 from .query import DeviceQueryEngine, PendingResult, ShardedQueryEngine
+from .resilience import (FlushRetryExhausted, RetryPolicy,
+                         UnknownRequestError, WALReplayError,
+                         build_fallback_ladder)
 from .wc_index import (DynamicWCIndex, PackedWCIndex, WCIndex,
                        round_to_pow2)
 
@@ -66,6 +69,13 @@ class ServeStats:
     max_batch: int = 0
     deadline_flushes: int = 0     # flushes fired by the max_wait_us deadline
     opportunistic_flushes: int = 0  # flushes fired by a free in-flight slot
+    # flush watchdog (docs/resilience.md): per-cause retry counters
+    timeout_retries: int = 0      # handle missed its deadline, re-dispatched
+    error_retries: int = 0        # dispatch/wait raised, re-dispatched
+    exhausted: int = 0            # a retry budget ran out (demote or raise)
+    demotions: int = 0            # fallback-ladder steps down
+    promotions: int = 0           # healthy probe windows stepping back up
+    wal_appends: int = 0          # update batches logged to the WAL
 
     @property
     def flush_time_s(self) -> float:
@@ -87,7 +97,13 @@ class WCSDServer:
                  compressed: bool = False, graph=None,
                  compact_threshold: float | None = 0.25,
                  compact_kwargs: dict | None = None,
-                 max_wait_us: float | None = None, min_batch: int = 1):
+                 max_wait_us: float | None = None, min_batch: int = 1,
+                 flush_timeout_ms: float | None = None,
+                 max_retries: int = 3, backoff_base_ms: float = 1.0,
+                 backoff_factor: float = 2.0, jitter: float = 0.5,
+                 probe_interval: int = 8, retry_seed: int = 0,
+                 wal_path: str | None = None, wal_fsync: bool = True,
+                 engine_wrapper=None):
         # layout="csr" serves from the CSR-packed store; dispatch="ragged"
         # (default) answers each flush with ONE megakernel launch over the
         # lane-tiled arena — flush_async is plan-free on host — while
@@ -114,9 +130,31 @@ class WCSDServer:
         # slot is free/finished (opportunistic) or when the oldest queued
         # request has waited max_wait_us (deadline) — max_batch remains
         # the hard cap. max_wait_us=None keeps the epoch-flush behavior.
+        # flush_timeout_ms/max_retries/backoff_*/jitter arm the flush
+        # watchdog: a flush that exceeds the deadline or raises is
+        # cancelled and the SAME batch re-dispatched with exponential
+        # backoff; an exhausted budget demotes the server one rung down
+        # its fallback ladder (see `mode`), and probe_interval healthy
+        # flushes re-promote it. wal_path= turns on the crash-safe update
+        # WAL (every apply_updates batch is logged before the index is
+        # touched; `replay_wal` warm-starts a replica). engine_wrapper=
+        # wraps every engine the server builds (chaos fault injection —
+        # checkpoint/fault.py `FaultyEngine`); it survives rebuilds.
         self.index = None
         self.compact_threshold = compact_threshold
         self._compact_kwargs = dict(compact_kwargs or {})
+        self.retry_policy = RetryPolicy(
+            flush_timeout_ms=flush_timeout_ms, max_retries=int(max_retries),
+            backoff_base_ms=float(backoff_base_ms),
+            backoff_factor=float(backoff_factor), jitter=float(jitter),
+            probe_interval=int(probe_interval))
+        self._retry_rng = np.random.default_rng(retry_seed)
+        self._engine_wrapper = engine_wrapper
+        self._ladder = None          # injected engines have no fallback
+        self.mode_index = 0
+        self._healthy = 0            # consecutive retry-free drains
+        self._retry_snapshot = 0     # retry-event total at last drain
+        self._retrying = False       # a drain is mid-retry: poll() backs off
         if engine is not None:
             if graph is not None:
                 raise ValueError("graph= (dynamic serving) cannot be "
@@ -136,7 +174,13 @@ class WCSDServer:
                 layout=layout, dispatch=dispatch, compressed=compressed,
                 mesh=mesh, device_budget_bytes=device_budget_bytes,
                 multi_pod=multi_pod)
+            self._ladder = build_fallback_ladder(self._engine_config)
             self.engine = self._make_engine()
+        self.wal = None
+        if wal_path is not None:
+            from ..checkpoint.ckpt import UpdateWAL
+            self.wal = UpdateWAL(wal_path, base_version=self.graph_version,
+                                 fsync=wal_fsync)
         self.max_batch = int(max_batch)
         self.max_wait_us = None if max_wait_us is None else float(max_wait_us)
         self.min_batch = max(1, int(min_batch))
@@ -176,6 +220,17 @@ class WCSDServer:
         # (popped together with the answer; backs the staleness flags)
         self.result_versions: dict[int, int] = {}
         self.profile_result_versions: dict[int, int] = {}
+        # fallback-ladder mode each answer was computed under ("memo" for
+        # cache hits); popped with the answer, read via result_with_mode
+        self.result_modes: dict[int, str] = {}
+        self.profile_result_modes: dict[int, str] = {}
+        # the in-flight batches' raw request tuples + dispatch closures:
+        # what the watchdog re-dispatches on a retry and re-queues on a
+        # terminal failure (requests are never dropped)
+        self._inflight_batch: list | None = None
+        self._inflight_dispatch = None
+        self._inflight_prof_batch: list | None = None
+        self._inflight_prof_dispatch = None
         # enqueue→deliver latency: stamped per rid at submit, recorded
         # (µs) the moment the answer lands in the result dict
         self._enqueue_t: dict[int, float] = {}
@@ -185,7 +240,14 @@ class WCSDServer:
 
     # ------------------------------------------------------------- dynamic
     def _make_engine(self):
-        cfg = self._engine_config
+        cfg = (self._ladder[self.mode_index][1]
+               if self._ladder is not None else self._engine_config)
+        eng = self._build_engine(cfg)
+        if self._engine_wrapper is not None:
+            eng = self._engine_wrapper(eng)
+        return eng
+
+    def _build_engine(self, cfg):
         if cfg["backend"] == "device":
             return DeviceQueryEngine(
                 self.index, use_pallas=cfg["use_pallas"],
@@ -205,6 +267,111 @@ class WCSDServer:
     def graph_version(self) -> int:
         return int(getattr(self.index, "graph_version", 0))
 
+    # ---------------------------------------------------------- resilience
+    @property
+    def mode(self) -> str:
+        """The fallback-ladder rung currently serving ("primary" when
+        healthy; "injected" for engine= servers, which have no ladder).
+        Every delivered answer is stamped with the mode that produced it
+        (`result_with_mode`)."""
+        if self._ladder is None:
+            return "injected"
+        return self._ladder[self.mode_index][0]
+
+    def _demote(self) -> bool:
+        """Step one rung down the fallback ladder (rebuilding the engine
+        in place) after an exhausted retry budget. False at the bottom —
+        nothing left to fall back to. The memos survive: every rung
+        serves the same index, so answers are mode-independent."""
+        if self._ladder is None or self.mode_index >= len(self._ladder) - 1:
+            return False
+        self.mode_index += 1
+        self.stats.demotions += 1
+        self._healthy = 0
+        self.engine = self._make_engine()
+        return True
+
+    def _stamp_deadline(self, handle) -> None:
+        p = self.retry_policy
+        if p.flush_timeout_ms is not None:
+            try:
+                handle.deadline = (time.monotonic()
+                                   + p.flush_timeout_ms / 1e3)
+            except AttributeError:
+                pass  # foreign handle type without the attribute
+
+    def _dispatch_with_retry(self, dispatch):
+        """Run a zero-arg dispatch closure under the watchdog: a raise is
+        retried with exponential backoff + jitter up to ``max_retries``;
+        an exhausted budget demotes one rung (resetting the budget) or —
+        at the bottom of the ladder — re-raises as `FlushRetryExhausted`
+        with the pending queue intact. The closure reads ``self.engine``
+        at call time, so a retry after a demotion uses the new engine."""
+        p = self.retry_policy
+        attempt = 0
+        while True:
+            try:
+                handle = dispatch()
+            except Exception as err:
+                attempt += 1
+                if attempt > p.max_retries:
+                    self.stats.exhausted += 1
+                    if self._demote():
+                        attempt = 0
+                    else:
+                        raise FlushRetryExhausted(
+                            f"dispatch failed after {p.max_retries} "
+                            f"retries at mode {self.mode!r} (bottom of "
+                            "the fallback ladder); the requests are "
+                            "still queued") from err
+                else:
+                    self.stats.error_retries += 1
+                time.sleep(p.backoff_s(max(attempt, 1), self._retry_rng))
+                continue
+            self._stamp_deadline(handle)
+            return handle
+
+    def _await_handle(self, handle, redispatch):
+        """`handle.wait()` under the watchdog. A handle past its deadline
+        that still is not ready is abandoned (device work is not
+        interruptible — its result is simply never read) and the SAME
+        batch re-dispatched via ``redispatch``; a raising wait() retries
+        the same way. Exhaustion demotes one rung and resets the budget;
+        at the bottom it raises `FlushRetryExhausted` (the caller
+        re-queues the batch — nothing is dropped)."""
+        p = self.retry_policy
+        attempt = 0
+        while True:
+            timed_out, err = False, None
+            deadline = getattr(handle, "deadline", None)
+            if deadline is not None:
+                while not handle.ready():
+                    if time.monotonic() > deadline:
+                        timed_out = True
+                        break
+                    time.sleep(1e-4)
+            if not timed_out:
+                try:
+                    return handle.wait()
+                except Exception as e:
+                    err = e
+            attempt += 1
+            if attempt > p.max_retries:
+                self.stats.exhausted += 1
+                if self._demote():
+                    attempt = 0
+                else:
+                    raise FlushRetryExhausted(
+                        f"flush failed after {p.max_retries} retries at "
+                        f"mode {self.mode!r} (bottom of the fallback "
+                        "ladder); the batch has been re-queued") from err
+            elif timed_out:
+                self.stats.timeout_retries += 1
+            else:
+                self.stats.error_retries += 1
+            time.sleep(p.backoff_s(max(attempt, 1), self._retry_rng))
+            handle = redispatch()
+
     def apply_updates(self, inserts=(), deletes=()) -> dict:
         """Mutate the served graph and fold the label corrections into the
         delta store (`DynamicWCIndex.apply_updates`). In-flight and pending
@@ -212,11 +379,23 @@ class WCSDServer:
         version they were stamped with, and read back as stale. The scalar
         and profile memos are dropped (their entries answer the old graph)
         and the engine is rebuilt over the delta-extended store. Crossing
-        ``compact_threshold`` triggers `compact` before returning."""
+        ``compact_threshold`` triggers `compact` before returning.
+
+        With a WAL attached (``wal_path=``), the mutation batch is logged
+        — checksummed and fsynced — BEFORE the index is touched: a crash
+        anywhere after the append loses nothing, because a replica
+        warm-starting from the last checkpoint replays the tail
+        (`replay_wal`) and converges to the pre-crash graph version."""
         if not isinstance(self.index, DynamicWCIndex):
             raise ValueError("apply_updates requires a dynamic server — "
                              "construct WCSDServer(idx, graph=g, ...)")
         self.flush()
+        inserts = [(int(u), int(v), float(q)) for u, v, q in inserts]
+        deletes = [(int(u), int(v)) for u, v in deletes]
+        if self.wal is not None:
+            self.wal.append(inserts, deletes,
+                            graph_version=self.graph_version + 1)
+            self.stats.wal_appends += 1
         stats = self.index.apply_updates(inserts=inserts, deletes=deletes)
         self.memo.clear()
         self.profile_memo.clear()
@@ -241,7 +420,43 @@ class WCSDServer:
         kw.update(build_kwargs)
         stats = self.index.compact(**kw)
         self.engine = self._make_engine()
+        if self.wal is not None:
+            # the compacted base now embodies every logged record: restart
+            # the log at the current version (atomic header rewrite)
+            self.wal.truncate(self.graph_version)
         return stats
+
+    def replay_wal(self) -> int:
+        """Warm start: re-apply the WAL tail past the server's current
+        graph version, in order, converging to the pre-crash state.
+        Returns the number of records applied. Raises `WALReplayError`
+        when the log does not reach back to this server's version (it was
+        compacted past the checkpoint this replica loaded). Replayed
+        batches are NOT re-appended to the log — they are already in it."""
+        if self.wal is None:
+            raise ValueError("replay_wal requires a WAL-backed server — "
+                             "construct WCSDServer(..., wal_path=...)")
+        if not isinstance(self.index, DynamicWCIndex):
+            raise ValueError("replay_wal requires a dynamic server — "
+                             "construct WCSDServer(idx, graph=g, ...)")
+        n = 0
+        for rec in self.wal.replay(self.graph_version):
+            if rec["graph_version"] != self.graph_version + 1:
+                raise WALReplayError(
+                    f"WAL record jumps to graph version "
+                    f"{rec['graph_version']} but the server is at "
+                    f"{self.graph_version}")
+            self.flush()
+            self.index.apply_updates(
+                inserts=[(int(u), int(v), float(q))
+                         for u, v, q in rec["inserts"]],
+                deletes=[(int(u), int(v)) for u, v in rec["deletes"]])
+            n += 1
+        if n:
+            self.memo.clear()
+            self.profile_memo.clear()
+            self.engine = self._make_engine()
+        return n
 
     def _memo_key(self, s: int, t: int, w_level: int) -> tuple:
         if self.undirected and s > t:
@@ -275,6 +490,7 @@ class WCSDServer:
             self.memo.move_to_end(key)
             self.results[rid] = self.memo[key]
             self.result_versions[rid] = self.graph_version
+            self.result_modes[rid] = "memo"
             self.stats.memo_hits += 1
             self._deliver(rid)
         elif (pkey in self.profile_memo
@@ -285,6 +501,7 @@ class WCSDServer:
             self.profile_memo.move_to_end(pkey)
             self.results[rid] = int(self.profile_memo[pkey][w_level])
             self.result_versions[rid] = self.graph_version
+            self.result_modes[rid] = "memo"
             self._memo_put(key, self.results[rid])
             self.stats.memo_hits += 1
             self._deliver(rid)
@@ -324,6 +541,7 @@ class WCSDServer:
             self.profile_memo.move_to_end(key)
             self.profile_results[rid] = self.profile_memo[key].copy()
             self.profile_result_versions[rid] = self.graph_version
+            self.profile_result_modes[rid] = "memo"
             self.stats.memo_hits += 1
             self._deliver(rid)
         elif key in self._inflight_prof_pos:
@@ -359,7 +577,10 @@ class WCSDServer:
         is hit, or — with ``max_wait_us`` enabled and at least
         ``min_batch`` queued — when the in-flight slot is free/finished
         (opportunistic) or the oldest queued request has aged past the
-        deadline."""
+        deadline. No-op while a retry is in progress: dispatching a new
+        batch mid-retry would race the half-retried slot."""
+        if self._retrying:
+            return
         npend = len(self.pending) + len(self.pending_profiles)
         if npend >= self.max_batch:
             # async: dispatch only — the device chews on this batch
@@ -383,18 +604,29 @@ class WCSDServer:
         batch if its device work is done (delivering its results without
         blocking) and re-check the flush triggers. Callers with gaps
         between submissions call this to bound queueing delay; `submit`
-        runs the same checks on every enqueue."""
+        runs the same checks on every enqueue.
+
+        Re-entrancy guard: while the watchdog is mid-retry (a drain
+        re-dispatched a timed-out or raising batch and is waiting on the
+        replacement handle), the in-flight slot is half-retried state —
+        harvesting it, or dispatching a new batch over it, would deliver
+        from the abandoned handle or race two batches on one engine.
+        `poll` during a retry is a no-op; the retrying drain delivers."""
+        if self._retrying:
+            return
         if self._slot_done():
             self._drain()
         self._maybe_flush()
 
     def latency_summary(self) -> dict:
         """p50/p99 (µs) of enqueue→deliver latency over every delivered
-        request so far (memo hits included — they deliver at enqueue)."""
+        request so far (memo hits included — they deliver at enqueue).
+        Before anything has completed the percentiles are zeros with
+        ``n == count == 0`` — never an exception."""
         if not self.latencies_us:
-            return {"count": 0, "p50_us": 0.0, "p99_us": 0.0}
+            return {"count": 0, "n": 0, "p50_us": 0.0, "p99_us": 0.0}
         arr = np.asarray(self.latencies_us)
-        return {"count": int(arr.size),
+        return {"count": int(arr.size), "n": int(arr.size),
                 "p50_us": float(np.percentile(arr, 50)),
                 "p99_us": float(np.percentile(arr, 99))}
 
@@ -411,12 +643,15 @@ class WCSDServer:
         A flush dispatches the pending scalar batch AND the pending profile
         batch (either may be empty); together they form the in-flight slot.
 
-        Failure semantics: the pending queue is cleared only AFTER its
-        dispatch returns — if the engine raises (sharded gather OOM, a
-        poisoned compile cache, ...), every queued request stays pending
-        and the exception propagates; a later flush retries the same
-        batch and `result(rid)` still blocks-and-answers instead of
-        returning None forever.
+        Failure semantics (docs/resilience.md): the pending queue is
+        cleared only AFTER its dispatch returns, and the dispatch itself
+        runs under the flush watchdog — an engine raise (sharded gather
+        OOM, a poisoned compile cache, an injected chaos fault, ...) is
+        retried with backoff, then absorbed by a fallback-ladder demotion;
+        only at the bottom of the ladder does `FlushRetryExhausted`
+        propagate, with every queued request still pending — a later
+        flush retries the same batch and `result(rid)` still
+        blocks-and-answers instead of failing forever.
         """
         if not self.pending and not self.pending_profiles:
             return
@@ -438,15 +673,23 @@ class WCSDServer:
             s[:n] = [b[1] for b in batch]
             t[:n] = [b[2] for b in batch]
             wl[:n] = [b[3] for b in batch]
-            qa = getattr(self.engine, "query_async", None)
-            # dispatch BEFORE the queue is cleared (see docstring)
-            if qa is not None:
-                handle = qa(s, t, wl)
-            else:  # engine exposes only a blocking query (tests stub this)
+
+            def dispatch(s=s, t=t, wl=wl):
+                # reads self.engine at call time, so a retry after a
+                # fallback-ladder demotion dispatches to the new engine
+                qa = getattr(self.engine, "query_async", None)
+                if qa is not None:
+                    return qa(s, t, wl)
+                # engine exposes only a blocking query (tests stub this)
                 res = self.engine.query(s, t, wl)
-                handle = PendingResult(lambda: res)
+                return PendingResult(lambda: res)
+
+            # dispatch BEFORE the queue is cleared (see docstring)
+            handle = self._dispatch_with_retry(dispatch)
             keys = [self._memo_key(b[1], b[2], b[3]) for b in batch]
             self._inflight = (handle, [b[0] for b in batch], keys)
+            self._inflight_batch = batch
+            self._inflight_dispatch = dispatch
             # pending piggybacks ride over: positions are batch positions
             self._inflight_rids = ({b[0] for b in batch}
                                    | {r for r, _ in self._pending_extra})
@@ -465,14 +708,19 @@ class WCSDServer:
             t = np.zeros(padded, dtype=np.int32)
             s[:n] = [b[1] for b in batch]
             t[:n] = [b[2] for b in batch]
-            qa = getattr(self.engine, "query_profile_async", None)
-            if qa is not None:
-                handle = qa(s, t)
-            else:
+
+            def prof_dispatch(s=s, t=t):
+                qa = getattr(self.engine, "query_profile_async", None)
+                if qa is not None:
+                    return qa(s, t)
                 res = self.engine.query_profile(s, t)
-                handle = PendingResult(lambda: res)
+                return PendingResult(lambda: res)
+
+            handle = self._dispatch_with_retry(prof_dispatch)
             keys = [self._profile_key(b[1], b[2]) for b in batch]
             self._inflight_prof = (handle, [b[0] for b in batch], keys)
+            self._inflight_prof_batch = batch
+            self._inflight_prof_dispatch = prof_dispatch
             self._inflight_prof_rids = ({b[0] for b in batch}
                                         | {r for r, _ in
                                            self._pending_prof_extra})
@@ -487,67 +735,159 @@ class WCSDServer:
         self.stats.batches += 1
         self.stats.dispatch_time_s += time.perf_counter() - t0
 
+    def _requeue_scalar(self, batch, extra) -> None:
+        """Put a terminally-failed in-flight batch back at the FRONT of
+        the pending queue (nothing is dropped): existing pending
+        positions and piggyback slots shift by the batch length; the
+        failed batch's own piggybacks keep their 0-based positions."""
+        n = len(batch)
+        self.pending = list(batch) + self.pending
+        shifted = {k: p + n for k, p in self._pending_pos.items()}
+        for i, b in enumerate(batch):
+            # on a duplicate key the queued copy wins (it already carries
+            # piggybacks pointing at its shifted position)
+            shifted.setdefault(self._memo_key(b[1], b[2], b[3]), i)
+        self._pending_pos = shifted
+        self._pending_extra = ([(r, p) for r, p in extra]
+                               + [(r, p + n) for r, p in self._pending_extra])
+        self._pending_rids |= {b[0] for b in batch} | {r for r, _ in extra}
+        if self._pending_since is None:
+            self._pending_since = time.perf_counter()
+
+    def _requeue_profile(self, batch, extra) -> None:
+        n = len(batch)
+        self.pending_profiles = list(batch) + self.pending_profiles
+        shifted = {k: p + n for k, p in self._pending_prof_pos.items()}
+        for i, b in enumerate(batch):
+            shifted.setdefault(self._profile_key(b[1], b[2]), i)
+        self._pending_prof_pos = shifted
+        self._pending_prof_extra = (
+            [(r, p) for r, p in extra]
+            + [(r, p + n) for r, p in self._pending_prof_extra])
+        self._pending_prof_rids |= ({b[0] for b in batch}
+                                    | {r for r, _ in extra})
+        if self._pending_since is None:
+            self._pending_since = time.perf_counter()
+
     def _drain(self) -> None:
-        """Materialize the in-flight batch into results + memos."""
+        """Materialize the in-flight batch into results + memos.
+
+        Runs under the flush watchdog: a timed-out or raising handle is
+        re-dispatched with backoff (`_await_handle`); a terminal failure
+        re-queues the batch and propagates. The ``_retrying`` guard makes
+        the drain non-reentrant — `poll()` (including one issued
+        re-entrantly by a retried engine) must not harvest the
+        half-retried slot."""
+        if self._retrying:
+            return
         if self._inflight is None and self._inflight_prof is None:
             return
         t0 = time.perf_counter()
         ver = self.graph_version
-        if self._inflight is not None:
-            handle, rids, keys = self._inflight
-            extra = self._inflight_extra
-            self._inflight = None
-            self._inflight_rids = set()
-            self._inflight_pos = {}
-            self._inflight_extra = []
-            out = handle.wait()[:len(rids)]
-            for rid, key, d in zip(rids, keys, out):
-                self.results[rid] = int(d)
-                self.result_versions[rid] = ver
-                self._memo_put(key, int(d))
-                self._deliver(rid)
-            for rid, pos in extra:   # duplicates submitted while in flight
-                self.results[rid] = int(out[pos])
-                self.result_versions[rid] = ver
-                self._deliver(rid)
-        if self._inflight_prof is not None:
-            handle, rids, keys = self._inflight_prof
-            extra = self._inflight_prof_extra
-            self._inflight_prof = None
-            self._inflight_prof_rids = set()
-            self._inflight_prof_pos = {}
-            self._inflight_prof_extra = []
-            out = np.asarray(handle.wait())[:len(rids)]
-            for rid, key, prof in zip(rids, keys, out):
-                # np.array COPIES: the memo must own its staircase, not a
-                # row view pinning the whole flushed batch buffer (and
-                # aliasing what profile_result hands out as caller-owned)
-                arr = np.array(prof, dtype=np.int32)
-                self.profile_results[rid] = arr.copy()
-                self.profile_result_versions[rid] = ver
-                self.profile_memo[key] = arr
-                if len(self.profile_memo) > self.memo_capacity:
-                    self.profile_memo.popitem(last=False)
-                self._deliver(rid)
-            for rid, pos in extra:
-                self.profile_results[rid] = np.array(out[pos],
-                                                     dtype=np.int32)
-                self.profile_result_versions[rid] = ver
-                self._deliver(rid)
+        self._retrying = True
+        try:
+            if self._inflight is not None:
+                handle, rids, keys = self._inflight
+                extra = self._inflight_extra
+                batch = self._inflight_batch
+                dispatch = self._inflight_dispatch
+                self._inflight = None
+                self._inflight_rids = set()
+                self._inflight_pos = {}
+                self._inflight_extra = []
+                self._inflight_batch = None
+                self._inflight_dispatch = None
+                try:
+                    out = self._await_handle(
+                        handle,
+                        lambda: self._dispatch_with_retry(dispatch))
+                except Exception:
+                    self._requeue_scalar(batch, extra)
+                    raise
+                out = out[:len(rids)]
+                mode = self.mode
+                for rid, key, d in zip(rids, keys, out):
+                    self.results[rid] = int(d)
+                    self.result_versions[rid] = ver
+                    self.result_modes[rid] = mode
+                    self._memo_put(key, int(d))
+                    self._deliver(rid)
+                for rid, pos in extra:  # duplicates submitted in flight
+                    self.results[rid] = int(out[pos])
+                    self.result_versions[rid] = ver
+                    self.result_modes[rid] = mode
+                    self._deliver(rid)
+            if self._inflight_prof is not None:
+                handle, rids, keys = self._inflight_prof
+                extra = self._inflight_prof_extra
+                batch = self._inflight_prof_batch
+                dispatch = self._inflight_prof_dispatch
+                self._inflight_prof = None
+                self._inflight_prof_rids = set()
+                self._inflight_prof_pos = {}
+                self._inflight_prof_extra = []
+                self._inflight_prof_batch = None
+                self._inflight_prof_dispatch = None
+                try:
+                    out = self._await_handle(
+                        handle,
+                        lambda: self._dispatch_with_retry(dispatch))
+                except Exception:
+                    self._requeue_profile(batch, extra)
+                    raise
+                out = np.asarray(out)[:len(rids)]
+                mode = self.mode
+                for rid, key, prof in zip(rids, keys, out):
+                    # np.array COPIES: the memo must own its staircase,
+                    # not a row view pinning the whole flushed batch
+                    # buffer (and aliasing what profile_result hands out
+                    # as caller-owned)
+                    arr = np.array(prof, dtype=np.int32)
+                    self.profile_results[rid] = arr.copy()
+                    self.profile_result_versions[rid] = ver
+                    self.profile_result_modes[rid] = mode
+                    self.profile_memo[key] = arr
+                    if len(self.profile_memo) > self.memo_capacity:
+                        self.profile_memo.popitem(last=False)
+                    self._deliver(rid)
+                for rid, pos in extra:
+                    self.profile_results[rid] = np.array(out[pos],
+                                                         dtype=np.int32)
+                    self.profile_result_versions[rid] = ver
+                    self.profile_result_modes[rid] = mode
+                    self._deliver(rid)
+        finally:
+            self._retrying = False
         self.stats.drain_wait_s += time.perf_counter() - t0
+        # health accounting: a drain that completed with no new retry
+        # events is a healthy flush; probe_interval of them in a row
+        # re-promotes a degraded server one rung up the ladder
+        events = (self.stats.timeout_retries + self.stats.error_retries
+                  + self.stats.exhausted)
+        if events == self._retry_snapshot:
+            self._healthy += 1
+        else:
+            self._healthy = 0
+        self._retry_snapshot = events
+        if (self._ladder is not None and self.mode_index > 0
+                and self._healthy >= self.retry_policy.probe_interval):
+            self.mode_index -= 1
+            self.stats.promotions += 1
+            self._healthy = 0
+            self.engine = self._make_engine()
 
     def flush(self) -> None:
         """Synchronous flush: dispatch anything pending and drain."""
         self.flush_async()
         self._drain()
 
-    def result(self, rid: int) -> Optional[int]:
+    def result(self, rid: int) -> int:
         """Deliver (and evict) the answer for ``rid``.
 
         Read-once contract: a delivered rid is popped from the result dict,
         so per-request state cannot accumulate across a server's lifetime.
-        Unknown (or already-delivered) rids return None without disturbing
-        the pending queue."""
+        An unknown — or already-delivered — rid raises the typed
+        `UnknownRequestError` without disturbing the pending queue."""
         return self._pop_result(rid)[0]
 
     def _pop_result(self, rid: int):
@@ -558,25 +898,39 @@ class WCSDServer:
                 self.flush()
         if rid in self.results:
             return (self.results.pop(rid),
-                    self.result_versions.pop(rid, self.graph_version))
-        return None, None
+                    self.result_versions.pop(rid, self.graph_version),
+                    self.result_modes.pop(rid, self.mode))
+        raise UnknownRequestError(rid)
 
     def result_with_staleness(self, rid: int):
         """`result`, plus whether the answer predates the served graph:
         ``(value, stale)`` where ``stale`` is True iff the answer was
         computed against an earlier graph version than the server now
         holds (it was in flight or pending when `apply_updates` ran).
-        Unknown rids return ``(None, False)``."""
-        value, ver = self._pop_result(rid)
-        if value is None:
-            return None, False
+        Unknown rids raise `UnknownRequestError`."""
+        value, ver, _mode = self._pop_result(rid)
         return value, ver < self.graph_version
 
-    def profile_result(self, rid: int) -> Optional[np.ndarray]:
+    def result_with_mode(self, rid: int):
+        """`result`, plus the fallback-ladder mode that computed the
+        answer: ``(value, mode)`` where mode is a ladder rung name
+        ("primary", "uncompressed", ..., "oracle") or "memo" for a cache
+        hit. A degraded server keeps answering — correctly, from a
+        simpler engine — and this is how callers see it happened."""
+        value, _ver, mode = self._pop_result(rid)
+        return value, mode
+
+    def result_full(self, rid: int):
+        """``(value, graph_version, mode)`` — the answer plus everything
+        stamped on it (the chaos harness checks each answer against the
+        oracle for exactly the graph version that produced it)."""
+        return self._pop_result(rid)
+
+    def profile_result(self, rid: int) -> np.ndarray:
         """Deliver (and evict) the ``[num_levels + 1]`` staircase for a
-        `submit_profile` rid — the same read-once contract as `result`.
-        The delivered array is the caller's to keep (the memo holds its
-        own copy)."""
+        `submit_profile` rid — the same read-once contract (and typed
+        `UnknownRequestError`) as `result`. The delivered array is the
+        caller's to keep (the memo holds its own copy)."""
         return self._pop_profile_result(rid)[0]
 
     def _pop_profile_result(self, rid: int):
@@ -587,16 +941,26 @@ class WCSDServer:
                 self.flush()
         if rid in self.profile_results:
             return (self.profile_results.pop(rid),
-                    self.profile_result_versions.pop(rid, self.graph_version))
-        return None, None
+                    self.profile_result_versions.pop(rid,
+                                                     self.graph_version),
+                    self.profile_result_modes.pop(rid, self.mode))
+        raise UnknownRequestError(rid)
 
     def profile_result_with_staleness(self, rid: int):
         """`profile_result` + the staleness flag (see
         `result_with_staleness`)."""
-        value, ver = self._pop_profile_result(rid)
-        if value is None:
-            return None, False
+        value, ver, _mode = self._pop_profile_result(rid)
         return value, ver < self.graph_version
+
+    def profile_result_with_mode(self, rid: int):
+        """`profile_result` + the producing mode (see
+        `result_with_mode`)."""
+        value, _ver, mode = self._pop_profile_result(rid)
+        return value, mode
+
+    def profile_result_full(self, rid: int):
+        """``(staircase, graph_version, mode)`` (see `result_full`)."""
+        return self._pop_profile_result(rid)
 
     # convenience: synchronous bulk APIs
     def query_many(self, s, t, w_level) -> np.ndarray:

@@ -24,11 +24,26 @@ Within one (vertex, hub) group both dist and wlev are strictly increasing
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
 from .graph import Graph, INF_DIST, expand_frontier_csr
 from .ordering import make_order
+from .resilience import IndexIntegrityError
+
+
+def _verify_blob_crcs(owner: str, checksums: dict, expected: dict) -> None:
+    """Compare live blob CRC32s against a recorded baseline; any drift is
+    corruption (bit rot, an injected flip, a torn copy) and must surface
+    as a typed error — never as a wrong distance."""
+    bad = sorted(name for name, crc in expected.items()
+                 if checksums.get(name) != crc)
+    if bad:
+        raise IndexIntegrityError(
+            f"{owner}: blob checksum mismatch in {bad} — the live arrays "
+            "no longer match their recorded CRC32 baseline; refusing to "
+            "serve")
 
 
 def _concat_ranges(lengths: np.ndarray) -> np.ndarray:
@@ -441,6 +456,28 @@ class LabelArena:
                           tile_cnt=tile_cnt.astype(np.int32),
                           tile_lo=tile_lo, tile_hi=tile_hi)
 
+    # ---------------------------------------------------------- integrity
+    def checksums(self) -> dict:
+        """CRC32 of every arena blob (docs/resilience.md §integrity)."""
+        return {name: zlib.crc32(np.ascontiguousarray(
+                    getattr(self, name)).tobytes())
+                for name in ("hub", "dist", "wlev", "tile_base",
+                             "tile_cnt", "tile_lo", "tile_hi")}
+
+    def verify_integrity(self, expected: dict | None = None) -> dict:
+        """Re-hash the live tiles against a recorded baseline and raise
+        `IndexIntegrityError` on any mismatch. The first call with no
+        ``expected`` stamps the current checksums as the baseline (the
+        arena is immutable in serving; any later drift is corruption).
+        Returns the checksums that passed."""
+        sums = self.checksums()
+        baseline = expected or getattr(self, "_expected_crc", None)
+        if baseline is None:
+            object.__setattr__(self, "_expected_crc", sums)
+            return sums
+        _verify_blob_crcs("LabelArena", sums, baseline)
+        return sums
+
 
 # the arena's device infinity (kernels/wcsd_query.py DEV_INF): any stored
 # distance at or above this is "no path" and decodes back to INF_DIST
@@ -716,6 +753,28 @@ class PackedWCIndex:
         hub, dist, wlev, count = self.labels.to_padded()
         return WCIndex(order=self.order, rank=self.rank, levels=self.levels,
                        hub_rank=hub, dist=dist, wlev=wlev, count=count)
+
+    # ------------------------------------------------------------ integrity
+    def checksums(self) -> dict:
+        """CRC32 per blob, byte-identical to the table `save_packed_index`
+        writes (same names, same dtype normalization), so checksums taken
+        from a loaded file, a live index, and a saved one all compare."""
+        from ..checkpoint.ckpt import _wcx_arrays
+        return {name: zlib.crc32(a.tobytes())
+                for name, a in _wcx_arrays(self).items()}
+
+    def verify_integrity(self, expected: dict | None = None) -> dict:
+        """Re-hash every blob against a baseline — ``expected``, else the
+        `_expected_crc` stamped by `load_packed_index` (format v2), else
+        the current state (stamped as the new baseline). Mismatch raises
+        `IndexIntegrityError`; returns the passing checksums."""
+        sums = self.checksums()
+        baseline = expected or getattr(self, "_expected_crc", None)
+        if baseline is None:
+            self._expected_crc = sums
+            return sums
+        _verify_blob_crcs("PackedWCIndex", sums, baseline)
+        return sums
 
 
 def as_packed_index(idx: "WCIndex | PackedWCIndex") -> "PackedWCIndex":

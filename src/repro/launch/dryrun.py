@@ -3,9 +3,9 @@ import sys
 
 # The XLA_FLAGS line MUST run before any other import (including repro.*):
 # jax locks the device count at first initialization. The compile matrix
-# wants the full 512-chip virtual topology; --serve actually EXECUTES the
-# sharded serving stack, so it runs on 8 virtual host devices instead.
-_N_DEV = "8" if "--serve" in sys.argv else "512"
+# wants the full 512-chip virtual topology; --serve and --chaos actually
+# EXECUTE the serving stack, so they run on 8 virtual host devices instead.
+_N_DEV = "8" if ("--serve" in sys.argv or "--chaos" in sys.argv) else "512"
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_N_DEV}"
 
 import argparse  # noqa: E402
@@ -27,6 +27,9 @@ Usage:
   python -m repro.launch.dryrun --serve        # run the sharded WCSD
                                                # serving stack end-to-end
                                                # on 8 virtual host devices
+  python -m repro.launch.dryrun --chaos        # seeded fault-injection
+                                               # schedule (docs/resilience
+                                               # .md) across engine modes
 """
 
 
@@ -190,6 +193,55 @@ def run_serve(quick: bool) -> None:
           f"({time.time() - t0:.1f}s)")
 
 
+def run_chaos(quick: bool) -> None:
+    """Seeded chaos schedules (docs/resilience.md §6) over several engine
+    configurations: injected engine raises / flush hangs / bit-flips /
+    torn WAL tails plus one mid-`apply_updates` crash with a WAL-replay
+    warm restart — every answer differentially checked against the BFS
+    oracle, server back in its top mode at the end."""
+    import tempfile
+
+    import jax
+    from repro.checkpoint.fault import run_chaos_schedule
+    from repro.launch.mesh import make_serving_mesh
+
+    n_dev = len(jax.devices())
+    assert n_dev >= 8, f"expected >= 8 virtual devices, got {n_dev}"
+    # (tag, steps, seed, crash_step, server_kwargs-overrides)
+    legs = [("csr-ragged-device", 200, 3, 100, {}),
+            ("csr-ragged-sharded", 120 if quick else 200, 7, 60, {
+                "backend": "sharded", "mesh": make_serving_mesh()})]
+    if not quick:
+        legs += [("compressed-sharded", 200, 11, 110, {
+                     "backend": "sharded", "mesh": make_serving_mesh(),
+                     "compressed": True}),
+                 # pallas-interpret primary so the ladder has a real
+                 # pure-jnp oracle rung below it (a padded no-pallas
+                 # primary IS the oracle — one rung, nothing to demote to)
+                 ("padded-single", 200, 13, 90, {
+                     "layout": "padded", "use_pallas": True,
+                     "interpret": True})]
+    if quick:
+        legs[0] = ("csr-ragged-device", 120, 3, 60, {})
+    t0 = time.time()
+    for tag, steps, seed, crash_step, overrides in legs:
+        with tempfile.TemporaryDirectory() as tmp:
+            s = run_chaos_schedule(server_kwargs=overrides, steps=steps,
+                                   seed=seed, crash_step=crash_step,
+                                   workdir=tmp)
+        assert s["final_mode"] == "primary", s
+        assert s["answered"] == s["submitted"], s
+        assert s["injected"] > 0 and s["crashes"] == 1, s
+        print(f"OK chaos {tag}: {s['submitted']} answered, "
+              f"{s['injected']} faults injected "
+              f"({s['error_retries']}err/{s['timeout_retries']}to retries, "
+              f"{s['demotions']} demotions, {s['promotions']} promotions), "
+              f"{s['replayed_records']} WAL records replayed, "
+              f"final mode {s['final_mode']}", flush=True)
+    print(f"chaos dryrun PASS on {n_dev} virtual devices "
+          f"({time.time() - t0:.1f}s)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -198,6 +250,7 @@ def main():
                     default="both")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--serve", action="store_true")
+    ap.add_argument("--chaos", action="store_true")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
@@ -205,6 +258,10 @@ def main():
 
     if args.serve:
         run_serve(quick=args.quick)
+        return
+
+    if args.chaos:
+        run_chaos(quick=args.quick)
         return
 
     if args.all:

@@ -64,6 +64,11 @@ def test_serving_suite_conforms_and_carries_profile_rows(serving_rows):
     assert 0 < by_algo["serve_p50_us"] <= by_algo["serve_p99_us"]
     assert by_algo["dma_overlap_speedup"] > 0
     assert by_algo["dma_worklist_entries"] > 0
+    # the resilience rows exist and are sane; the overhead/append
+    # ceilings are enforced on the real bench config by run.py --check
+    assert {"degraded_mode_overhead", "wal_append_us"} <= algos
+    assert by_algo["degraded_mode_overhead"] > 0
+    assert by_algo["wal_append_us"] > 0
 
 
 def test_row_keys_are_the_csv_header():
@@ -175,3 +180,9 @@ def test_gate_tables_are_wired():
     assert 0 < CHECK_FLOORS["serving"]["dma_overlap_speedup"] <= 1.0
     assert {"serve_p50_us", "serve_p99_us",
             "dma_overlap_speedup"} <= REQUIRED_ALGOS["serving"]
+    # resilience (docs/resilience.md): the degraded-rung overhead and
+    # WAL-append ceilings are wired, and the rows are tracked
+    assert CHECK_CEILINGS["serving"]["degraded_mode_overhead"] > 1.0
+    assert CHECK_CEILINGS["serving"]["wal_append_us"] > 0
+    assert {"degraded_mode_overhead",
+            "wal_append_us"} <= REQUIRED_ALGOS["serving"]

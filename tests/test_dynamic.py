@@ -26,6 +26,7 @@ version mismatch, mid-write crash), `mutate_edges` unit tests, and the
 `built_indices` version-keyed-cache regression test.
 """
 import dataclasses
+import json
 import os
 import shutil
 import subprocess
@@ -44,6 +45,7 @@ from repro.core.baselines import constrained_distance_grid
 from repro.core.generators import erdos_renyi
 from repro.core.graph import Graph, mutate_edges
 from repro.core.query import DeviceQueryEngine
+from repro.core.resilience import UnknownRequestError
 from repro.core.serve import WCSDServer
 from repro.core.wc_index import DynamicWCIndex, build_wc_index
 from repro.core.wc_index_batched import (affected_vertices,
@@ -345,8 +347,9 @@ def test_server_staleness_flags():
     val2, stale2 = srv.result_with_staleness(r_memo)
     assert val2 == val and stale2 is False
     assert srv.stats.memo_hits >= 1
-    # unknown rid contract unchanged
-    assert srv.result_with_staleness(10_000) == (None, False)
+    # unknown rid is the typed read-once contract
+    with pytest.raises(UnknownRequestError):
+        srv.result_with_staleness(10_000)
 
 
 def test_server_requires_graph_for_updates():
@@ -484,7 +487,7 @@ def test_load_rejects_version_mismatch(tmp_path):
     hlen = int.from_bytes(data[len(WCX_MAGIC):len(WCX_MAGIC) + 8], "little")
     hdr = data[len(WCX_MAGIC) + 8:len(WCX_MAGIC) + 8 + hlen]
     # same-length patch keeps every offset in the file valid
-    patched = hdr.replace(b'"version": 1', b'"version":99')
+    patched = hdr.replace(b'"version": 2', b'"version":99')
     assert patched != hdr and len(patched) == len(hdr)
     vf = str(tmp_path / "ver.wcx")
     with open(vf, "wb") as f:
@@ -514,6 +517,71 @@ def test_mid_write_crash_never_tears_the_served_file(tmp_path):
             os.remove(tmp)
     _, header = load_packed_index(p)
     assert header["graph_version"] == 1  # still the pre-crash version
+
+
+def test_load_rejects_bit_flips_in_every_blob(tmp_path):
+    """Fault matrix, corruption leg (docs/resilience.md §integrity): ONE
+    flipped byte in ANY payload blob must surface as a typed
+    IndexIntegrityError at load — never a silent load that would serve a
+    wrong distance. Probes one byte per blob (first, middle, last)."""
+    from repro.checkpoint.ckpt import _WCX_ALIGN, _wcx_arrays
+    from repro.checkpoint.fault import flip_byte_on_disk
+    from repro.core.resilience import IndexIntegrityError
+
+    g, idx = _build_small(seed=5)
+    p = str(tmp_path / "idx.wcx")
+    save_packed_index(p, idx)
+    data = open(p, "rb").read()
+    hlen = int.from_bytes(data[len(WCX_MAGIC):len(WCX_MAGIC) + 8], "little")
+    header = json.loads(data[len(WCX_MAGIC) + 8:len(WCX_MAGIC) + 8 + hlen])
+    assert set(header["arrays"]) == set(_wcx_arrays(idx))
+    raw = len(WCX_MAGIC) + 8 + hlen
+    payload0 = -(-raw // _WCX_ALIGN) * _WCX_ALIGN  # save()'s aligned base
+    for name, spec in header["arrays"].items():
+        nbytes = int(spec["nbytes"])
+        if nbytes == 0:
+            continue
+        for rel in (0, nbytes // 2, nbytes - 1):
+            off = payload0 + spec["offset"] + rel
+            orig = flip_byte_on_disk(p, off, mask=0x40)
+            with pytest.raises(IndexIntegrityError, match=name):
+                load_packed_index(p, mmap=False)
+            # verify=False documents the override exists; then restore
+            load_packed_index(p, mmap=False, verify=False)
+            assert flip_byte_on_disk(p, off, mask=0x40) == orig ^ 0x40
+    loaded, _ = load_packed_index(p, mmap=False)   # healed file loads clean
+    np.testing.assert_array_equal(loaded.labels.hub_rank,
+                                  idx.labels.hub_rank)
+
+
+def test_verify_integrity_on_demand(tmp_path):
+    """`verify_integrity()` on a live index/arena: passes on clean state,
+    names the corrupted blob after an in-memory bit-flip, and passes
+    again once the flip is undone."""
+    from repro.checkpoint.fault import flip_array_cell
+    from repro.core.resilience import IndexIntegrityError
+
+    g, idx = _build_small(seed=7)
+    idx.verify_integrity()                  # stamps the baseline
+    idx.verify_integrity()                  # clean re-check passes
+    undo = flip_array_cell(idx.labels.dist, flat_index=1, mask=4)
+    with pytest.raises(IndexIntegrityError, match="dist"):
+        idx.verify_integrity()
+    undo()
+    idx.verify_integrity()
+    # the lane-tiled arena carries its own checksums
+    ar = idx.labels.arena(lane=16)
+    ar.verify_integrity()
+    undo = flip_array_cell(ar.hub, flat_index=0, mask=1)
+    with pytest.raises(IndexIntegrityError, match="hub"):
+        ar.verify_integrity()
+    undo()
+    ar.verify_integrity()
+    # a loaded index carries the on-disk checksums as its baseline
+    p = str(tmp_path / "idx.wcx")
+    save_packed_index(p, idx)
+    loaded, _ = load_packed_index(p, mmap=False)
+    loaded.verify_integrity()
 
 
 def test_warm_start_then_serve_dynamic(tmp_path):

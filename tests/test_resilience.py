@@ -1,0 +1,335 @@
+"""Fault-tolerant serving (docs/resilience.md): flush watchdog +
+retry/backoff, the degraded-mode fallback ladder, the crash-safe update
+WAL, and the seeded chaos schedule that ties them together.
+
+The acceptance block at the bottom runs the full >= 200-step chaos
+harness (`checkpoint/fault.run_chaos_schedule`): randomized submits /
+updates / injected engine raises / flush hangs / bit-flips / torn WAL
+tails plus one mid-update crash with a WAL-replay warm restart — every
+answer differentially checked against the BFS oracle, zero lost or
+double-delivered requests, server back in its top mode at the end.
+"""
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import UpdateWAL
+from repro.checkpoint.fault import (FaultSchedule, FaultyEngine,
+                                    InjectedEngineError, _HangingResult,
+                                    crashing_open, run_chaos_schedule,
+                                    tear_file_tail)
+from repro.core.generators import erdos_renyi, random_queries
+from repro.core.resilience import (FlushRetryExhausted, RetryPolicy,
+                                   UnknownRequestError, WALError,
+                                   WALReplayError, build_fallback_ladder)
+from repro.core.serve import WCSDServer
+from repro.core.wc_index import build_wc_index
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return erdos_renyi(40, 3.0, num_levels=4, seed=2)
+
+
+@pytest.fixture(scope="module")
+def index(graph):
+    return build_wc_index(graph, ordering="degree")
+
+
+def _fast_server(index, **kw):
+    base = dict(layout="csr", dispatch="ragged", max_batch=1024,
+                backoff_base_ms=0.01, retry_seed=0)
+    base.update(kw)
+    return WCSDServer(index, **base)
+
+
+# ---------------------------------------------------------------- taxonomy
+def test_unknown_rid_raises_typed_error(index):
+    srv = _fast_server(index)
+    with pytest.raises(UnknownRequestError, match="unknown or already"):
+        srv.result(7)
+    with pytest.raises(UnknownRequestError):
+        srv.profile_result(7)
+    assert issubclass(UnknownRequestError, KeyError)  # except KeyError works
+    err = UnknownRequestError(42)
+    assert err.rid == 42 and "42" in str(err)
+
+
+def test_latency_summary_empty_is_zeros(index):
+    srv = _fast_server(index)
+    assert srv.latency_summary() == {"count": 0, "n": 0,
+                                     "p50_us": 0.0, "p99_us": 0.0}
+
+
+# ------------------------------------------------------------------ ladder
+def test_fallback_ladder_full_chain():
+    cfg = dict(backend="sharded", use_pallas=True, interpret=True,
+               layout="csr", dispatch="ragged", compressed=True,
+               mesh="M", device_budget_bytes=1, multi_pod=False)
+    names = [n for n, _ in build_fallback_ladder(cfg)]
+    assert names == ["primary", "uncompressed", "replicated",
+                     "single_device", "bucket_pair", "oracle"]
+    # each rung drops exactly the declared capability
+    ladder = dict(build_fallback_ladder(cfg))
+    assert ladder["uncompressed"]["compressed"] is False
+    assert ladder["replicated"]["device_budget_bytes"] is None
+    assert ladder["single_device"]["backend"] == "device"
+    assert ladder["bucket_pair"]["dispatch"] == "bucket_pair"
+    assert ladder["oracle"]["layout"] == "padded"
+    assert ladder["oracle"]["use_pallas"] is False
+
+
+def test_fallback_ladder_skips_noop_rungs():
+    csr = dict(backend="device", use_pallas=False, interpret=None,
+               layout="csr", dispatch="ragged", compressed=False,
+               mesh=None, device_budget_bytes=None, multi_pod=False)
+    assert [n for n, _ in build_fallback_ladder(csr)] == \
+        ["primary", "bucket_pair", "oracle"]
+    # a padded no-pallas single-device primary IS the oracle: one rung
+    oracle = dict(csr, layout="padded")
+    assert [n for n, _ in build_fallback_ladder(oracle)] == ["primary"]
+
+
+def test_retry_policy_backoff_is_exponential_and_jittered():
+    p = RetryPolicy(backoff_base_ms=2.0, backoff_factor=2.0, jitter=0.0)
+    rng = np.random.default_rng(0)
+    assert p.backoff_s(1, rng) == pytest.approx(0.002)
+    assert p.backoff_s(3, rng) == pytest.approx(0.008)
+    pj = RetryPolicy(backoff_base_ms=2.0, jitter=0.5)
+    draws = {pj.backoff_s(1, rng) for _ in range(16)}
+    assert len(draws) > 1                       # jitter actually varies
+    assert all(0.001 <= d <= 0.003 for d in draws)
+
+
+# ---------------------------------------------------------------- watchdog
+def test_watchdog_times_out_hung_flush(graph, index):
+    """A handle that never reports ready is abandoned at the deadline and
+    the SAME batch re-dispatched — the caller just gets the answer."""
+    srv = _fast_server(index, flush_timeout_ms=30.0, max_retries=3)
+    real = srv.engine
+    calls = {"n": 0}
+
+    class Wedge:
+        def __getattr__(self, name):
+            return getattr(real, name)
+
+        def query_async(self, s, t, w):
+            calls["n"] += 1
+            h = real.query_async(s, t, w)
+            return _HangingResult(h) if calls["n"] == 1 else h
+
+    srv.engine = Wedge()
+    s, t, wl = random_queries(graph, 8, seed=4)
+    got = srv.query_many(s, t, wl)
+    assert np.array_equal(got, index.query_batch(s, t, wl))
+    assert srv.stats.timeout_retries == 1 and calls["n"] == 2
+    assert srv.mode == "primary"                # absorbed, not demoted
+
+
+def test_exhaustion_demotes_then_health_promotes(graph, index):
+    """Retry-budget exhaustion steps one rung down the ladder (the batch
+    is answered by the demoted engine, still correct); probe_interval
+    healthy flushes step back up."""
+    sched = FaultSchedule(fixed={0: "engine_raise", 1: "engine_raise"})
+    srv = _fast_server(index, max_retries=1, probe_interval=2,
+                       engine_wrapper=lambda e: FaultyEngine(e, sched))
+    s, t, wl = random_queries(graph, 6, seed=9)
+    got = srv.query_many(s, t, wl)              # raise, retry-raise, demote
+    assert np.array_equal(got, index.query_batch(s, t, wl))
+    assert srv.stats.error_retries == 1 and srv.stats.exhausted == 1
+    assert srv.stats.demotions == 1 and srv.mode == "bucket_pair"
+    # answers carry the mode that produced them
+    rid = srv.submit(int(s[0]) ^ 1, int(t[0]) ^ 1, int(wl[0]))
+    val, mode = srv.result_with_mode(rid)
+    assert mode == "bucket_pair"
+    # two clean drains later the server probes its way back up
+    for i in range(4):
+        srv.submit(2 * i, 2 * i + 1, 1)
+        srv.flush()
+    assert srv.stats.promotions >= 1 and srv.mode == "primary"
+
+
+def test_exhausted_bottom_rung_requeues_and_preserves_piggybacks(index):
+    """FlushRetryExhausted at the bottom of the ladder (an engine= server
+    has none): the batch goes back to the FRONT of the pending queue with
+    its piggyback rids intact — nothing lost, nothing double-delivered."""
+    from repro.core.query import DeviceQueryEngine
+
+    eng = DeviceQueryEngine(index, layout="csr")
+    calls = {"n": 0}
+
+    class Flaky:
+        layout = "csr"
+
+        def __getattr__(self, name):
+            return getattr(eng, name)
+
+        def query(self, s, t, w):
+            calls["n"] += 1
+            if calls["n"] <= 2:
+                raise InjectedEngineError("dead collective")
+            return eng.query(s, t, w)
+
+        query_async = None                      # force the blocking path
+
+    srv = WCSDServer(engine=Flaky(), max_batch=1024, max_retries=1,
+                     backoff_base_ms=0.01)
+    r1 = srv.submit(3, 9, 1)
+    r2 = srv.submit(9, 3, 1)                    # piggybacks on r1's slot
+    assert srv.stats.memo_hits == 1 and len(srv.pending) == 1
+    with pytest.raises(FlushRetryExhausted):
+        srv.flush()
+    assert len(srv.pending) == 1                # requeued, still one slot
+    assert srv._pending_rids == {r1, r2}        # piggyback survived
+    a, b = srv.result(r1), srv.result(r2)       # result() retries the flush
+    assert a is not None and a == b
+    for rid in (r1, r2):                        # read-once: no double copy
+        with pytest.raises(UnknownRequestError):
+            srv.result(rid)
+
+
+def test_poll_mid_retry_is_a_noop(graph, index):
+    """Regression (half-retried slot): a poll() issued re-entrantly while
+    the watchdog is re-dispatching a timed-out batch must NOT harvest the
+    abandoned handle or dispatch the queued next batch over the retry —
+    before the ``_retrying`` guard this meddling poll dispatched batch B
+    mid-retry (stats.batches moved) and could deliver from a dead handle."""
+    srv = _fast_server(index, flush_timeout_ms=30.0, max_retries=3)
+    real = srv.engine
+    calls = {"n": 0}
+    seen = {}
+
+    class Meddler:
+        def __getattr__(self, name):
+            return getattr(real, name)
+
+        def query_async(self, s, t, w):
+            calls["n"] += 1
+            if calls["n"] == 1:                 # first dispatch: wedge it
+                return _HangingResult(real.query_async(s, t, w))
+            if calls["n"] == 2:                 # the watchdog's redispatch
+                seen["batches_before"] = srv.stats.batches
+                seen["pending_before"] = len(srv.pending)
+                srv.poll()                      # re-entrant tick mid-retry
+                seen["batches_after"] = srv.stats.batches
+                seen["pending_after"] = len(srv.pending)
+            return real.query_async(s, t, w)
+
+    srv.engine = Meddler()
+    rids_a = [srv.submit(i, i + 11, 1) for i in range(3)]
+    srv.flush_async()                           # batch A in flight (hung)
+    rids_b = [srv.submit(i + 20, i + 5, 0) for i in range(2)]
+    srv.flush()                                 # timeout -> redispatch
+    # the meddling poll did nothing: no nested dispatch, queue untouched
+    assert seen["batches_after"] == seen["batches_before"]
+    assert seen["pending_after"] == seen["pending_before"] == 2
+    assert srv.stats.timeout_retries == 1
+    got = [srv.result(r) for r in rids_a + rids_b]
+    assert all(v is not None for v in got)      # delivered exactly once
+    for r in rids_a + rids_b:
+        with pytest.raises(UnknownRequestError):
+            srv.result(r)
+
+
+# --------------------------------------------------------------------- WAL
+def test_wal_round_trip_and_reopen(tmp_path):
+    p = str(tmp_path / "u.wal")
+    wal = UpdateWAL(p, base_version=3)
+    assert wal.base_version() == 3 and wal.records() == []
+    wal.append(inserts=[(0, 5, 1.0)], graph_version=4)
+    wal.append(deletes=[(2, 7)], graph_version=5)
+    recs = wal.records()
+    assert [r["graph_version"] for r in recs] == [4, 5]
+    assert recs[0]["inserts"] == [[0, 5, 1.0]] and recs[0]["deletes"] == []
+    assert recs[1]["deletes"] == [[2, 7]]
+    # reopening an existing log must NOT reset it
+    wal2 = UpdateWAL(p, base_version=0)
+    assert wal2.base_version() == 3
+    assert [r["graph_version"] for r in wal2.records()] == [4, 5]
+    # replay from a mid-log checkpoint skips the already-applied prefix
+    assert [r["graph_version"] for r in wal2.replay(4)] == [5]
+
+
+def test_wal_torn_tail_drops_only_the_uncommitted_record(tmp_path):
+    p = str(tmp_path / "u.wal")
+    wal = UpdateWAL(p, base_version=0)
+    for v in (1, 2, 3):
+        wal.append(inserts=[(v, v + 1, 0.0)], graph_version=v)
+    tear_file_tail(p, 5)                        # rip into record 3
+    assert [r["graph_version"] for r in wal.records()] == [1, 2]
+    # garbage appended after the committed prefix is equally invisible
+    with open(p, "ab") as f:
+        f.write(b"\x99\x00\x00\x00\xde\xad")
+    assert [r["graph_version"] for r in wal.records()] == [1, 2]
+    # and a fresh append after the tear re-commits cleanly on top
+    wal.truncate(2)
+    wal.append(inserts=[(9, 1, 0.0)], graph_version=3)
+    assert [r["graph_version"] for r in wal.records()] == [3]
+
+
+def test_wal_crash_mid_append_is_a_torn_tail(tmp_path):
+    p = str(tmp_path / "u.wal")
+    UpdateWAL(p, base_version=0).append(inserts=[(1, 2, 0.0)],
+                                        graph_version=1)
+    from repro.checkpoint.fault import MidWriteCrash
+    torn = UpdateWAL(p, _open=crashing_open(6))  # dies 6 bytes into rec 2
+    with pytest.raises(MidWriteCrash):
+        torn.append(inserts=[(3, 4, 0.0)], graph_version=2)
+    assert [r["graph_version"] for r in UpdateWAL(p).records()] == [1]
+
+
+def test_wal_sequence_gap_is_a_typed_error(tmp_path):
+    p = str(tmp_path / "u.wal")
+    wal = UpdateWAL(p, base_version=0)
+    wal.append(graph_version=1)
+    wal.append(graph_version=3)                 # hole: v2 never logged
+    with pytest.raises(WALError, match="sequence gap"):
+        wal.records()
+
+
+def test_wal_replay_refuses_compacted_past_checkpoint(tmp_path):
+    p = str(tmp_path / "u.wal")
+    wal = UpdateWAL(p, base_version=0)
+    for v in (1, 2, 3):
+        wal.append(graph_version=v)
+    wal.truncate(3)                             # compaction folded 1..3 in
+    assert wal.base_version() == 3 and wal.records() == []
+    with pytest.raises(WALReplayError, match="compacted past"):
+        wal.replay(1)                           # stale checkpoint at v1
+    assert wal.replay(3) == []                  # current checkpoint is fine
+    assert issubclass(WALReplayError, WALError)
+
+
+def test_wal_rejects_foreign_file(tmp_path):
+    p = str(tmp_path / "not.wal")
+    with open(p, "wb") as f:
+        f.write(b"something else entirely")
+    with pytest.raises(WALError, match="not a WCSD WAL"):
+        UpdateWAL(p).records()
+
+
+# ------------------------------------------------------- chaos acceptance
+def test_chaos_schedule_with_crash_recovers(tmp_path):
+    """The ISSUE's acceptance run: >= 200 seeded steps mixing submits,
+    profile submits, updates, injected raises/hangs/bit-flips/torn WAL
+    tails, and one mid-update crash answered by a checkpoint + WAL-replay
+    warm restart. Every answer is differentially checked against the BFS
+    oracle inside the harness; here the run-level invariants."""
+    s = run_chaos_schedule(steps=200, seed=3, crash_step=100,
+                           workdir=str(tmp_path))
+    assert s["submitted"] == s["answered"]      # nothing lost or doubled
+    assert s["final_mode"] == "primary"         # back at the top rung
+    assert s["crashes"] == 1 and s["replayed_records"] >= 1
+    assert s["injected"] > 0                    # faults actually fired
+    assert s["error_retries"] >= 1 and s["timeout_retries"] >= 1
+    assert s["exhausted"] >= 1 and s["demotions"] >= 1
+    assert s["integrity_probes"] >= 1 and s["wal_probes"] >= 1
+    assert s["updates"] == s["wal_appends"] >= 1
+
+
+def test_chaos_schedule_is_seed_deterministic(tmp_path):
+    """Same seed -> same schedule: the summary (counters included) must
+    replay identically, so a chaos failure is reproducible by seed."""
+    a = run_chaos_schedule(steps=60, seed=11, workdir=str(tmp_path / "a"))
+    b = run_chaos_schedule(steps=60, seed=11, workdir=str(tmp_path / "b"))
+    assert a == b
+    assert a["submitted"] == a["answered"] and a["final_mode"] == "primary"

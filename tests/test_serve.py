@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core.generators import scale_free
+from repro.core.resilience import FlushRetryExhausted, UnknownRequestError
 from repro.core.serve import WCSDServer
 from repro.core.wc_index import build_wc_index
 
@@ -109,17 +110,19 @@ def test_result_forces_flush(small_index, serve_layout):
     assert got is not None
     assert srv.stats.batches == 1
     assert srv.pending == []
-    assert srv.result(12345) is None   # unknown rid: no flush, None
+    with pytest.raises(UnknownRequestError):  # unknown rid: typed error
+        srv.result(12345)
 
 
 def test_result_unknown_rid_never_flushes_pending(small_index, serve_layout):
-    """Regression for the O(pending) scan fix: an unknown rid must return
-    None WITHOUT flushing the queued requests, however many are pending."""
+    """Regression for the O(pending) scan fix: an unknown rid must raise
+    WITHOUT flushing the queued requests, however many are pending."""
     srv = WCSDServer(small_index, max_batch=1024, layout=serve_layout)
     for i in range(37):
         srv.submit(i, i + 40, 0)
     assert len(srv.pending) == 37
-    assert srv.result(999_999) is None
+    with pytest.raises(UnknownRequestError, match="999999"):
+        srv.result(999_999)
     assert len(srv.pending) == 37      # untouched
     assert srv.stats.batches == 0
 
@@ -227,7 +230,8 @@ def test_result_is_read_once(small_index, serve_layout):
     rid = srv.submit(3, 9, 1)
     first = srv.result(rid)
     assert first is not None
-    assert srv.result(rid) is None         # delivered -> evicted
+    with pytest.raises(UnknownRequestError):   # delivered -> evicted
+        srv.result(rid)
     # the memo still answers a re-submission without device work
     rid2 = srv.submit(3, 9, 1)
     assert srv.stats.memo_hits == 1 and srv.result(rid2) == first
@@ -402,13 +406,12 @@ def test_pending_dedup_profiles(small_index, serve_layout):
 
 
 # ------------------------------------------------------ dispatch failure
-def test_dispatch_failure_keeps_requests(small_index, serve_layout):
-    """Regression (flush-path request loss): flush_async used to clear the
-    pending queue BEFORE dispatching, so an engine exception silently
-    dropped every queued request — result(rid) returned None forever. Now
-    the queue is cleared only after dispatch returns: the exception
-    propagates, the requests stay pending, and a retry answers them."""
-    srv = WCSDServer(small_index, max_batch=1024, layout=serve_layout)
+def test_transient_dispatch_failure_is_absorbed(small_index, serve_layout):
+    """The flush watchdog (docs/resilience.md): a single engine raise at
+    dispatch time is retried with backoff inside flush() — the caller
+    never sees it, the requests are answered, and the retry is counted."""
+    srv = WCSDServer(small_index, max_batch=1024, layout=serve_layout,
+                     backoff_base_ms=0.01)
     inner = srv.engine.query_async
     calls = {"n": 0}
 
@@ -420,8 +423,45 @@ def test_dispatch_failure_keeps_requests(small_index, serve_layout):
 
     srv.engine.query_async = flaky
     rids = [srv.submit(i, i + 40, 0) for i in range(5)]
-    with pytest.raises(RuntimeError):
+    srv.flush()                             # the raise is absorbed
+    assert srv.stats.error_retries == 1
+    assert srv.stats.demotions == 0 and srv.mode == "primary"
+    assert srv.pending == []
+    got = np.array([srv.result(r) for r in rids])
+    s = np.arange(5, dtype=np.int32)
+    exp = small_index.query_batch(s, s + 40, np.zeros(5, np.int32))
+    assert np.array_equal(got, exp)
+    assert calls["n"] == 2
+
+
+def test_dispatch_failure_keeps_requests(small_index, serve_layout):
+    """Regression (flush-path request loss): a terminally-failing dispatch
+    — the retry budget exhausted on an engine= server, which has no
+    fallback ladder to demote down — must leave every queued request
+    pending (nothing dropped), and a later result() must still answer
+    them once the engine recovers."""
+    from repro.core.query import DeviceQueryEngine
+
+    eng = DeviceQueryEngine(small_index, layout=serve_layout)
+    calls = {"n": 0}
+
+    class FlakyEngine:
+        layout = serve_layout
+        query_profile = eng.query_profile
+
+        def query(self, s, t, w):
+            calls["n"] += 1
+            if calls["n"] <= 2:             # budget is 1 retry -> exhausted
+                raise RuntimeError("dispatch failure")
+            return eng.query(s, t, w)
+
+    srv = WCSDServer(engine=FlakyEngine(), max_batch=1024,
+                     max_retries=1, backoff_base_ms=0.01)
+    assert srv.mode == "injected"           # no ladder to absorb the loss
+    rids = [srv.submit(i, i + 40, 0) for i in range(5)]
+    with pytest.raises(FlushRetryExhausted):
         srv.flush()
+    assert srv.stats.error_retries == 1 and srv.stats.exhausted == 1
     assert len(srv.pending) == 5            # nothing dropped
     assert srv._pending_rids == set(rids)
     assert srv.stats.batches == 0           # the failed dispatch never landed
@@ -429,14 +469,15 @@ def test_dispatch_failure_keeps_requests(small_index, serve_layout):
     s = np.arange(5, dtype=np.int32)
     exp = small_index.query_batch(s, s + 40, np.zeros(5, np.int32))
     assert np.array_equal(got, exp)
-    assert calls["n"] == 2
+    assert calls["n"] == 3
 
 
 def test_profile_dispatch_failure_keeps_profiles(small_index, serve_layout):
     """Partial failure: the scalar half of a mixed flush dispatches, the
-    profile dispatch raises — the profile queue must survive intact and a
-    retry must answer both halves."""
-    srv = WCSDServer(small_index, max_batch=1024, layout=serve_layout)
+    profile dispatch raises until the budget is exhausted — the profile
+    queue must survive intact and a retry must answer both halves."""
+    srv = WCSDServer(small_index, max_batch=1024, layout=serve_layout,
+                     backoff_base_ms=0.01)
     inner = srv.engine.query_profile_async
     calls = {"n": 0}
 
@@ -449,11 +490,10 @@ def test_profile_dispatch_failure_keeps_profiles(small_index, serve_layout):
     srv.engine.query_profile_async = flaky
     rs = srv.submit(3, 9, 1)
     rp = srv.submit_profile(4, 11)
-    with pytest.raises(RuntimeError):
-        srv.flush()
-    assert srv._inflight is not None        # scalar half made it out
-    assert len(srv.pending_profiles) == 1   # profile half still queued
-    prof = srv.profile_result(rp)           # retry via result -> flush
+    srv.flush()                             # watchdog absorbs the raise
+    assert srv.stats.error_retries == 1
+    assert not srv.pending and not srv.pending_profiles
+    prof = srv.profile_result(rp)
     assert prof is not None and len(prof) == small_index.num_levels + 1
     assert srv.result(rs) is not None
     assert calls["n"] == 2
